@@ -1,0 +1,41 @@
+"""§3.1 validation: the analytical model vs XLA's compiled cost analysis.
+
+The paper validates its Eq. 5-10 model against hardware; we validate ours
+against the compiler: flops from `cost_analysis()` of the jitted fused
+hdiff must match Eq. 5-7's op counts (as flops), and the compiled bytes
+must land between the fused lower bound and the algorithmic upper bound.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import COLS, DEPTH, ROWS, emit
+from repro.core import (
+    hdiff,
+    hdiff_algorithmic_bytes,
+    hdiff_flops,
+    hdiff_min_bytes,
+)
+
+
+def run(fast: bool = False) -> None:
+    depth = 8 if fast else DEPTH
+    x = jax.ShapeDtypeStruct((depth, ROWS, COLS), jnp.float32)
+    compiled = jax.jit(lambda a: hdiff(a, 0.025)).lower(x).compile()
+    cost = compiled.cost_analysis() or {}
+    hlo_flops = float(cost.get("flops", 0))
+    hlo_bytes = float(cost.get("bytes accessed", 0))
+
+    model_flops = hdiff_flops(depth, ROWS, COLS)
+    lo = hdiff_min_bytes(depth, ROWS, COLS)
+    hi = hdiff_algorithmic_bytes(depth, ROWS, COLS)
+
+    emit("analytic/flops_model", model_flops, "Eq.5-7 op count as flops")
+    emit("analytic/flops_hlo", hlo_flops,
+         f"ratio hlo/model={hlo_flops/model_flops:.2f}")
+    emit("analytic/bytes_hlo", hlo_bytes,
+         f"fused_bound={lo:.3e} algorithmic_bound={hi:.3e} "
+         f"within_bounds={lo * 0.5 <= hlo_bytes <= hi * 1.5}")

@@ -1,0 +1,44 @@
+"""Shared benchmark utilities: timing, CSV rows, the paper's grid."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+# The paper's evaluation domain (§4.1).
+ROWS, COLS, DEPTH = 256, 256, 64
+
+_rows: list[tuple[str, float, str]] = []
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (blocks on device)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    _rows.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def all_rows():
+    return list(_rows)
+
+
+def hdiff_gops(us_per_call: float, rows=ROWS, cols=COLS, depth=DEPTH) -> float:
+    """GOp/s using the paper's op accounting (Table 2 'Perf. (GOp/s)')."""
+    from repro.core import HDIFF_SPEC
+
+    interior = (rows - 4) * (cols - 4) * depth
+    ops = interior * HDIFF_SPEC.flops
+    return ops / (us_per_call * 1e-6) / 1e9

@@ -1,0 +1,49 @@
+"""Fig. 11 analogue: elementary stencil runtimes (§3.5 suite).
+
+Paper: jacobi-1d / jacobi-2d-3pt / laplacian / jacobi-2d-9pt / seidel-2d on
+CPU vs GPU vs 32 AIEs. Here: XLA-fused jnp implementations (the CPU row)
+plus the Pallas kernels in interpret mode (correctness datapoint), on the
+paper's 256x256x64 domain.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import COLS, DEPTH, ROWS, emit, time_fn
+from repro.core import ELEMENTARY_FNS, ELEMENTARY_SPECS
+from repro.kernels.stencil2d import jacobi1d as jacobi1d_kernel
+from repro.kernels.stencil2d import stencil2d
+
+NAMES_2D = ["jacobi2d_3pt", "laplacian", "jacobi2d_5pt", "jacobi2d_9pt", "seidel2d"]
+
+
+def run(fast: bool = False) -> None:
+    depth = 8 if fast else DEPTH
+    rng = np.random.default_rng(0)
+    x3 = jnp.asarray(rng.standard_normal((depth, ROWS, COLS)).astype(np.float32))
+    x1 = jnp.asarray(rng.standard_normal((depth * ROWS, COLS)).astype(np.float32))
+
+    us = time_fn(jax.jit(ELEMENTARY_FNS["jacobi1d"]), x1)
+    pts = x1.size
+    emit("fig11/jacobi1d_xla", us,
+         f"gops={pts * ELEMENTARY_SPECS['jacobi1d'].flops / us / 1e3:.2f}")
+
+    for name in NAMES_2D:
+        fn = jax.jit(ELEMENTARY_FNS[name if name != "seidel2d" else "seidel2d"])
+        us = time_fn(fn, x3)
+        spec = ELEMENTARY_SPECS[name]
+        interior = (ROWS - 2) * (COLS - 2) * depth
+        emit(f"fig11/{name}_xla", us,
+             f"gops={interior * spec.flops / us / 1e3:.2f}")
+
+    # Pallas kernels (interpret mode, correctness-path timing).
+    small = x3[:2]
+    for name in ["jacobi2d_3pt", "laplacian", "jacobi2d_9pt"]:
+        us = time_fn(lambda a, n=name: stencil2d(a, n, interpret=True), small,
+                     warmup=1, iters=3)
+        emit(f"fig11/{name}_pallas_interpret", us, "interpret mode (depth=2)")
+    us = time_fn(lambda a: jacobi1d_kernel(a, interpret=True), x1[:8], warmup=1, iters=3)
+    emit("fig11/jacobi1d_pallas_interpret", us, "interpret mode (8 rows)")

@@ -1,0 +1,47 @@
+"""Fig. 1 analogue: roofline placement of hdiff on current platforms + TPU.
+
+The paper's Fig. 1 shows hdiff far below the roofline on POWER9 / V100 /
+AD9H7 because of low arithmetic intensity and irregular access. We compute
+hdiff's AI under (a) the paper's algorithmic traffic model (every stencil
+read goes to memory — the load-store-architecture position) and (b) the
+fused/compulsory traffic model (the SPARTA/B-block position), and place
+both on the TPU v5e roofline.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import COLS, DEPTH, ROWS, emit
+from repro.core import (
+    TPUV5E,
+    aie_hdiff_cycles,
+    arithmetic_intensity,
+    hdiff_algorithmic_bytes,
+    hdiff_flops,
+    hdiff_min_bytes,
+)
+
+
+def run(fast: bool = False) -> None:
+    flops = hdiff_flops(DEPTH, ROWS, COLS)
+    algo = hdiff_algorithmic_bytes(DEPTH, ROWS, COLS)
+    fused = hdiff_min_bytes(DEPTH, ROWS, COLS)
+
+    ai_algo = arithmetic_intensity(flops, algo)
+    ai_fused = arithmetic_intensity(flops, fused)
+    ridge_vpu = TPUV5E.peak_flops_vpu_f32 / TPUV5E.hbm_bw
+
+    emit("fig1/ai_algorithmic", ai_algo,
+         f"every-read-to-memory model; attainable={min(TPUV5E.peak_flops_vpu_f32, TPUV5E.hbm_bw*ai_algo)/1e9:.0f}GFLOP/s")
+    emit("fig1/ai_fused", ai_fused,
+         f"compulsory-traffic model; attainable={min(TPUV5E.peak_flops_vpu_f32, TPUV5E.hbm_bw*ai_fused)/1e9:.0f}GFLOP/s")
+    emit("fig1/ridge_point_vpu", ridge_vpu,
+         f"v5e VPU ridge at {ridge_vpu:.2f} flops/B; hdiff sits "
+         f"{'left (memory-bound)' if ai_fused < ridge_vpu else 'right (compute-bound)'}")
+
+    # Faithful §3.1 reproduction: the paper's AIE cycle counts (Eq. 5-10).
+    cyc = aie_hdiff_cycles(ROWS, COLS, DEPTH)
+    emit("fig1/aie_compute_cycles_eq7", cyc["hdiff_compute_cycles"],
+         "paper Eq.5-7 (verbatim model)")
+    emit("fig1/aie_memory_cycles_eq10", cyc["hdiff_memory_cycles"],
+         f"paper Eq.8-10; compute/memory={cyc['hdiff_compute_cycles']/cyc['hdiff_memory_cycles']:.2f} "
+         "(>1 for flux per paper's §3.1 discussion)")

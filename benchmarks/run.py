@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--fast`` shrinks the grid
+depth for quick CI-style runs; full runs use the paper's 256x256x64 domain.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="reduced depth for quick runs")
+    ap.add_argument("--only", default="", help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        analytical_vs_compiled,
+        fig1_roofline,
+        fig9_designs,
+        fig10_scaling,
+        fig11_elementary,
+        table2_comparison,
+        wkv6_chunking,
+    )
+
+    benches = {
+        "fig1": fig1_roofline.run,
+        "fig9": fig9_designs.run,
+        "fig10": fig10_scaling.run,
+        "fig11": fig11_elementary.run,
+        "table2": table2_comparison.run,
+        "analytic": analytical_vs_compiled.run,
+        "wkv6": wkv6_chunking.run,
+    }
+    only = {s for s in args.only.split(",") if s}
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            fn(fast=args.fast)
+        except Exception as e:
+            failed.append(name)
+            print(f"{name}/ERROR,0,{e!r}", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Beyond-paper: RWKV-6 WKV recurrence — sequential scan vs chunked form.
+
+The chunked formulation (kernels/wkv6) is the paper's accumulator-residency
+insight applied to a matrix-state recurrence: S/chunk sequential steps with
+dense MXU matmuls inside, instead of S elementwise steps. The dry-run's
+FLOP counters cannot see sequentiality, so this benchmark measures the real
+effect as wall time (CPU here; the structure, S -> S/64 dependent steps, is
+hardware-independent).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.wkv6 import wkv6, wkv6_chunked_ref, wkv6_ref
+
+
+def run(fast: bool = False) -> None:
+    b, t, h, n = (1, 512, 4, 64) if fast else (2, 2048, 8, 64)
+    rng = np.random.default_rng(0)
+    r = jnp.asarray(rng.standard_normal((b, t, h, n)).astype(np.float32)) * 0.5
+    k = jnp.asarray(rng.standard_normal((b, t, h, n)).astype(np.float32)) * 0.5
+    v = jnp.asarray(rng.standard_normal((b, t, h, n)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.9, 0.999, (b, t, h, n)).astype(np.float32))
+    u = jnp.asarray(rng.standard_normal((h, n)).astype(np.float32)) * 0.3
+
+    seq = jax.jit(lambda *a: wkv6_ref(*a)[0])
+    us_seq = time_fn(seq, r, k, v, w, u)
+    emit("wkv6/sequential_scan", us_seq, f"T={t} sequential steps")
+
+    for chunk in (16, 64, 128):
+        ch = jax.jit(lambda *a, c=chunk: wkv6_chunked_ref(*a, chunk=c)[0])
+        us_ch = time_fn(ch, r, k, v, w, u)
+        emit(
+            f"wkv6/chunked_{chunk}",
+            us_ch,
+            f"{t//chunk} steps; speedup {us_seq/us_ch:.1f}x vs sequential",
+        )
+
+    # numerical agreement check rides along
+    y_seq, _ = wkv6_ref(r, k, v, w, u)
+    y_ch, _ = wkv6_chunked_ref(r, k, v, w, u, chunk=64)
+    err = float(jnp.abs(y_seq - y_ch).max())
+    emit("wkv6/chunked_max_abs_err", err, "vs sequential oracle")

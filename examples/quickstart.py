@@ -1,0 +1,55 @@
+"""Quickstart: run the paper's hdiff kernel on the COSMO 256x256x64 domain.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Shows the three execution policies (staged / fused-XLA / fused-Pallas) and
+verifies they agree, then runs a 10-step simulation.
+"""
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.hdiff import CONFIG
+from repro.core import hdiff, hdiff_staged, make_initial_field, run_simulation
+from repro.kernels.hdiff import hdiff_fused
+
+
+def main() -> None:
+    g = CONFIG
+    print(f"hdiff on {g.depth}x{g.rows}x{g.cols} (COSMO domain), coeff={g.coeff}")
+    psi = make_initial_field(g.depth, g.rows, g.cols, kind="gaussian")
+
+    fused = jax.jit(lambda x: hdiff(x, g.coeff))
+    t0 = time.perf_counter()
+    out_fused = jax.block_until_ready(fused(psi))
+    print(f"fused-xla     first call {time.perf_counter()-t0:.3f}s (includes compile)")
+
+    t0 = time.perf_counter()
+    out_staged = jax.block_until_ready(hdiff_staged(psi, g.coeff))
+    print(f"staged        {time.perf_counter()-t0:.3f}s")
+
+    t0 = time.perf_counter()
+    out_pallas = jax.block_until_ready(hdiff_fused(psi[:4], g.coeff))
+    print(f"fused-pallas  {time.perf_counter()-t0:.3f}s (interpret mode, 4 planes)")
+
+    np.testing.assert_allclose(np.asarray(out_fused), np.asarray(out_staged), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(out_fused[:4]), np.asarray(out_pallas), rtol=1e-5, atol=1e-5
+    )
+    print("all three policies agree ✓")
+
+    final, _ = run_simulation(psi, g.coeff, step_fn=hdiff, n_steps=100)
+    peak0 = float(jnp.abs(psi[:, 2:-2, 2:-2]).max())
+    peak1 = float(jnp.abs(final[:, 2:-2, 2:-2]).max())
+    rough0 = float(jnp.abs(jnp.diff(psi, axis=-1)).mean())
+    rough1 = float(jnp.abs(jnp.diff(final, axis=-1)).mean())
+    print(f"100-step simulation: interior peak {peak0:.4f} -> {peak1:.4f}, "
+          f"roughness {rough0:.5f} -> {rough1:.5f} (diffusion smooths ✓)")
+    assert rough1 < rough0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Batched serving example: continuous batching over decode lanes.
+
+  PYTHONPATH=src python examples/serve_lm.py --requests 8 --lanes 4
+
+Builds a small model, submits a queue of ragged-length prompts, and serves
+them with the continuous-batching engine (prefill on lane admission, lock-
+step decode, immediate refill). Prints per-request outputs + throughput.
+"""
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import get_smoke_config
+from repro.models import build_lm
+from repro.serve import BatchedServer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    cfg = dataclasses.replace(cfg, n_layers=4, d_model=128, d_ff=256, vocab_size=512)
+    params, _ = build_lm(cfg, jax.random.PRNGKey(0))
+    print(f"serving {cfg.name}-smoke ({cfg.param_count()/1e6:.2f}M params), "
+          f"{args.lanes} lanes")
+
+    srv = BatchedServer(cfg, params, lanes=args.lanes, max_len=128)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 24))
+        srv.submit(rng.integers(0, cfg.vocab_size, size=(plen,)), max_new_tokens=args.max_new)
+    done = srv.run_until_idle()
+    dt = time.perf_counter() - t0
+
+    for r in done:
+        print(f"req {r.rid}: prompt_len={len(r.prompt)} -> {r.out_tokens[:8]}...")
+    toks = srv.stats["tokens_out"]
+    print(
+        f"{len(done)} requests, {toks} tokens in {dt:.2f}s "
+        f"({toks/dt:.1f} tok/s; {srv.stats['prefills']} prefills, "
+        f"{srv.stats['decode_steps']} decode steps)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end LM training: a ~100M-param model for a few hundred steps on
+deterministic synthetic data, with checkpoint/restart.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+  PYTHONPATH=src python examples/train_lm.py --steps 300 --arch qwen1.5-0.5b --scale full
+
+Default is a ~100M-param qwen1.5-family config (the brief's "train ~100M
+model for a few hundred steps" driver). Loss must drop; checkpoints land in
+--ckpt-dir and a rerun resumes from the last one.
+"""
+
+import argparse
+import dataclasses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--scale", choices=["tiny", "100m", "full"], default="100m")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.data import DataConfig, SyntheticLM
+    from repro.launch.mesh import make_host_mesh
+    from repro.train import TrainConfig, train
+
+    cfg = get_config(args.arch)
+    if args.scale == "tiny":
+        # ~5M params: CPU-friendly evidence run (1-core container); the
+        # 100m scale is the real driver for actual hardware.
+        cfg = dataclasses.replace(
+            cfg, n_layers=4, d_model=256, n_heads=4, n_kv_heads=4, head_dim=0,
+            d_ff=1024, vocab_size=4096, remat=False, learning_rate=1e-3,
+        )
+    elif args.scale == "100m":
+        # ~100M params: 12 layers x 512 wide on the arch's own block family.
+        cfg = dataclasses.replace(
+            cfg,
+            n_layers=12,
+            d_model=512,
+            n_heads=8,
+            n_kv_heads=min(8, max(1, cfg.n_kv_heads)),
+            head_dim=0,
+            d_ff=2048,
+            vocab_size=32768,
+            remat=False,
+            learning_rate=1e-3,
+        )
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M")
+
+    mesh = make_host_mesh()
+    ds = SyntheticLM(
+        DataConfig(seq_len=args.seq, global_batch=args.batch, vocab_size=cfg.vocab_size)
+    )
+    tc = TrainConfig(
+        steps=args.steps,
+        microbatches=args.microbatches,
+        log_every=10,
+        ckpt_every=100,
+        ckpt_dir=args.ckpt_dir,
+    )
+    _, _, hist = train(cfg, tc, mesh, ds)
+    if hist:
+        print(
+            f"loss: first10={sum(h['loss'] for h in hist[:10])/max(len(hist[:10]),1):.4f} "
+            f"last10={sum(h['loss'] for h in hist[-10:])/max(len(hist[-10:]),1):.4f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

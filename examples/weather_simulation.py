@@ -1,0 +1,88 @@
+"""End-to-end weather-stencil driver: distributed iterative hdiff.
+
+  PYTHONPATH=src python examples/weather_simulation.py [--steps 100] [--devices 8]
+
+Runs the COSMO hdiff time-stepping loop domain-decomposed over a device
+mesh (depth-parallel planes + optional row halo exchange — the B-block
+scale-out of §3.4), with the partition chosen by the §3.1 analytical
+planner, and verifies the distributed result against single-device.
+
+With --devices N (default 8) the script re-execs itself with N fake host
+devices, which is how a real multi-host launch degrades gracefully to one
+host for local testing.
+"""
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--depth", type=int, default=64)
+    ap.add_argument("--size", type=int, default=256)
+    ap.add_argument("--_worker", action="store_true")
+    args = ap.parse_args()
+
+    if not args._worker and args.devices > 1:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={args.devices}"
+        os.execve(
+            sys.executable,
+            [sys.executable, __file__, "--_worker", *sys.argv[1:]],
+            env,
+        )
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import hdiff, make_initial_field, plan_partition, run_simulation
+    from repro.dist import make_sharded_hdiff
+    from repro.launch.mesh import make_mesh
+
+    n_dev = len(jax.devices())
+    print(f"devices: {n_dev}")
+
+    plan = plan_partition(args.depth, args.size, args.size, n_dev)
+    print(
+        f"partition plan: {plan.kind} (depth x{plan.depth_shards}, rows x{plan.row_shards}) "
+        f"predicted step terms: compute={plan.compute_s:.2e}s hbm={plan.hbm_s:.2e}s "
+        f"ici={plan.ici_s:.2e}s"
+    )
+
+    mesh = make_mesh((plan.depth_shards, plan.row_shards), ("data", "model"))
+    step = make_sharded_hdiff(
+        mesh,
+        depth_axis="data",
+        row_axis="model" if plan.row_shards > 1 else None,
+        coeff=0.025,
+    )
+
+    psi0 = make_initial_field(args.depth, args.size, args.size, kind="gaussian")
+
+    # Distributed time-stepping (grid stays device-resident between steps).
+    @jax.jit
+    def run(psi, n):
+        def body(p, _):
+            return step(p), None
+        out, _ = jax.lax.scan(body, psi, None, length=args.steps)
+        return out
+
+    t0 = time.perf_counter()
+    final = jax.block_until_ready(run(psi0, args.steps))
+    dt = time.perf_counter() - t0
+    print(f"{args.steps} steps in {dt:.2f}s ({dt/args.steps*1e3:.1f} ms/step on CPU)")
+
+    # Verify against the single-device reference for a few steps.
+    ref, _ = run_simulation(psi0, 0.025, step_fn=hdiff, n_steps=args.steps)
+    np.testing.assert_allclose(np.asarray(final), np.asarray(ref), rtol=1e-4, atol=1e-5)
+    print("distributed result matches single-device reference ✓")
+    print(f"field range: [{float(final.min()):.4f}, {float(final.max()):.4f}]")
+
+
+if __name__ == "__main__":
+    main()

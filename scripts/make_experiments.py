@@ -1,0 +1,178 @@
+"""Generates the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+artifacts/dryrun/*.json. Rerunnable as cells complete.
+
+  PYTHONPATH=src python scripts/make_experiments.py > artifacts/roofline_tables.md
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ART = Path("artifacts/dryrun")
+
+
+def fmt_s(x: float | None) -> str:
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    return f"{x:.2e}"
+
+
+def fmt_gib(x) -> str:
+    return "-" if x is None else f"{x/2**30:.2f}"
+
+
+def load(mesh: str) -> list[dict]:
+    rows = []
+    for p in sorted(ART.glob(f"*__{mesh}.json")):
+        try:
+            rows.append(json.loads(p.read_text()))
+        except Exception:
+            pass
+    return rows
+
+
+BASELINE = Path("artifacts/dryrun_baseline")
+
+
+def comparison_table() -> None:
+    """Baseline (paper-faithful lowering) vs optimized, single-pod."""
+    print("\n## Baseline vs optimized (single-pod; dominant-term seconds/chip/step)\n")
+    print("| cell | base dom term | base s | opt dom term | opt s | speedup | temp GiB base->opt |")
+    print("|---|---|---|---|---|---|---|")
+    for p in sorted(BASELINE.glob("*__single.json")):
+        try:
+            b = json.loads(p.read_text())
+            o = json.loads((ART / p.name).read_text())
+        except Exception:
+            continue
+        if b.get("status") != "ok" or o.get("status") != "ok":
+            continue
+        brf, orf = b["roofline"], o["roofline"]
+        bdom = max(("compute", "memory", "collective"), key=lambda k: brf[f"{k}_s"])
+        odom = max(("compute", "memory", "collective"), key=lambda k: orf[f"{k}_s"])
+        bval, oval = brf[f"{bdom}_s"], orf[f"{odom}_s"]
+        btmp = b["memory_analysis"]["temp_bytes"] / 2**30
+        otmp = o["memory_analysis"]["temp_bytes"] / 2**30
+        cell = p.name.replace("__single.json", "")
+        print(
+            f"| {cell} | {bdom} | {fmt_s(bval)} | {odom} | {fmt_s(oval)} | "
+            f"{bval/oval if oval else 0:.1f}x | {btmp:.1f} -> {otmp:.1f} |"
+        )
+    print()
+
+
+def main() -> None:
+    print("## §Dry-run (single-pod 16x16 = 256 chips; multi-pod 2x16x16 = 512 chips)\n")
+    for mesh in ("single", "multi"):
+        rows = load(mesh)
+        ok = [r for r in rows if r.get("status") == "ok"]
+        bad = [r for r in rows if r.get("status") != "ok"]
+        print(f"### mesh={mesh}: {len(ok)} ok, {len(bad)} failed\n")
+        print("| cell | compile s | args GiB/dev | temp GiB/dev | collectives (counts) |")
+        print("|---|---|---|---|---|")
+        for r in ok:
+            m = r["memory_analysis"]
+            cc = r["collectives"].get("counts_variant_b", {})
+            cstr = " ".join(f"{k}:{v}" for k, v in sorted(cc.items()))
+            print(
+                f"| {r['cell']} | {r['timings_s']['compile']} | "
+                f"{fmt_gib(m['argument_bytes'])} | {fmt_gib(m['temp_bytes'])} | {cstr} |"
+            )
+        for r in bad:
+            print(f"| {r['cell']} | FAILED: {r.get('error','?')[:60]} | | | |")
+        print()
+
+    print("\n## §Roofline (single-pod, per-chip terms; v5e: 197 TF bf16, 819 GB/s HBM, 50 GB/s ICI)\n")
+    print("Projected MFU = ideal model-FLOPs time / bottleneck term: "
+          "`hlo` uses the compiled-artifact terms (memory term is a CPU-fusion "
+          "UPPER bound -> conservative), `ana` replaces compute/memory with the "
+          "analytic model (TPU-realistic fused traffic).\n")
+    rows = load("single")
+    ok = [r for r in rows if r.get("status") == "ok"]
+    print("| cell | compute s | memory s | collective s | dominant | useful | MFU(hlo) | MFU(ana) | MFU(tpu) | bottleneck note |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    PEAK, HBM = 197e12, 819e9
+    mfu_sum = {"hlo": [], "ana": [], "tpu": []}
+    for r in ok:
+        rf = r["roofline"]
+        ana = r.get("analytic", {})
+        n_dev = 256
+        ideal_s = rf["model_flops"] / (n_dev * PEAK)
+        bottleneck = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        mfu_hlo = ideal_s / bottleneck if bottleneck else 0.0
+        ana_comp = ana.get("flops_per_device", 0) / PEAK
+        ana_mem = ana.get("hbm_bytes_global", 0) / n_dev / HBM
+        ana_bottleneck = max(ana_comp, ana_mem, rf["collective_s"])
+        mfu_ana = ideal_s / ana_bottleneck if ana_bottleneck else 0.0
+        # TPU projection: analytic compute/memory + collectives halved per
+        # honesty-box note 3 (CPU legalises bf16 dots -> f32 wire).
+        tpu_bottleneck = max(ana_comp, ana_mem, rf["collective_s"] / 2)
+        mfu_tpu = ideal_s / tpu_bottleneck if tpu_bottleneck else 0.0
+        mfu_sum["hlo"].append(mfu_hlo)
+        mfu_sum["ana"].append(mfu_ana)
+        mfu_sum["tpu"].append(mfu_tpu)
+        note = NOTES.get(r["cell"].rsplit("__", 1)[0], "")
+        print(
+            f"| {r['cell']} | {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} | "
+            f"{fmt_s(rf['collective_s'])} | {rf['dominant']} | "
+            f"{rf['useful_flops_ratio']:.2f} | {mfu_hlo*100:.0f}% | {mfu_ana*100:.0f}% | "
+            f"{mfu_tpu*100:.0f}% | {note} |"
+        )
+    if ok:
+        train = [(m, r) for m, r in zip(mfu_sum["tpu"], ok) if "train" in r["cell"]]
+        prefill = [(m, r) for m, r in zip(mfu_sum["tpu"], ok) if "prefill" in r["cell"]]
+        print(
+            f"\nTPU-projected MFU (the §Perf score): train cells mean "
+            f"{100*sum(m for m, _ in train)/max(len(train),1):.0f}% "
+            f"(best {100*max((m for m, _ in train), default=0):.0f}%), prefill cells mean "
+            f"{100*sum(m for m, _ in prefill)/max(len(prefill),1):.0f}% "
+            f"(best {100*max((m for m, _ in prefill), default=0):.0f}%). Decode cells are "
+            f"latency-bound (honesty-box note 5); their score is the step-latency term."
+        )
+    print()
+    comparison_table()
+
+
+# One-sentence "what would move the dominant term down" per cell.
+NOTES = {
+    "llama-3.2-vision-90b__train_4k": "memory: activation-offload or 2x microbatching; bf16 optimizer moments already on",
+    "llama-3.2-vision-90b__prefill_32k": "memory: fuse cross-attn K/V projection into prefill flash pass",
+    "llama-3.2-vision-90b__decode_32k": "collective: split cache into frozen seq-sharded prefix + replicated hot ring to kill the per-step cache-update gather",
+    "starcoder2-3b__train_4k": "memory: window 4096 == seq 4096 so full flash runs; sub-window blocking would shard attn over model",
+    "starcoder2-3b__prefill_32k": "HILLCLIMBED: seq-parallel blocked-local attention (see §Perf)",
+    "starcoder2-3b__decode_32k": "collective: 24 heads don't shard 16-way; ring cache is small — pack 2 decode steps per collective round",
+    "starcoder2-3b__long_500k": "healthy: 4096-window ring cache keeps all terms micro-scale",
+    "nemotron-4-15b__train_4k": "memory: squared-relu FFN h is the largest temp; fuse relu^2 into the w2 matmul epilogue on TPU",
+    "nemotron-4-15b__prefill_32k": "memory: 256k-vocab head dominates bytes; shard lse reduction tree deeper",
+    "nemotron-4-15b__decode_32k": "collective: kv=8 heads can't shard 16-way; seq-sharded cache psum per layer",
+    "glm4-9b__train_4k": "memory: same head/FFN mix as llama; microbatch deeper or offload",
+    "glm4-9b__prefill_32k": "memory: flash chunk 512 -> 1024 to halve pipeline overhead once VMEM allows",
+    "glm4-9b__decode_32k": "collective: kv=2 forces seq-sharded cache; partial-softmax combine is the cost",
+    "qwen1.5-0.5b__train_4k": "memory: model is tiny, vocab head (152k) is ~half the bytes; tie head compute into the last layer",
+    "qwen1.5-0.5b__prefill_32k": "memory: as train; 0.5B params make every term small",
+    "qwen1.5-0.5b__decode_32k": "memory: kv=16 shards cleanly; batch 128 decode is HBM-bound on cache reads (healthy)",
+    "qwen3-moe-235b-a22b__train_4k": "HILLCLIMBED: shard_map expert-parallel MoE (see §Perf)",
+    "qwen3-moe-235b-a22b__prefill_32k": "collective: expert-weight FSDP gathers dominate; prefetch next layer's experts during attention",
+    "qwen3-moe-235b-a22b__decode_32k": "memory: 8 tokens/device can't amortise 128-expert weight reads; expert-choice routing or wider decode batch",
+    "arctic-480b__train_4k": "memory: 56 heads replicate over 16-way model axis (divisibility); head_dim sharding or 8-way TP sub-mesh",
+    "arctic-480b__prefill_32k": "collective: dense-residual TP psum + expert gathers; overlap with attention compute",
+    "arctic-480b__decode_32k": "collective: as prefill; decode batch 128 keeps experts ~60% utilised",
+    "recurrentgemma-2b__train_4k": "memory: RG-LRU gates are full-rank (W,W); block-diagonal gates (as in Griffin) would cut both flops and bytes 4x",
+    "recurrentgemma-2b__prefill_32k": "memory: associative_scan materialises log-depth intermediates; the Pallas rglru kernel keeps state in VMEM",
+    "recurrentgemma-2b__decode_32k": "collective: 10 heads + kv=1 can't shard; replicate attn, shard RG-LRU width over model",
+    "recurrentgemma-2b__long_500k": "healthy: constant state + 2k window",
+    "rwkv6-3b__train_4k": "HILLCLIMBED: chunked WKV (see §Perf)",
+    "rwkv6-3b__prefill_32k": "memory: chunked WKV + wkv6 Pallas kernel keep state in VMEM; token-shift concat is the residual cost",
+    "rwkv6-3b__decode_32k": "collective: heads replicate (40 heads, 64-dim); shard the (H, hs, hs) state over model instead",
+    "rwkv6-3b__long_500k": "healthy: O(1) state",
+    "hubert-xlarge__train_4k": "collective: 504-way head replicates; grads all-reduce dominates at 1B params — bf16 compression",
+    "hubert-xlarge__prefill_32k": "memory: bidirectional flash over 32k frames; chunk 1024 would halve pipeline overhead",
+}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: SPARTA-on-TPU — compound weather-stencil acceleration in JAX/Pallas
+plus the multi-arch LM framework substrate (see DESIGN.md)."""
+
+__version__ = "1.0.0"

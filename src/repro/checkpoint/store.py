@@ -1,0 +1,166 @@
+"""Sharded checkpointing with atomic commits, async save, and elastic
+re-mesh restore.
+
+Format: one directory per step:
+
+    <root>/step_000123/
+        meta.json            -- step, pytree structure, shapes/dtypes, mesh
+        arrays.npz           -- flat {index -> np.ndarray} (host-gathered)
+        COMMIT               -- written LAST; absence = incomplete/corrupt
+
+Design points for the 1000-node posture:
+  * Atomic: save writes to ``step_X.tmp`` then renames; readers only trust
+    directories containing COMMIT. A preemption mid-save can never corrupt
+    the latest good checkpoint.
+  * Async: ``CheckpointManager.save_async`` snapshots to host memory
+    synchronously (cheap) and writes to disk on a background thread, so the
+    train loop blocks only for the device->host copy.
+  * ELASTIC: arrays are saved UNSHARDED (host-gathered); restore takes any
+    mesh and re-shards with the current sharding rules — a 512-chip
+    checkpoint restores onto 256 chips (or 8 CPU devices) unchanged. At real
+    scale this becomes per-shard tensorstore writes; the commit/manifest
+    protocol is the part that carries over.
+  * Retention: keep_last N, never deleting the newest COMMITted step.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(root: str | Path, step: int, tree: Any, extra: dict | None = None) -> Path:
+    """Synchronous atomic save. ``tree``: pytree of arrays."""
+    root = Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+    final = root / f"step_{step:08d}"
+    tmp = root / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves, treedef = _flatten(tree)
+    host_leaves = [np.asarray(l) for l in leaves]
+    np.savez(tmp / "arrays.npz", **{f"a{i}": a for i, a in enumerate(host_leaves)})
+    meta = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(host_leaves),
+        "shapes": [list(a.shape) for a in host_leaves],
+        "dtypes": [str(a.dtype) for a in host_leaves],
+        "extra": extra or {},
+        "time": time.time(),
+    }
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    (tmp / "COMMIT").write_text("ok")
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(root: str | Path) -> int | None:
+    root = Path(root)
+    if not root.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in root.iterdir()
+        if p.is_dir() and p.name.startswith("step_") and (p / "COMMIT").exists()
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    root: str | Path,
+    step: int | None,
+    tree_like: Any,
+    shardings: Any | None = None,
+) -> tuple[Any, dict]:
+    """Restores into the structure of ``tree_like``. With ``shardings`` (a
+    matching pytree of NamedSharding), arrays are placed sharded on the
+    CURRENT mesh — this is the elastic re-mesh path."""
+    root = Path(root)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints under {root}")
+    d = root / f"step_{step:08d}"
+    if not (d / "COMMIT").exists():
+        raise FileNotFoundError(f"checkpoint {d} has no COMMIT marker")
+    meta = json.loads((d / "meta.json").read_text())
+    with np.load(d / "arrays.npz") as z:
+        host_leaves = [z[f"a{i}"] for i in range(meta["n_leaves"])]
+
+    ref_leaves, treedef = _flatten(tree_like)
+    if len(ref_leaves) != len(host_leaves):
+        raise ValueError(
+            f"checkpoint has {len(host_leaves)} leaves, target structure has {len(ref_leaves)}"
+        )
+    for i, (h, r) in enumerate(zip(host_leaves, ref_leaves)):
+        if tuple(h.shape) != tuple(np.shape(r)):
+            raise ValueError(f"leaf {i}: checkpoint shape {h.shape} != target {np.shape(r)}")
+
+    if shardings is not None:
+        shard_leaves, _ = _flatten(shardings)
+        dev_leaves = [
+            jax.device_put(h.astype(r.dtype), s)
+            for h, r, s in zip(host_leaves, ref_leaves, shard_leaves)
+        ]
+    else:
+        dev_leaves = [jax.device_put(h.astype(np.dtype(r.dtype))) for h, r in zip(host_leaves, ref_leaves)]
+    return jax.tree.unflatten(treedef, dev_leaves), meta["extra"]
+
+
+class CheckpointManager:
+    """Async, retention-managed checkpointing for the train loop."""
+
+    def __init__(self, root: str | Path, keep_last: int = 3):
+        self.root = Path(root)
+        self.keep_last = keep_last
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def save_async(self, step: int, tree: Any, extra: dict | None = None):
+        self.wait()  # one in-flight save at a time
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # sync snapshot
+
+        def _write():
+            try:
+                save_checkpoint(self.root, step, host_tree, extra)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(
+            p for p in self.root.iterdir()
+            if p.is_dir() and p.name.startswith("step_") and (p / "COMMIT").exists()
+        )
+        for p in steps[: -self.keep_last]:
+            shutil.rmtree(p, ignore_errors=True)

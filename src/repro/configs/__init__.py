@@ -1,0 +1,11 @@
+"""Per-architecture configs (one module per assigned arch) + registry."""
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.registry import (
+    ARCH_IDS,
+    all_cells,
+    applicable_cells,
+    get_config,
+    get_shape,
+    get_smoke_config,
+)

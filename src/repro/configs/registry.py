@@ -1,0 +1,61 @@
+"""--arch registry: maps assignment ids to configs.
+
+Every assigned architecture exposes:
+  * ``CONFIG``        — the exact published shape from the assignment table
+  * ``smoke_config()``— reduced same-family variant for CPU smoke tests
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+_ARCH_MODULES: dict[str, str] = {
+    "llama-3.2-vision-90b": "repro.configs.llama32_vision_90b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "nemotron-4-15b": "repro.configs.nemotron4_15b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "qwen1.5-0.5b": "repro.configs.qwen15_05b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_ARCH_MODULES[arch]).smoke_config()
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def applicable_cells(arch: str) -> list[str]:
+    """The shape cells this arch runs (skips documented in DESIGN.md)."""
+    cfg = get_config(arch)
+    cells = ["train_4k", "prefill_32k"]
+    if cfg.supports_decode:
+        cells.append("decode_32k")
+        if cfg.sub_quadratic:
+            cells.append("long_500k")
+    return cells
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in ARCH_IDS for s in applicable_cells(a)]
+
+
+def scale_for_smoke(shape: ShapeConfig, seq: int = 64, batch: int = 2) -> ShapeConfig:
+    return dataclasses.replace(shape, seq_len=seq, global_batch=batch)

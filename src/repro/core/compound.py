@@ -1,0 +1,221 @@
+"""Compound-stencil composition with explicit execution policies.
+
+The paper's central systems idea is that a *compound* stencil (a DAG of
+elementary stages with producer/consumer dependencies) should be executed so
+that intermediates never round-trip through external memory, and so that the
+compute provisioned per stage matches that stage's compute/byte ratio
+(§3.1-§3.2). This module makes that idea a first-class, reusable feature:
+
+  * :class:`StencilStage` — one stage: a jnp function plus its §3.1-style op
+    accounting.
+  * :class:`CompoundStencil` — an ordered DAG of stages with three execution
+    policies:
+      - ``staged``        every stage materialised + barriered (single-AIE /
+                          load-store baseline; reproduces the slow side of
+                          Fig. 9),
+      - ``fused-xla``     one jitted function (XLA fusion; paper-faithful
+                          algorithm on the default compiler path),
+      - ``fused-pallas``  the hand-fused Pallas TPU kernel from
+                          ``repro.kernels`` (the multi-AIE/B-block analogue;
+                          fast side of Fig. 9).
+  * :func:`plan_partition` — the B-block planner: given a grid and a device
+    mesh, chooses depth-parallel vs halo row-decomposition by evaluating the
+    analytical model's three terms (compute / HBM / ICI seconds) for each
+    candidate, exactly how §3.4 sizes lanes per shimDMA channel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hdiff as hdiff_mod
+from repro.core.analytical import TPUV5E, MachineModel, roofline_terms
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilStage:
+    """One stage of a compound stencil.
+
+    ``fn`` maps (dict of named inputs) -> named output array. ``macs`` /
+    ``other_ops`` follow the paper's Eq. 5-6 accounting per interior output
+    point; ``reads`` counts distinct input elements per point (Eq. 8-9).
+    """
+
+    name: str
+    fn: Callable[..., Array]
+    inputs: tuple[str, ...]
+    macs: int
+    other_ops: int
+    reads: int
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.macs + self.other_ops
+
+
+class CompoundStencil:
+    """An ordered sequence of stages forming a compound stencil DAG."""
+
+    def __init__(self, name: str, stages: Sequence[StencilStage], radius: int):
+        self.name = name
+        self.stages = tuple(stages)
+        self.radius = radius
+        by_name = {}
+        for s in self.stages:
+            for dep in s.inputs:
+                if dep not in by_name and dep != "input":
+                    raise ValueError(f"stage {s.name} depends on unknown {dep!r}")
+            by_name[s.name] = s
+        self._fused = jax.jit(self._run)
+
+    # -- execution policies ------------------------------------------------
+
+    def _run(self, x: Array) -> Array:
+        env: dict[str, Array] = {"input": x}
+        out = x
+        for stage in self.stages:
+            out = stage.fn(*(env[k] for k in stage.inputs))
+            env[stage.name] = out
+        return out
+
+    def apply(self, x: Array, policy: str = "fused-xla") -> Array:
+        if policy == "fused-xla":
+            return self._fused(x)
+        if policy == "staged":
+            env: dict[str, Array] = {"input": x}
+            out = x
+            for stage in self.stages:
+                fn = jax.jit(stage.fn)
+                out = jax.block_until_ready(fn(*(env[k] for k in stage.inputs)))
+                env[stage.name] = out
+            return out
+        if policy == "fused-pallas":
+            raise NotImplementedError(
+                "fused-pallas policy is provided per-kernel via repro.kernels "
+                "(see kernels/hdiff/ops.py); generic DAG->Pallas codegen is out "
+                "of scope."
+            )
+        raise ValueError(f"unknown policy {policy!r}")
+
+    # -- analytical accounting (§3.1) ---------------------------------------
+
+    def total_flops(self, interior_points: int) -> int:
+        return interior_points * sum(s.flops for s in self.stages)
+
+    def staged_bytes(self, interior_points: int, itemsize: int = 4) -> int:
+        """HBM traffic under the staged policy: every stage reads its
+        operands and writes its output through memory (Eq. 8-9 analogue)."""
+        total = 0
+        for s in self.stages:
+            total += (s.reads + 1) * interior_points * itemsize
+        return total
+
+    def fused_bytes(self, total_points: int, itemsize: int = 4, n_inputs: int = 1) -> int:
+        """Compulsory HBM traffic under fusion: inputs once in, output once
+        out (the B-block broadcast/VMEM-reuse analogue)."""
+        return (n_inputs + 1) * total_points * itemsize
+
+
+def make_hdiff_compound(coeff: float = 0.025, limit: bool = True) -> CompoundStencil:
+    """hdiff as an explicit 3-stage compound (Laplacian -> flux -> output)."""
+
+    def lap_stage(x):
+        return hdiff_mod._staged_lap(x)
+
+    def flux_stage(x, lap):
+        return jnp.stack(hdiff_mod._staged_flux(x, lap, limit=limit))
+
+    def out_stage(x, flx):
+        return hdiff_mod._staged_out(x, coeff, flx[0], flx[1], flx[2], flx[3])
+
+    stages = (
+        StencilStage("lap", lap_stage, ("input",), macs=5 * 5, other_ops=0, reads=5 * 5),
+        StencilStage("flux", flux_stage, ("input", "lap"), macs=4 * 1, other_ops=4 * 3, reads=2 * 4),
+        StencilStage("out", out_stage, ("input", "flux"), macs=1, other_ops=4, reads=6),
+    )
+    return CompoundStencil("hdiff", stages, radius=hdiff_mod.HALO)
+
+
+# ---------------------------------------------------------------------------
+# The B-block planner: partition choice driven by the analytical model.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    """A chosen domain decomposition for a (grid, mesh) pair."""
+
+    kind: str              # "depth" | "rows" | "depth+rows"
+    depth_shards: int
+    row_shards: int
+    halo: int
+    # Predicted per-device roofline terms (seconds) for one sweep.
+    compute_s: float
+    hbm_s: float
+    ici_s: float
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.hbm_s, self.ici_s)
+
+
+def plan_partition(
+    depth: int,
+    rows: int,
+    cols: int,
+    n_devices: int,
+    *,
+    halo: int = hdiff_mod.HALO,
+    itemsize: int = 4,
+    machine: MachineModel = TPUV5E,
+    flops_per_point: int = hdiff_mod.HDIFF_SPEC.flops,
+) -> PartitionPlan:
+    """Chooses how to shard a (depth, rows, cols) grid over ``n_devices``.
+
+    Mirrors §3.4: the paper assigns one plane per B-block (depth-parallel,
+    zero inter-block traffic) until B-blocks outnumber planes, then splits
+    planes across lanes (which costs halo traffic). We enumerate candidate
+    (depth_shards x row_shards) factorisations, evaluate the three roofline
+    terms per device, and pick the minimum bottleneck term.
+    """
+    best: PartitionPlan | None = None
+    for d_sh in _divisors(n_devices):
+        r_sh = n_devices // d_sh
+        if depth % d_sh or d_sh > depth:
+            continue
+        if (rows - 2 * halo) // r_sh < 2 * halo + 1:
+            continue  # shards thinner than the halo make no sense
+        local_depth = depth // d_sh
+        local_rows = rows // r_sh + (2 * halo if r_sh > 1 else 0)
+        points = local_depth * local_rows * cols
+        flops = points * flops_per_point
+        hbm_bytes = 3 * points * itemsize  # in + coeff + out, fused policy
+        # Halo exchange: 2 faces x halo rows x cols x depth, both directions.
+        ici_bytes = 0 if r_sh == 1 else 2 * halo * cols * local_depth * itemsize * 2
+        comp_s, hbm_s, ici_s = roofline_terms(flops, hbm_bytes, ici_bytes, machine)
+        kind = "depth" if r_sh == 1 else ("rows" if d_sh == 1 else "depth+rows")
+        cand = PartitionPlan(kind, d_sh, r_sh, halo, comp_s, hbm_s, ici_s)
+        if best is None or cand.step_s < best.step_s:
+            best = cand
+    if best is None:
+        # Grid too small to fill every device (row shards would be thinner
+        # than the halo): degrade gracefully — underfill the mesh with the
+        # largest depth-parallel plan instead of failing. The idle devices
+        # are reported via depth_shards * row_shards < n_devices.
+        d_sh = max(d for d in _divisors(depth) if d <= n_devices)
+        points = (depth // d_sh) * rows * cols
+        comp_s, hbm_s, ici_s = roofline_terms(
+            points * flops_per_point, 3 * points * itemsize, 0, machine
+        )
+        return PartitionPlan("depth-underfilled", d_sh, 1, halo, comp_s, hbm_s, ici_s)
+    return best
+
+
+def _divisors(n: int) -> list[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]

@@ -1,0 +1,191 @@
+"""Elementary stencil kernels (pure JAX reference implementations).
+
+These are the five elementary stencils SPARTA implements in §3.5 as
+cross-platform benchmarks (all from PolyBench [69] except the COSMO
+Laplacian [37]):
+
+  * ``jacobi1d``      — 3-point 1-D Jacobi
+  * ``jacobi2d_3pt``  — 3-point 2-D Jacobi (three rows, one column; Fig. 8)
+  * ``laplacian``     — 5-point COSMO Laplacian (Eq. 1)
+  * ``jacobi2d_9pt``  — 9-point 2-D Jacobi (3x3 box)
+  * ``seidel2d``      — 9-point Gauss-Seidel (sequential dependency; we
+                        provide both the exact doubly-sequential version and
+                        the parallel Jacobi-style sweep used for throughput
+                        benchmarking, mirroring how a streaming spatial
+                        mapping pipelines it)
+
+All stencils operate on the trailing two dims (or one dim for jacobi1d) of an
+array, preserve shape, and leave the boundary ring equal to the input (the
+paper computes interior points only; borders pass through).
+
+Conventions: grids are indexed ``(..., row, col)``; the "depth" /plane
+dimension of the 3-D COSMO grid is a leading batch dimension and is
+embarrassingly parallel (§2.1: "we can parallelize hdiff in the vertical
+dimension").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Stencil op-count metadata, used by core.analytical (paper §3.1).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilSpec:
+    """Static description of a stencil's per-output-point cost.
+
+    Mirrors the accounting in the paper's Eq. 5-10: ``macs`` counts
+    multiply-accumulate ops, ``other_ops`` counts non-MAC vector ops
+    (add/sub/compare/select), ``reads`` counts distinct input elements
+    touched per output, ``radius`` is the halo width needed.
+    """
+
+    name: str
+    macs: int
+    other_ops: int
+    reads: int
+    radius: int
+    ndim: int = 2
+
+    @property
+    def flops(self) -> int:
+        # A MAC is 2 flops (mul + add).
+        return 2 * self.macs + self.other_ops
+
+
+ELEMENTARY_SPECS: dict[str, StencilSpec] = {
+    "jacobi1d": StencilSpec("jacobi1d", macs=3, other_ops=0, reads=3, radius=1, ndim=1),
+    "jacobi2d_3pt": StencilSpec("jacobi2d_3pt", macs=3, other_ops=0, reads=3, radius=1),
+    "laplacian": StencilSpec("laplacian", macs=5, other_ops=0, reads=5, radius=1),
+    "jacobi2d_5pt": StencilSpec("jacobi2d_5pt", macs=5, other_ops=0, reads=5, radius=1),
+    "jacobi2d_9pt": StencilSpec("jacobi2d_9pt", macs=9, other_ops=0, reads=9, radius=1),
+    "seidel2d": StencilSpec("seidel2d", macs=9, other_ops=0, reads=9, radius=1),
+}
+
+
+def _interior_update_2d(x: Array, new_interior: Array, radius: int) -> Array:
+    """Writes ``new_interior`` into the interior of ``x`` (trailing 2 dims)."""
+    r = radius
+    return x.at[..., r:-r, r:-r].set(new_interior)
+
+
+# ---------------------------------------------------------------------------
+# Elementary stencils.
+# ---------------------------------------------------------------------------
+
+
+def jacobi1d(x: Array, coeff: float = 1.0 / 3.0) -> Array:
+    """PolyBench jacobi-1d: ``out[i] = c * (x[i-1] + x[i] + x[i+1])``."""
+    interior = coeff * (x[..., :-2] + x[..., 1:-1] + x[..., 2:])
+    return x.at[..., 1:-1].set(interior.astype(x.dtype))
+
+
+def jacobi2d_3pt(x: Array, coeff: float = 1.0 / 3.0) -> Array:
+    """3-point 2-D Jacobi (Fig. 8): three rows, same column.
+
+    ``out[i,j] = c * (x[i-1,j] + x[i,j] + x[i+1,j])``
+    """
+    interior = coeff * (x[..., :-2, 1:-1] + x[..., 1:-1, 1:-1] + x[..., 2:, 1:-1])
+    return _interior_update_2d(x, interior.astype(x.dtype), 1)
+
+
+def laplacian(x: Array) -> Array:
+    """COSMO 5-point Laplacian (Eq. 1), computed on the interior.
+
+    ``L[i,j] = 4*x[i,j] - x[i+1,j] - x[i-1,j] - x[i,j+1] - x[i,j-1]``
+    """
+    interior = lap_field(x)
+    return _interior_update_2d(x, interior.astype(x.dtype), 1)
+
+
+def lap_field(x: Array) -> Array:
+    """Raw Laplacian values on the interior (shape shrinks by 2 per dim).
+
+    This is the building block hdiff composes five of; returned *without*
+    re-embedding into the full grid so compound stencils can chain it.
+    """
+    return (
+        4.0 * x[..., 1:-1, 1:-1]
+        - x[..., 2:, 1:-1]
+        - x[..., :-2, 1:-1]
+        - x[..., 1:-1, 2:]
+        - x[..., 1:-1, :-2]
+    )
+
+
+def jacobi2d_5pt(x: Array, coeff: float = 0.2) -> Array:
+    """PolyBench jacobi-2d: 5-point star average."""
+    interior = coeff * (
+        x[..., 1:-1, 1:-1]
+        + x[..., 2:, 1:-1]
+        + x[..., :-2, 1:-1]
+        + x[..., 1:-1, 2:]
+        + x[..., 1:-1, :-2]
+    )
+    return _interior_update_2d(x, interior.astype(x.dtype), 1)
+
+
+def jacobi2d_9pt(x: Array, coeff: float = 1.0 / 9.0) -> Array:
+    """9-point box Jacobi: mean of the 3x3 neighbourhood."""
+    acc = jnp.zeros_like(x[..., 1:-1, 1:-1])
+    for dr in (-1, 0, 1):
+        for dc in (-1, 0, 1):
+            acc = acc + x[..., 1 + dr : x.shape[-2] - 1 + dr, 1 + dc : x.shape[-1] - 1 + dc]
+    return _interior_update_2d(x, (coeff * acc).astype(x.dtype), 1)
+
+
+def seidel2d_sweep(x: Array, coeff: float = 1.0 / 9.0) -> Array:
+    """Parallel (Jacobi-style) 9-point sweep — the throughput-benchmark form.
+
+    The streaming spatial mapping in the paper pipelines seidel-2d row by
+    row; the dependence-free per-sweep form is what maps onto one AIE core.
+    """
+    return jacobi2d_9pt(x, coeff)
+
+
+def seidel2d_exact(x: Array, coeff: float = 1.0 / 9.0) -> Array:
+    """Exact PolyBench seidel-2d: in-place Gauss-Seidel, row-major order.
+
+    Doubly sequential (each point reads already-updated west and north
+    neighbours). Implemented with nested ``lax.fori_loop`` for the oracle;
+    O(R*C) sequential steps, so use small grids in tests.
+    """
+    if x.ndim != 2:
+        return jax.vmap(lambda p: seidel2d_exact(p, coeff))(x.reshape((-1,) + x.shape[-2:])).reshape(x.shape)
+
+    rows, cols = x.shape
+
+    def col_body(j, row_state):
+        i, grid = row_state
+        s = (
+            grid[i - 1, j - 1] + grid[i - 1, j] + grid[i - 1, j + 1]
+            + grid[i, j - 1] + grid[i, j] + grid[i, j + 1]
+            + grid[i + 1, j - 1] + grid[i + 1, j] + grid[i + 1, j + 1]
+        )
+        return (i, grid.at[i, j].set((coeff * s).astype(grid.dtype)))
+
+    def row_body(i, grid):
+        _, grid = jax.lax.fori_loop(1, cols - 1, col_body, (i, grid))
+        return grid
+
+    return jax.lax.fori_loop(1, rows - 1, row_body, x)
+
+
+ELEMENTARY_FNS: dict[str, Callable[..., Array]] = {
+    "jacobi1d": jacobi1d,
+    "jacobi2d_3pt": jacobi2d_3pt,
+    "laplacian": laplacian,
+    "jacobi2d_5pt": jacobi2d_5pt,
+    "jacobi2d_9pt": jacobi2d_9pt,
+    "seidel2d": seidel2d_sweep,
+}

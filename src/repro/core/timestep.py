@@ -1,0 +1,78 @@
+"""Iterative time-stepping driver for stencil simulations.
+
+The paper pipelines *timesteps* through the spatial array ("their dataflow
+design provides an intuitive way to take advantage of both spatial and
+temporal locality in iterative stencil processing by pipelining different
+timesteps", §1). On TPU the analogue is a ``lax.scan`` over steps with the
+whole step fused — the grid stays on-device (in HBM) for the entire run and
+only boundary/diagnostic data leaves.
+
+Double-buffering semantics: ``lax.scan`` carries the grid as loop state, so
+XLA's buffer donation gives the classic ping-pong pair for free.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("step_fn", "n_steps", "collect_every"))
+def run_simulation(
+    psi0: Array,
+    coeff: Array | float,
+    *,
+    step_fn: Callable[[Array, Array | float], Array],
+    n_steps: int,
+    collect_every: int = 0,
+) -> tuple[Array, Array | None]:
+    """Runs ``n_steps`` of ``psi <- step_fn(psi, coeff)``.
+
+    Returns the final field and, if ``collect_every > 0``, a stacked history
+    of (max, mean-abs) diagnostics every ``collect_every`` steps.
+    """
+
+    def body(psi, _):
+        nxt = step_fn(psi, coeff)
+        if collect_every:
+            diag = jnp.stack([jnp.max(jnp.abs(nxt)), jnp.mean(jnp.abs(nxt))])
+        else:
+            diag = jnp.zeros((2,), nxt.dtype)
+        return nxt, diag
+
+    final, diags = jax.lax.scan(body, psi0, None, length=n_steps)
+    if collect_every:
+        return final, diags[::collect_every]
+    return final, None
+
+
+def make_initial_field(
+    depth: int, rows: int, cols: int, *, kind: str = "gaussian", seed: int = 0, dtype=jnp.float32
+) -> Array:
+    """Deterministic initial conditions for tests/benchmarks.
+
+    ``gaussian``: a smooth bump (physically plausible for diffusion);
+    ``random``: uniform noise (stress test for the limiter);
+    ``checker``: worst case for diffusion smoothing.
+    """
+    if kind == "random":
+        key = jax.random.PRNGKey(seed)
+        return jax.random.uniform(key, (depth, rows, cols), dtype=dtype)
+    r = jnp.arange(rows, dtype=dtype)
+    c = jnp.arange(cols, dtype=dtype)
+    d = jnp.arange(depth, dtype=dtype)
+    if kind == "gaussian":
+        rr = (r[:, None] - rows / 2.0) / (rows / 8.0)
+        cc = (c[None, :] - cols / 2.0) / (cols / 8.0)
+        plane = jnp.exp(-(rr**2 + cc**2))
+        scale = 1.0 + 0.1 * d / max(depth - 1, 1)
+        return plane[None] * scale[:, None, None]
+    if kind == "checker":
+        plane = ((r[:, None].astype(jnp.int32) + c[None, :].astype(jnp.int32)) % 2).astype(dtype)
+        return jnp.broadcast_to(plane[None], (depth, rows, cols))
+    raise ValueError(f"unknown initial-condition kind {kind!r}")

@@ -1,0 +1,8 @@
+from repro.data.pipeline import (
+    DataConfig,
+    Prefetcher,
+    SyntheticLM,
+    TokenFileDataset,
+    make_dataset,
+    pack_documents,
+)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+hdiff/      fused compound stencil (the SPARTA contribution)
+stencil2d/  generic 3x3 elementary stencil + jacobi1d (the §3.5 suite)
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with auto interpret-mode), ref.py (pure-jnp oracle). Validated by
+shape/dtype sweeps in tests/test_kernels_*.py.
+"""

@@ -1,0 +1,3 @@
+from repro.kernels.hdiff.multistep import hdiff_twostep
+from repro.kernels.hdiff.ops import hdiff_fixed, hdiff_fused, hdiff_fused_ad
+from repro.kernels.hdiff.ref import hdiff_fixed_point_ref, hdiff_ref, hdiff_simple_ref

@@ -1,0 +1,215 @@
+"""Fused hdiff Pallas TPU kernel — the SPARTA multi-AIE/B-block analogue.
+
+Design (see DESIGN.md §2 for the AIE->TPU mapping):
+
+  * Grid = ``(depth, row_tiles)``. One program instance owns one row-tile of
+    one plane — the analogue of one B-block *lane* owning one output-row
+    offset of one plane (§3.4).
+  * The radius-2 halo is provided by the **three-slab trick**: the input is
+    passed three times with block index maps ``i-1 / i / i+1`` (clamped at
+    the edges). The kernel concatenates ``prev[-2:] ++ cur ++ next[:2]`` in
+    VMEM, giving each tile its halo without any overlapping-BlockSpec
+    support. Clamped edge blocks contribute garbage rows that are only ever
+    consumed by boundary outputs, which are overwritten by the passthrough
+    mask — verified against the oracle in tests.
+  * Laplacian, flux (with limiter), and output update all happen in one
+    kernel body: intermediates live in VMEM/VREGs only. This is the paper's
+    "keep data in the accumulator registers / cascade forwarding" discipline;
+    HBM sees exactly one read of psi (+coeff) and one write of the output —
+    the compulsory-traffic lower bound (`hdiff_min_bytes`).
+  * The Pallas grid pipeline double-buffers the HBM->VMEM block fetches,
+    which is the shimDMA ping-pong of §3.2.1.
+
+Supported dtypes: f32 / bf16 (compute in f32), and int32 fixed-point
+(the paper's i32 datapath) via ``hdiff_fixed_kernel``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+HALO = 2
+
+
+def _hdiff_tile_math(x: Array, coeff: Array | float, *, limit: bool) -> Array:
+    """hdiff interior math on a (rows+4, cols) f32 tile -> (rows, cols-4)."""
+    lap = (
+        4.0 * x[1:-1, 1:-1]
+        - x[2:, 1:-1]
+        - x[:-2, 1:-1]
+        - x[1:-1, 2:]
+        - x[1:-1, :-2]
+    )
+    lap_c = lap[1:-1, 1:-1]
+    flx_r = lap[2:, 1:-1] - lap_c
+    flx_rm = lap_c - lap[:-2, 1:-1]
+    flx_c = lap[1:-1, 2:] - lap_c
+    flx_cm = lap_c - lap[1:-1, :-2]
+
+    if limit:
+        psi_c = x[2:-2, 2:-2]
+        zero = jnp.zeros_like(flx_r)
+        flx_r = jnp.where(flx_r * (x[3:-1, 2:-2] - psi_c) <= 0, flx_r, zero)
+        flx_rm = jnp.where(flx_rm * (psi_c - x[1:-3, 2:-2]) <= 0, flx_rm, zero)
+        flx_c = jnp.where(flx_c * (x[2:-2, 3:-1] - psi_c) <= 0, flx_c, zero)
+        flx_cm = jnp.where(flx_cm * (psi_c - x[2:-2, 1:-3]) <= 0, flx_cm, zero)
+
+    return x[2:-2, 2:-2] - coeff * ((flx_r - flx_rm) + (flx_c - flx_cm))
+
+
+def _hdiff_kernel(
+    prev_ref, cur_ref, next_ref, coeff_ref, out_ref, *, block_rows: int, rows: int, limit: bool
+):
+    """Kernel body. Block shapes: inputs (1, block_rows, C); out (1, block_rows, C)."""
+    i = pl.program_id(1)
+    cur = cur_ref[0].astype(jnp.float32)
+    halo_top = prev_ref[0, -HALO:, :].astype(jnp.float32)
+    halo_bot = next_ref[0, :HALO, :].astype(jnp.float32)
+    x = jnp.concatenate([halo_top, cur, halo_bot], axis=0)  # (block_rows+4, C)
+
+    coeff = coeff_ref[0, 0]
+    interior = _hdiff_tile_math(x, coeff, limit=limit)  # (block_rows, C-4)
+
+    out = cur
+    # Column passthrough: embed interior into the full-width tile.
+    out = out.at[:, HALO:-HALO].set(interior.astype(out.dtype))
+    # Row passthrough mask: global rows < 2 or >= rows-2 keep the input.
+    gl_row = i * block_rows + jax.lax.broadcasted_iota(jnp.int32, (block_rows, 1), 0)
+    keep = (gl_row < HALO) | (gl_row >= rows - HALO)
+    out = jnp.where(keep, cur, out)
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "limit", "interpret")
+)
+def hdiff_pallas(
+    psi: Array,
+    coeff: float | Array = 0.025,
+    *,
+    block_rows: int = 128,
+    limit: bool = True,
+    interpret: bool = False,
+) -> Array:
+    """Fused hdiff over a ``(depth, rows, cols)`` grid.
+
+    ``block_rows`` is the VMEM row-tile size (multiples of 8 for f32 TPU
+    sublane alignment; cols should be a multiple of 128 lanes for peak
+    efficiency — both are *performance* knobs, any size is correct).
+    """
+    depth, rows, cols = psi.shape
+    block_rows = min(block_rows, rows)
+    if rows % block_rows:
+        raise ValueError(f"rows={rows} not divisible by block_rows={block_rows}")
+    row_tiles = rows // block_rows
+    if 2 * HALO > block_rows:
+        raise ValueError("block_rows must be >= 4")
+
+    coeff_arr = jnp.full((1, 1), coeff, jnp.float32)
+
+    grid = (depth, row_tiles)
+    in_spec_prev = pl.BlockSpec(
+        (1, block_rows, cols), lambda d, i: (d, jnp.maximum(i - 1, 0), 0)
+    )
+    in_spec_cur = pl.BlockSpec((1, block_rows, cols), lambda d, i: (d, i, 0))
+    in_spec_next = pl.BlockSpec(
+        (1, block_rows, cols), lambda d, i: (d, jnp.minimum(i + 1, row_tiles - 1), 0)
+    )
+    coeff_spec = pl.BlockSpec((1, 1), lambda d, i: (0, 0), memory_space=pltpu.MemorySpace.SMEM)
+    out_spec = pl.BlockSpec((1, block_rows, cols), lambda d, i: (d, i, 0))
+
+    kernel = functools.partial(
+        _hdiff_kernel, block_rows=block_rows, rows=rows, limit=limit
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[in_spec_prev, in_spec_cur, in_spec_next, coeff_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(psi.shape, psi.dtype),
+        interpret=interpret,
+    )(psi, psi, psi, coeff_arr)
+
+
+# ---------------------------------------------------------------------------
+# int32 fixed-point datapath (the paper's i32 variant).
+# ---------------------------------------------------------------------------
+
+
+def _hdiff_fixed_kernel(
+    prev_ref, cur_ref, next_ref, out_ref, *, block_rows: int, rows: int,
+    coeff_num: int, coeff_shift: int
+):
+    i = pl.program_id(1)
+    cur = cur_ref[0]
+    x = jnp.concatenate([prev_ref[0, -HALO:, :], cur, next_ref[0, :HALO, :]], axis=0)
+
+    lap = 4 * x[1:-1, 1:-1] - x[2:, 1:-1] - x[:-2, 1:-1] - x[1:-1, 2:] - x[1:-1, :-2]
+    lap_c = lap[1:-1, 1:-1]
+    flx_r = lap[2:, 1:-1] - lap_c
+    flx_rm = lap_c - lap[:-2, 1:-1]
+    flx_c = lap[1:-1, 2:] - lap_c
+    flx_cm = lap_c - lap[1:-1, :-2]
+
+    # Sign-based limiter (int32 product of flux * gradient overflows).
+    def _keep(a, b):
+        return (a == 0) | (b == 0) | ((a > 0) != (b > 0))
+
+    psi_c = x[2:-2, 2:-2]
+    zero = jnp.zeros_like(flx_r)
+    flx_r = jnp.where(_keep(flx_r, x[3:-1, 2:-2] - psi_c), flx_r, zero)
+    flx_rm = jnp.where(_keep(flx_rm, psi_c - x[1:-3, 2:-2]), flx_rm, zero)
+    flx_c = jnp.where(_keep(flx_c, x[2:-2, 3:-1] - psi_c), flx_c, zero)
+    flx_cm = jnp.where(_keep(flx_cm, psi_c - x[2:-2, 1:-3]), flx_cm, zero)
+
+    total = (flx_r - flx_rm) + (flx_c - flx_cm)
+    interior = psi_c - ((total * coeff_num) >> coeff_shift)
+
+    out = cur.at[:, HALO:-HALO].set(interior)
+    gl_row = i * block_rows + jax.lax.broadcasted_iota(jnp.int32, (block_rows, 1), 0)
+    keep = (gl_row < HALO) | (gl_row >= rows - HALO)
+    out_ref[0] = jnp.where(keep, cur, out)
+
+
+@functools.partial(jax.jit, static_argnames=("coeff_num", "coeff_shift", "block_rows", "interpret"))
+def hdiff_fixed_pallas(
+    psi_q: Array,
+    *,
+    coeff_num: int = 26,          # 26/1024 ~= 0.0254
+    coeff_shift: int = 10,
+    block_rows: int = 128,
+    interpret: bool = False,
+) -> Array:
+    depth, rows, cols = psi_q.shape
+    block_rows = min(block_rows, rows)
+    if rows % block_rows:
+        raise ValueError(f"rows={rows} not divisible by block_rows={block_rows}")
+    row_tiles = rows // block_rows
+
+    kernel = functools.partial(
+        _hdiff_fixed_kernel,
+        block_rows=block_rows,
+        rows=rows,
+        coeff_num=coeff_num,
+        coeff_shift=coeff_shift,
+    )
+    spec = lambda fn: pl.BlockSpec((1, block_rows, cols), fn)  # noqa: E731
+    return pl.pallas_call(
+        kernel,
+        grid=(depth, row_tiles),
+        in_specs=[
+            spec(lambda d, i: (d, jnp.maximum(i - 1, 0), 0)),
+            spec(lambda d, i: (d, i, 0)),
+            spec(lambda d, i: (d, jnp.minimum(i + 1, row_tiles - 1), 0)),
+        ],
+        out_specs=spec(lambda d, i: (d, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(psi_q.shape, psi_q.dtype),
+        interpret=interpret,
+    )(psi_q, psi_q, psi_q)

@@ -1,0 +1,109 @@
+"""Temporal-blocked hdiff: TWO timesteps per HBM round-trip.
+
+The paper's §1 insight — "their dataflow design provides an intuitive way to
+take advantage of both spatial and temporal locality in iterative stencil
+processing by pipelining different timesteps" — as a TPU kernel: the tile
+(with a radius-4 row halo) is loaded into VMEM once, hdiff is applied twice
+while the data stays resident, and only the final result returns to HBM.
+Compulsory traffic per simulated step halves (the kernel-side analogue of
+chaining two tri-AIE pipelines back-to-back).
+
+Boundary semantics match two applications of the boundary-passthrough hdiff
+exactly: each internal step applies the global passthrough ring using
+absolute row indices, so ``hdiff_twostep(x) == hdiff(hdiff(x))`` bit-tight —
+verified against the composed oracle in tests/test_kernels_hdiff_multistep.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.hdiff.kernel import HALO, _hdiff_tile_math
+
+Array = jax.Array
+
+
+def _apply_step(x: Array, coeff, rows_global: Array, rows_total: int, limit: bool) -> Array:
+    """One hdiff step on a (n, C) tile with absolute row ids ``rows_global``
+    for the n-4 interior rows produced; returns (n-4, C) incl. passthrough."""
+    interior = _hdiff_tile_math(x, coeff, limit=limit)       # (n-4, C-4)
+    out = x[HALO:-HALO, :]
+    out = out.at[:, HALO:-HALO].set(interior.astype(out.dtype))
+    keep = (rows_global < HALO) | (rows_global >= rows_total - HALO)
+    return jnp.where(keep[:, None], x[HALO:-HALO, :], out)
+
+
+def _twostep_kernel(prev_ref, cur_ref, next_ref, coeff_ref, out_ref, *,
+                    block_rows: int, rows: int, limit: bool):
+    i = pl.program_id(1)
+    cur = cur_ref[0].astype(jnp.float32)
+    top = prev_ref[0, -2 * HALO:, :].astype(jnp.float32)
+    bot = next_ref[0, :2 * HALO, :].astype(jnp.float32)
+    x = jnp.concatenate([top, cur, bot], axis=0)             # (block+8, C)
+    coeff = coeff_ref[0, 0]
+
+    base = i * block_rows
+    rows1 = base - HALO + jax.lax.broadcasted_iota(jnp.int32, (block_rows + 2 * HALO,), 0)
+    x1 = _apply_step(x, coeff, rows1, rows, limit)           # (block+4, C)
+    rows2 = base + jax.lax.broadcasted_iota(jnp.int32, (block_rows,), 0)
+    x2 = _apply_step(x1, coeff, rows2, rows, limit)          # (block, C)
+    out_ref[0] = x2.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "limit", "interpret"))
+def hdiff_twostep_pallas(
+    psi: Array,
+    coeff: float | Array = 0.025,
+    *,
+    block_rows: int = 128,
+    limit: bool = True,
+    interpret: bool = False,
+) -> Array:
+    """Two fused hdiff timesteps over ``(depth, rows, cols)``.
+
+    Requires block_rows >= 2*HALO*2 = 8 (the two-step halo must fit inside a
+    neighbouring block) and rows % block_rows == 0.
+    """
+    depth, rows, cols = psi.shape
+    block_rows = min(block_rows, rows)
+    if rows % block_rows:
+        raise ValueError(f"rows={rows} not divisible by block_rows={block_rows}")
+    if block_rows < 4 * HALO:
+        raise ValueError(f"block_rows must be >= {4 * HALO} for two-step halos")
+    row_tiles = rows // block_rows
+    coeff_arr = jnp.full((1, 1), coeff, jnp.float32)
+
+    spec = lambda fn: pl.BlockSpec((1, block_rows, cols), fn)  # noqa: E731
+    kernel = functools.partial(_twostep_kernel, block_rows=block_rows, rows=rows,
+                               limit=limit)
+    return pl.pallas_call(
+        kernel,
+        grid=(depth, row_tiles),
+        in_specs=[
+            spec(lambda d, i: (d, jnp.maximum(i - 1, 0), 0)),
+            spec(lambda d, i: (d, i, 0)),
+            spec(lambda d, i: (d, jnp.minimum(i + 1, row_tiles - 1), 0)),
+            pl.BlockSpec((1, 1), lambda d, i: (0, 0), memory_space=pltpu.MemorySpace.SMEM),
+        ],
+        out_specs=spec(lambda d, i: (d, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(psi.shape, psi.dtype),
+        interpret=interpret,
+    )(psi, psi, psi, coeff_arr)
+
+
+def hdiff_twostep(psi: Array, coeff: float | Array = 0.025, *,
+                  block_rows: int | None = None, limit: bool = True,
+                  interpret: bool | None = None) -> Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if block_rows is None:
+        from repro.kernels.hdiff.ops import _pick_block_rows
+
+        block_rows = max(_pick_block_rows(psi.shape), 4 * HALO)
+    return hdiff_twostep_pallas(psi, coeff, block_rows=block_rows, limit=limit,
+                                interpret=interpret)

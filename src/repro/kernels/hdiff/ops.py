@@ -1,0 +1,119 @@
+"""Public jit'd entry points for the hdiff kernels.
+
+On CPU (this container) the Pallas TPU kernel runs in ``interpret=True``
+mode; on a real TPU backend it compiles through Mosaic. ``auto_interpret``
+resolves that automatically so callers never pass the flag.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hdiff import hdiff as _hdiff_ref
+from repro.core.hdiff import hdiff_simple as _hdiff_simple_ref
+from repro.kernels.hdiff.kernel import hdiff_fixed_pallas, hdiff_pallas
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def hdiff_fused(
+    psi: Array,
+    coeff: float | Array = 0.025,
+    *,
+    block_rows: int | None = None,
+    limit: bool = True,
+    interpret: bool | None = None,
+) -> Array:
+    """Fused hdiff (Laplacian+flux+output in one VMEM-resident kernel).
+
+    Args:
+      psi: ``(depth, rows, cols)`` f32/bf16 field.
+      coeff: scalar diffusion coefficient.
+      block_rows: VMEM row-tile; default picks the largest divisor of rows
+        that keeps the tile under ~4 MiB (leaving headroom for the pipeline's
+        double buffers).
+      limit: apply the Eq. 2-3 flux limiter (the production COSMO form).
+      interpret: force interpreter mode; default = interpret iff not on TPU.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    if block_rows is None:
+        block_rows = _pick_block_rows(psi.shape)
+    return hdiff_pallas(
+        psi, coeff, block_rows=block_rows, limit=limit, interpret=interpret
+    )
+
+
+def hdiff_fixed(
+    psi_q: Array,
+    *,
+    coeff_num: int = 26,
+    coeff_shift: int = 10,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+) -> Array:
+    """int32 fixed-point hdiff (the paper's i32 datapath)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    if block_rows is None:
+        block_rows = _pick_block_rows(psi_q.shape)
+    return hdiff_fixed_pallas(
+        psi_q,
+        coeff_num=coeff_num,
+        coeff_shift=coeff_shift,
+        block_rows=block_rows,
+        interpret=interpret,
+    )
+
+
+# -- differentiable wrapper ---------------------------------------------------
+#
+# The Pallas kernel has no hand-written backward pass (and `pl.program_id`
+# cannot be traced under JVP in interpret mode), so the differentiable entry
+# point pairs the kernel FORWARD with a reference-function BACKWARD via
+# custom_vjp — the standard pattern when only the fwd kernel exists. The
+# recompute in bwd costs one extra hdiff sweep, the same tradeoff as remat.
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def hdiff_fused_ad(psi: Array, coeff: Array, limit: bool = True) -> Array:
+    return hdiff_fused(psi, coeff, limit=limit)
+
+
+def _hdiff_ad_fwd(psi, coeff, limit):
+    return hdiff_fused(psi, coeff, limit=limit), (psi, coeff)
+
+
+def _hdiff_ad_bwd(limit, res, g):
+    psi, coeff = res
+    ref = _hdiff_ref if limit else _hdiff_simple_ref
+    _, vjp = jax.vjp(lambda p, c: ref(p, c), psi, coeff)
+    return vjp(g)
+
+
+hdiff_fused_ad.defvjp(_hdiff_ad_fwd, _hdiff_ad_bwd)
+
+
+def _pick_block_rows(shape: tuple[int, ...], budget_bytes: int = 4 * 1024 * 1024) -> int:
+    """Largest divisor of ``rows`` whose (rows x cols) f32 tile fits budget.
+
+    The pipeline keeps ~3 input blocks + 1 output block live (prev/cur/next
+    + out) and double-buffers them, so the per-block budget is set well under
+    VMEM/8.
+    """
+    _, rows, cols = shape
+    best = 8 if rows % 8 == 0 else 1
+    for cand in range(rows, 0, -1):
+        if rows % cand:
+            continue
+        if cand * cols * 4 <= budget_bytes:
+            best = cand
+            break
+    return best

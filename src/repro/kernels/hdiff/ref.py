@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the fused hdiff Pallas kernel.
+
+Thin re-export of the core implementation so the kernel test harness has a
+single canonical reference, plus the fixed-point (int32) variant that mirrors
+the paper's ``i32`` datapath (§5.1.1, Fig. 9).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hdiff import hdiff as hdiff_ref  # noqa: F401  (canonical f32 oracle)
+from repro.core.hdiff import hdiff_simple as hdiff_simple_ref  # noqa: F401
+
+Array = jax.Array
+
+
+def hdiff_fixed_point_ref(psi_q: Array, coeff_num: int, coeff_shift: int) -> Array:
+    """int32 fixed-point hdiff oracle (the paper's i32 datapath).
+
+    ``coeff = coeff_num / 2**coeff_shift``. All arithmetic is exact int32;
+    the final coefficient multiply is a multiply + arithmetic right shift,
+    matching an AIE fixed-point MAC + srs() round.
+    """
+    assert psi_q.dtype == jnp.int32
+    lap = (
+        4 * psi_q[..., 1:-1, 1:-1]
+        - psi_q[..., 2:, 1:-1]
+        - psi_q[..., :-2, 1:-1]
+        - psi_q[..., 1:-1, 2:]
+        - psi_q[..., 1:-1, :-2]
+    )
+    lap_c = lap[..., 1:-1, 1:-1]
+    flx_r = lap[..., 2:, 1:-1] - lap_c
+    flx_rm = lap_c - lap[..., :-2, 1:-1]
+    flx_c = lap[..., 1:-1, 2:] - lap_c
+    flx_cm = lap_c - lap[..., 1:-1, :-2]
+
+    # Sign-based limiter: ``a * b <= 0`` without the (overflowing) int32
+    # product — true iff either operand is zero or the signs differ.
+    def _keep(a, b):
+        return (a == 0) | (b == 0) | ((a > 0) != (b > 0))
+
+    psi_c = psi_q[..., 2:-2, 2:-2]
+    zero = jnp.zeros_like(flx_r)
+    flx_r = jnp.where(_keep(flx_r, psi_q[..., 3:-1, 2:-2] - psi_c), flx_r, zero)
+    flx_rm = jnp.where(_keep(flx_rm, psi_c - psi_q[..., 1:-3, 2:-2]), flx_rm, zero)
+    flx_c = jnp.where(_keep(flx_c, psi_q[..., 2:-2, 3:-1] - psi_c), flx_c, zero)
+    flx_cm = jnp.where(_keep(flx_cm, psi_c - psi_q[..., 2:-2, 1:-3]), flx_cm, zero)
+
+    total = (flx_r - flx_rm) + (flx_c - flx_cm)
+    interior = psi_c - ((total * coeff_num) >> coeff_shift)
+    return psi_q.at[..., 2:-2, 2:-2].set(interior)

@@ -1,0 +1,59 @@
+"""RG-LRU recurrence Pallas TPU kernel.
+
+Grid = (B, W/block_w): one program owns one width-lane tile of one batch
+row for the WHOLE sequence. The hidden state is a (block_w,) vector that
+never leaves VMEM/VREGs (SPARTA's accumulator-residency discipline); the
+time loop is sequential but each step is a full-width VPU vector op, so
+the datapath stays busy — the TPU-native layout of a per-timestep
+recurrence (DESIGN.md §2's "adapt, don't port" rule applied to Griffin).
+
+block_w should be a multiple of 128 (VPU lanes) on real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, hout_ref, *, t: int):
+    h = h0_ref[0].astype(jnp.float32)  # (block_w,)
+
+    def step(i, h):
+        h = a_ref[0, i, :].astype(jnp.float32) * h + b_ref[0, i, :].astype(jnp.float32)
+        y_ref[0, i, :] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, t, step, h)
+    hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def rglru_scan_pallas(
+    a: Array, b: Array, h0: Array, *, block_w: int = 128, interpret: bool = False
+) -> tuple[Array, Array]:
+    """a, b: (B, T, W); h0: (B, W) -> (h (B,T,W) f32, h_last (B,W) f32)."""
+    bsz, t, w = a.shape
+    block_w = min(block_w, w)
+    if w % block_w:
+        raise ValueError(f"width {w} not divisible by block_w {block_w}")
+
+    seq_spec = pl.BlockSpec((1, t, block_w), lambda bi, wi: (bi, 0, wi))
+    vec_spec = pl.BlockSpec((1, block_w), lambda bi, wi: (bi, wi))
+    kernel = functools.partial(_rglru_kernel, t=t)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, w // block_w),
+        in_specs=[seq_spec, seq_spec, vec_spec],
+        out_specs=[seq_spec, vec_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, t, w), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, w), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b, h0)

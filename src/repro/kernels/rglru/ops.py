@@ -1,0 +1,16 @@
+"""Public entry point for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rglru.kernel import rglru_scan_pallas
+
+Array = jax.Array
+
+
+def rglru_scan(a: Array, b: Array, h0: Array, *, block_w: int = 128,
+               interpret: bool | None = None) -> tuple[Array, Array]:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return rglru_scan_pallas(a, b, h0, block_w=block_w, interpret=interpret)

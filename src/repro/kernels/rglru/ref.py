@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the RG-LRU linear recurrence.
+
+    h_t = a_t * h_{t-1} + b_t        (elementwise over width)
+
+Shapes: a, b (B, T, W); h0 (B, W). Gate/conv math stays outside the kernel
+(dense matmuls the MXU already handles); the kernel owns the sequential
+part — the recurrence itself.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rglru_scan_ref(a: Array, b: Array, h0: Array) -> tuple[Array, Array]:
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    # Fold h0 into the first step: h_1 = a_1 h_0 + b_1.
+    b32 = b32.at[:, 0].add(a32[:, 0] * h0.astype(jnp.float32))
+    _, h = jax.lax.associative_scan(combine, (a32, b32), axis=1)
+    return h, h[:, -1]

@@ -1,0 +1,2 @@
+from repro.kernels.stencil2d.ops import jacobi1d, stencil2d
+from repro.kernels.stencil2d.ref import jacobi1d_ref, stencil2d_ref, weights_for

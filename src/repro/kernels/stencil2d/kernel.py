@@ -1,0 +1,92 @@
+"""Generic 2-D elementary-stencil Pallas kernel (radius-1, 3x3 mask).
+
+Single-core streaming design per §3.5/Fig. 8: one program instance owns a
+row-tile of one plane; rows stream through VMEM with the same three-slab
+halo trick as the hdiff kernel (radius 1 here). The 3x3 weight mask lives
+in SMEM, so one kernel serves the whole suite — the paper's observation
+that elementary stencils "apply a single stencil pattern throughout the
+grid" becomes a data-driven kernel instead of per-stencil codegen.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+R = 1  # radius
+
+
+def _stencil2d_kernel(prev_ref, cur_ref, next_ref, w_ref, out_ref, *, block_rows, rows):
+    i = pl.program_id(1)
+    cur = cur_ref[0].astype(jnp.float32)
+    x = jnp.concatenate(
+        [prev_ref[0, -R:, :].astype(jnp.float32), cur, next_ref[0, :R, :].astype(jnp.float32)],
+        axis=0,
+    )  # (block_rows + 2, C)
+
+    cols = cur.shape[-1]
+    acc = jnp.zeros((block_rows, cols - 2 * R), jnp.float32)
+    for dr in range(3):
+        for dc in range(3):
+            acc = acc + w_ref[dr, dc] * x[dr : dr + block_rows, dc : cols - 2 * R + dc]
+
+    out = cur.at[:, R:-R].set(acc)
+    gl_row = i * block_rows + jax.lax.broadcasted_iota(jnp.int32, (block_rows, 1), 0)
+    keep = (gl_row < R) | (gl_row >= rows - R)
+    out_ref[0] = jnp.where(keep, cur, out).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def stencil2d_pallas(
+    x: Array, weights: Array, *, block_rows: int = 128, interpret: bool = False
+) -> Array:
+    """Applies a 3x3 stencil mask to ``(depth, rows, cols)`` with boundary
+    passthrough."""
+    depth, rows, cols = x.shape
+    block_rows = min(block_rows, rows)
+    if rows % block_rows:
+        raise ValueError(f"rows={rows} not divisible by block_rows={block_rows}")
+    row_tiles = rows // block_rows
+
+    kernel = functools.partial(_stencil2d_kernel, block_rows=block_rows, rows=rows)
+    spec = lambda fn: pl.BlockSpec((1, block_rows, cols), fn)  # noqa: E731
+    return pl.pallas_call(
+        kernel,
+        grid=(depth, row_tiles),
+        in_specs=[
+            spec(lambda d, i: (d, jnp.maximum(i - 1, 0), 0)),
+            spec(lambda d, i: (d, i, 0)),
+            spec(lambda d, i: (d, jnp.minimum(i + 1, row_tiles - 1), 0)),
+            pl.BlockSpec((3, 3), lambda d, i: (0, 0), memory_space=pltpu.MemorySpace.SMEM),
+        ],
+        out_specs=spec(lambda d, i: (d, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, x, x, weights.astype(jnp.float32))
+
+
+def _jacobi1d_kernel(x_ref, out_ref, *, coeff):
+    x = x_ref[0].astype(jnp.float32)
+    interior = coeff * (x[:-2] + x[1:-1] + x[2:])
+    out = x.at[1:-1].set(interior)
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("coeff", "interpret"))
+def jacobi1d_pallas(x: Array, *, coeff: float = 1.0 / 3.0, interpret: bool = False) -> Array:
+    """1-D 3-point Jacobi over ``(batch, n)``; one batch row per program."""
+    batch, n = x.shape
+    return pl.pallas_call(
+        functools.partial(_jacobi1d_kernel, coeff=coeff),
+        grid=(batch,),
+        in_specs=[pl.BlockSpec((1, n), lambda b: (b, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,50 @@
+"""Public entry points for the elementary-stencil kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stencil2d.kernel import jacobi1d_pallas, stencil2d_pallas
+from repro.kernels.stencil2d.ref import weights_for
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def stencil2d(
+    x: Array,
+    name_or_weights: str | Array,
+    *,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+) -> Array:
+    """Applies a named §3.5 stencil (or an explicit 3x3 mask) to
+    ``(depth, rows, cols)``."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    if isinstance(name_or_weights, str):
+        weights = jnp.asarray(weights_for(name_or_weights))
+    else:
+        weights = name_or_weights
+    if block_rows is None:
+        rows = x.shape[-2]
+        block_rows = rows
+        for cand in range(min(rows, 256), 0, -1):
+            if rows % cand == 0 and cand * x.shape[-1] * 4 <= 4 * 1024 * 1024:
+                block_rows = cand
+                break
+    return stencil2d_pallas(x, weights, block_rows=block_rows, interpret=interpret)
+
+
+def jacobi1d(x: Array, *, coeff: float = 1.0 / 3.0, interpret: bool | None = None) -> Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    out = jacobi1d_pallas(x, coeff=coeff, interpret=interpret)
+    return out[0] if squeeze else out

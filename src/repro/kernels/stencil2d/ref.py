@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the generic 2-D elementary-stencil kernel.
+
+A stencil is defined by a (2R+1, 2R+1) weight mask; output = correlation of
+the input with the mask on the interior, boundary passthrough. This covers
+the whole §3.5 suite: jacobi2d_3pt (column of 1/3), laplacian (star,
+4/-1s), jacobi2d_5pt (star of 0.2), jacobi2d_9pt / seidel sweep (box 1/9).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def stencil2d_ref(x: Array, weights: Array) -> Array:
+    """Correlation with ``weights`` ((2R+1, 2R+1)) on the interior."""
+    k = weights.shape[0]
+    assert weights.shape == (k, k) and k % 2 == 1
+    r = k // 2
+    rows, cols = x.shape[-2], x.shape[-1]
+    acc = jnp.zeros_like(x[..., r : rows - r, r : cols - r], dtype=jnp.float32)
+    for dr in range(-r, r + 1):
+        for dc in range(-r, r + 1):
+            w = weights[dr + r, dc + r]
+            acc = acc + w * x[
+                ..., r + dr : rows - r + dr, r + dc : cols - r + dc
+            ].astype(jnp.float32)
+    return x.at[..., r:-r, r:-r].set(acc.astype(x.dtype))
+
+
+# Canonical weight masks for the §3.5 suite.
+def weights_for(name: str) -> np.ndarray:
+    w = np.zeros((3, 3), np.float32)
+    if name == "jacobi2d_3pt":
+        w[:, 1] = 1.0 / 3.0
+    elif name == "laplacian":
+        w[1, 1] = 4.0
+        w[0, 1] = w[2, 1] = w[1, 0] = w[1, 2] = -1.0
+    elif name == "jacobi2d_5pt":
+        w[1, 1] = w[0, 1] = w[2, 1] = w[1, 0] = w[1, 2] = 0.2
+    elif name in ("jacobi2d_9pt", "seidel2d"):
+        w[:] = 1.0 / 9.0
+    else:
+        raise ValueError(f"unknown elementary stencil {name!r}")
+    return w
+
+
+def jacobi1d_ref(x: Array, coeff: float = 1.0 / 3.0) -> Array:
+    interior = coeff * (
+        x[..., :-2].astype(jnp.float32)
+        + x[..., 1:-1].astype(jnp.float32)
+        + x[..., 2:].astype(jnp.float32)
+    )
+    return x.at[..., 1:-1].set(interior.astype(x.dtype))

@@ -1,0 +1,2 @@
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import wkv6_chunked_ref, wkv6_ref

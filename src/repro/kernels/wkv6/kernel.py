@@ -1,0 +1,94 @@
+"""RWKV-6 WKV Pallas TPU kernel.
+
+Grid = (B, H): each program owns one (batch, head) stream. The (N, N)
+state lives in VMEM scratch for the whole sequence — the direct analogue
+of SPARTA keeping the Laplacian in the accumulator registers while flux
+consumes it (§3.2): HBM sees r/k/v/w streamed in once and y streamed out
+once; the O(T) state round-trips never happen.
+
+Within the kernel the sequence is processed in CHUNKS of ``chunk`` steps:
+the inter-chunk contribution is a dense (C,N)x(N,N) matmul (MXU), and the
+intra-chunk part uses the decay-factored attention form (two (C,C)/(C,N)
+matmuls) — the same chunked formulation as ref.wkv6_chunked_ref, validated
+against the sequential oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
+                 *, chunk: int, t: int):
+    n = r_ref.shape[-1]
+    c = chunk
+    nch = t // c
+    state0 = s0_ref[0, 0].astype(jnp.float32)  # (N, N)
+
+    def chunk_body(i, state):
+        sl = pl.ds(i * c, c)
+        rc = r_ref[0, sl, 0, :].astype(jnp.float32)   # (C, N)
+        kc = k_ref[0, sl, 0, :].astype(jnp.float32)
+        vc = v_ref[0, sl, 0, :].astype(jnp.float32)
+        wc = w_ref[0, sl, 0, :].astype(jnp.float32)
+
+        logw = jnp.log(jnp.maximum(wc, 1e-30))
+        cum = jnp.cumsum(logw, axis=0)                # (C, N)
+        total = cum[-1:]
+        r_dec = rc * jnp.exp(cum - logw)
+        k_dec = kc * jnp.exp(-cum)
+
+        y_inter = r_dec @ state                       # (C, N)
+        att = r_dec @ k_dec.T                         # (C, C)
+        mask = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) > \
+            jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+        att = jnp.where(mask, att, 0.0)
+        y_intra = att @ vc
+        bonus = jnp.sum(rc * u_ref[0].astype(jnp.float32) * kc, axis=-1,
+                        keepdims=True)                # (C, 1)
+        y_bonus = bonus * vc
+
+        k_tail = kc * jnp.exp(total - cum)
+        state = jnp.exp(total[0])[:, None] * state + k_tail.T @ vc
+        y_ref[0, sl, 0, :] = (y_inter + y_intra + y_bonus).astype(y_ref.dtype)
+        return state
+
+    state = jax.lax.fori_loop(0, nch, chunk_body, state0)
+    sout_ref[0, 0] = state.astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(
+    r: Array, k: Array, v: Array, w: Array, u: Array, state0: Array,
+    *, chunk: int = 64, interpret: bool = False,
+) -> tuple[Array, Array]:
+    """r/k/v/w: (B, T, H, N); u: (H, N); state0: (B, H, N, N).
+    Returns (y (B,T,H,N) f32, final state (B,H,N,N) f32)."""
+    b, t, h, n = r.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+
+    seq_spec = pl.BlockSpec((1, t, 1, n), lambda bi, hi: (bi, 0, hi, 0))
+    u_spec = pl.BlockSpec((1, n), lambda bi, hi: (hi, 0))
+    st_spec = pl.BlockSpec((1, 1, n, n), lambda bi, hi: (bi, hi, 0, 0))
+
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk, t=t)
+    y, s_out = pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec, u_spec, st_spec],
+        out_specs=[seq_spec, st_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, h, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, n, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r, k, v, w, u, state0)
+    return y, s_out

@@ -1,0 +1,22 @@
+"""Public entry point for the WKV-6 kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import wkv6_pallas
+
+Array = jax.Array
+
+
+def wkv6(
+    r: Array, k: Array, v: Array, w: Array, u: Array,
+    state0: Array | None = None, *, chunk: int = 64, interpret: bool | None = None,
+) -> tuple[Array, Array]:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, t, h, n = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, n), jnp.float32)
+    return wkv6_pallas(r, k, v, w, u, state0, chunk=chunk, interpret=interpret)

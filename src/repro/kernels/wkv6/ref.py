@@ -1,0 +1,81 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence.
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+Shapes: r/k/v/w (B, T, H, N) with head size N; u (H, N);
+state (B, H, N, N) keyed as state[k_dim, v_dim].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def wkv6_ref(r: Array, k: Array, v: Array, w: Array, u: Array,
+             state0: Array | None = None) -> tuple[Array, Array]:
+    b, t, h, n = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[..., :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def wkv6_chunked_ref(r, k, v, w, u, state0=None, chunk: int = 32):
+    """Chunked parallel form (GLA-style): identical math, O(T/chunk)
+    sequential steps with dense intra-chunk matmuls. The pure-JAX
+    optimization used by the rwkv6 perf pass; oracle for the kernel too."""
+    b, t, h, n = r.shape
+    assert t % chunk == 0
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, n), jnp.float32)
+    c = chunk
+    nch = t // c
+    rs = r.astype(jnp.float32).reshape(b, nch, c, h, n)
+    ks = k.astype(jnp.float32).reshape(b, nch, c, h, n)
+    vs = v.astype(jnp.float32).reshape(b, nch, c, h, n)
+    ws = w.astype(jnp.float32).reshape(b, nch, c, h, n)
+
+    def chunk_step(state, inp):
+        rc, kc, vc, wc = inp  # (B, C, H, N)
+        logw = jnp.log(jnp.maximum(wc, 1e-30))
+        cum = jnp.cumsum(logw, axis=1)              # prod_{tau<=t} w
+        total = cum[:, -1:]                          # (B,1,H,N)
+        # inter-chunk: y_inter[t] = (r_t * prod_{tau<t} w) @ S_in
+        r_dec = rc * jnp.exp(cum - logw)            # r_t * prod_{tau<t}
+        y_inter = jnp.einsum("bchk,bhkv->bchv", r_dec, state)
+        # intra-chunk (strictly earlier positions s < t):
+        #   A[t,s] = r_t . (k_s * prod_{s<tau<t} w) = (r_t*cum_t/w_t).(k_s/cum_s)
+        k_dec = kc * jnp.exp(-cum)                  # k_s / prod_{tau<=s}
+        att = jnp.einsum("bchk,bshk->bhcs", r_dec, k_dec)
+        mask = jnp.tril(jnp.ones((c, c), bool), -1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhcs,bshv->bchv", att, vc)
+        # current-step bonus: r_t . (u * k_t) v_t
+        bonus = jnp.einsum("bchk,bshk->bhcs", rc * u[None, None], kc)
+        diag = jnp.eye(c, dtype=bool)
+        bonus = jnp.where(diag[None, None], bonus, 0.0)
+        y_bonus = jnp.einsum("bhcs,bshv->bchv", bonus, vc)
+        # state update: S_out = (prod w) * S_in + sum_s (prod_{tau>s} w) k_s v_s
+        k_tail = kc * jnp.exp(total - cum)          # k_s * prod_{tau>s}
+        s_new = jnp.exp(total)[:, 0, :, :, None] * state + jnp.einsum(
+            "bshk,bshv->bhkv", k_tail, vc
+        )
+        return s_new, y_inter + y_intra + y_bonus
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rs, ks, vs, ws))
+    state, ys = jax.lax.scan(chunk_step, state0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, n)
+    return y, state

@@ -1,0 +1,311 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST run in a fresh process: the XLA_FLAGS line above executes before any
+other import (jax locks the device count on first init).
+
+Per cell this produces artifacts/dryrun/<arch>__<shape>__<mesh>.json with:
+
+  * memory_analysis of the FULL model compile (proves the cell fits),
+  * cost_analysis, corrected for XLA's while-loop trip-count blindness by
+    extrapolating from two UNROLLED variants (1-superblock and
+    2-superblock models): per_super = cost(2P) - cost(P);
+    total = cost(P) + per_super * (n_super - 1 + tail/P),
+  * collective bytes parsed from the unrolled variants' post-SPMD HLO and
+    extrapolated the same way,
+  * the analytic §3.1-style model (launch/analytic.py) as cross-check,
+  * the three roofline terms + dominant bottleneck + useful-FLOPs ratio.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --skip-existing
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import numpy as np
+
+import jax
+
+# TPU v5e constants (per the brief).
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_F32 = PEAK_FLOPS_BF16 / 2
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+OP_RE = re.compile(
+    r"=\s*(?:\()?\s*(?P<shapes>(?:\w+\[[0-9,]*\][^)]*?)?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|s32|u32|s16|u16|s8|u8|pred|s64|u64)\[([0-9,]*)\]")
+GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [n_groups, group_size]<=[total]
+    m = GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-chip wire bytes per collective kind, from post-SPMD HLO.
+
+    Result types appear on the LHS of each instruction; ring cost model:
+      all-reduce(B, g):        2B(g-1)/g
+      all-gather(out B):        B(g-1)/g
+      reduce-scatter(out B,g):  B(g-1)       (input = B*g)
+      all-to-all(B, g):         B(g-1)/g
+      collective-permute(B):    B
+    """
+    totals: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "= " not in line:
+            continue
+        m = re.search(
+            r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+            r"(?:-start|-done)?\(", line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # paired with -start; count once
+        kind = m.group(1)
+        lhs = line.split(m.group(0))[0]
+        res_shapes = SHAPE_RE.findall(lhs)
+        res_bytes = sum(_shape_bytes(d, s) for d, s in res_shapes)
+        g = _group_size(line)
+        if g <= 1:
+            moved = 0.0
+        elif kind == "all-reduce":
+            moved = 2.0 * res_bytes * (g - 1) / g
+        elif kind == "all-gather":
+            moved = res_bytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            moved = float(res_bytes) * (g - 1)
+        elif kind == "all-to-all":
+            moved = res_bytes * (g - 1) / g
+        else:  # collective-permute
+            moved = float(res_bytes)
+        totals[kind] = totals.get(kind, 0.0) + moved
+        counts[kind] = counts.get(kind, 0) + 1
+    totals["total"] = sum(v for k, v in totals.items() if k != "total")
+    return {"bytes": totals, "counts": counts}
+
+
+def _compile_cell(cfg, shape, mesh, microbatches=None):
+    from repro.launch.inputs import make_lowering_spec
+
+    spec = make_lowering_spec(cfg, shape, mesh, microbatches=microbatches)
+    jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                     out_shardings=spec.out_shardings,
+                     donate_argnums=spec.donate)
+    with jax.set_mesh(mesh):
+        t0 = time.time()
+        lowered = jitted.lower(*spec.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return spec, compiled, t_lower, t_compile
+
+
+def _cost_of(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
+             *, overrides=None, tag_suffix: str = "") -> dict:
+    from repro.configs import get_config, get_shape
+    from repro.launch.analytic import cell_flops, cell_hbm_bytes
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = int(np.prod(mesh.devices.shape))
+
+    # ---- 1. full model: compile proof + memory analysis --------------------
+    spec, compiled, t_lower, t_compile = _compile_cell(cfg, shape, mesh)
+    mem = compiled.memory_analysis()
+    mem_d = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+    }
+    raw_cost = _cost_of(compiled)
+    hlo_len = len(compiled.as_text())
+    del compiled
+
+    # ---- 2. unrolled variants for trip-count-corrected cost ----------------
+    plen = len(cfg.block_pattern)
+    tail_len = cfg.n_layers - cfg.n_super * plen
+    var = dict(unroll_layers=True, flash_unroll=True)
+    cfg_a = dataclasses.replace(cfg, n_layers=plen, **var)
+    cfg_b = dataclasses.replace(cfg, n_layers=2 * plen, **var)
+    # Variants run microbatches=1: gradient accumulation is a fori_loop
+    # (trip-blind in cost analysis) and total flops/bytes are identical.
+    _, comp_a, _, t_a = _compile_cell(cfg_a, shape, mesh, microbatches=1)
+    cost_a = _cost_of(comp_a)
+    coll_a = parse_collective_bytes(comp_a.as_text())
+    del comp_a
+    _, comp_b, _, t_b = _compile_cell(cfg_b, shape, mesh, microbatches=1)
+    cost_b = _cost_of(comp_b)
+    coll_b = parse_collective_bytes(comp_b.as_text())
+    del comp_b
+
+    reps = cfg.n_super - 1 + tail_len / plen
+    flops_dev = cost_a["flops"] + max(cost_b["flops"] - cost_a["flops"], 0.0) * reps
+    bytes_dev = cost_a["bytes"] + max(cost_b["bytes"] - cost_a["bytes"], 0.0) * reps
+    coll_dev = (
+        coll_a["bytes"]["total"]
+        + max(coll_b["bytes"]["total"] - coll_a["bytes"]["total"], 0.0) * reps
+    )
+    coll_detail = {
+        k: coll_a["bytes"].get(k, 0.0)
+        + max(coll_b["bytes"].get(k, 0.0) - coll_a["bytes"].get(k, 0.0), 0.0) * reps
+        for k in set(coll_a["bytes"]) | set(coll_b["bytes"])
+    }
+
+    # ---- 3. analytic cross-check -------------------------------------------
+    ana = cell_flops(cfg, shape)
+    ana_bytes = cell_hbm_bytes(cfg, shape)
+
+    # ---- 4. roofline terms ---------------------------------------------------
+    peak = PEAK_FLOPS_BF16 if cfg.compute_dtype == "bfloat16" else PEAK_FLOPS_F32
+    compute_s = flops_dev / peak
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    dominant = max(
+        [("compute", compute_s), ("memory", memory_s), ("collective", collective_s)],
+        key=lambda kv: kv[1],
+    )[0]
+    model_flops = ana["reference_nd"]
+    hlo_total = flops_dev * n_dev
+    result = {
+        "cell": f"{arch}__{shape_name}__{mesh_kind}{tag_suffix}",
+        "meta": spec.meta,
+        "status": "ok",
+        "timings_s": {"lower": round(t_lower, 2), "compile": round(t_compile, 2),
+                      "variant_a_compile": round(t_a, 2), "variant_b_compile": round(t_b, 2)},
+        "memory_analysis": mem_d,
+        "cost_analysis": {
+            "raw_flops_per_device": raw_cost["flops"],
+            "raw_bytes_per_device": raw_cost["bytes"],
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+            "extrapolation_reps": reps,
+        },
+        "collectives": {"bytes_per_device": coll_detail, "total": coll_dev,
+                        "counts_variant_b": coll_b["counts"]},
+        "analytic": {"flops_global": ana["analytic"], "hbm_bytes_global": ana_bytes,
+                     "flops_per_device": ana["analytic"] / n_dev,
+                     "hlo_over_analytic": (hlo_total / ana["analytic"]) if ana["analytic"] else None},
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": dominant,
+            "model_flops": model_flops,
+            "hlo_flops_total": hlo_total,
+            "useful_flops_ratio": model_flops / hlo_total if hlo_total else None,
+        },
+        "hlo_bytes": hlo_len,
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{arch}__{shape_name}__{mesh_kind}{tag_suffix}.json").write_text(
+        json.dumps(result, indent=1)
+    )
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import all_cells
+
+    out_dir = Path(args.out)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            tag = f"{arch}__{shape}__{mk}"
+            path = out_dir / f"{tag}.json"
+            if args.skip_existing and path.exists():
+                try:
+                    if json.loads(path.read_text()).get("status") == "ok":
+                        print(f"[dryrun] {tag}: exists, skipping", flush=True)
+                        continue
+                except Exception:
+                    pass
+            try:
+                r = run_cell(arch, shape, mk, out_dir)
+                rf = r["roofline"]
+                print(
+                    f"[dryrun] {tag}: OK compile={r['timings_s']['compile']}s "
+                    f"compute={rf['compute_s']:.3e}s memory={rf['memory_s']:.3e}s "
+                    f"coll={rf['collective_s']:.3e}s dom={rf['dominant']} "
+                    f"useful={rf['useful_flops_ratio']:.2f} "
+                    f"temp={r['memory_analysis']['temp_bytes']/2**30:.1f}GiB",
+                    flush=True,
+                )
+            except Exception as e:
+                failures += 1
+                err = {"cell": tag, "status": "error", "error": repr(e),
+                       "traceback": traceback.format_exc()}
+                out_dir.mkdir(parents=True, exist_ok=True)
+                path.write_text(json.dumps(err, indent=1))
+                print(f"[dryrun] {tag}: FAIL {e!r}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,214 @@
+"""input_specs: ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+For each (arch, shape) cell this module builds:
+  * the function to lower (train_step / prefill_step / serve_step),
+  * abstract inputs (params, optimizer state, batch / cache / token),
+  * in/out shardings from the logical-axis rules.
+
+No device allocation happens anywhere here (weak-type-correct structs only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.sharding import sharding_for, tree_shardings
+from repro.models import build_cache, build_lm, lm_decode, lm_loss, lm_prefill
+from repro.models.lm import _block_cache_axes  # cache logical axes
+from repro.optim.optimizers import (
+    make_optimizer,
+    opt_state_axes,
+    optimizer_config_from_model,
+)
+
+Struct = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class LoweringSpec:
+    """Everything jit().lower() needs for one cell."""
+
+    name: str
+    fn: Callable
+    args: tuple            # abstract args (pytrees of ShapeDtypeStruct)
+    in_shardings: tuple
+    out_shardings: Any
+    meta: dict
+    donate: tuple = ()     # donated arg indices (train: params+opt alias)
+
+
+def _param_shardings(cfg: ModelConfig, mesh: Mesh, mode: str):
+    params_abs, axes = build_lm(cfg, key=None)
+    shapes = jax.tree.map(lambda s: s.shape, params_abs)
+    return params_abs, tree_shardings(axes, mesh, shapes, mode=mode)
+
+
+def _batch_structs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                   microbatches: int = 1):
+    b, s = shape.global_batch, shape.seq_len
+
+    def mk(shp, dtype):
+        if microbatches > 1:
+            shp = (microbatches, shp[0] // microbatches) + shp[1:]
+            ax = (None, "batch") + (None,) * (len(shp) - 2)
+        else:
+            ax = ("batch",) + (None,) * (len(shp) - 1)
+        return Struct(shp, dtype), sharding_for(ax, mesh, shp)
+
+    if cfg.frontend == "audio":
+        toks, t_sh = mk((b, s, cfg.d_model), jnp.float32)
+    else:
+        toks, t_sh = mk((b, s), jnp.int32)
+    labels, l_sh = mk((b, s), jnp.int32)
+    batch = {"tokens": toks, "labels": labels}
+    shard = {"tokens": t_sh, "labels": l_sh}
+    if cfg.frontend == "vision":
+        m, m_sh = mk((b, cfg.num_media_tokens, cfg.d_model), jnp.float32)
+        batch["memory"] = m
+        shard["memory"] = m_sh
+    return batch, shard
+
+
+def _cache_structs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    cache_abs, cache_axes = build_cache(cfg, shape.global_batch, shape.seq_len, abstract=True)
+    shapes = jax.tree.map(lambda s: s.shape, cache_abs)
+    shardings = tree_shardings(cache_axes, mesh, shapes, mode="decode")
+    return cache_abs, shardings
+
+
+def microbatches_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     budget_bytes: float = 4e9) -> int:
+    """Gradient-accumulation factor so remat-saved activations
+    (B_micro_local x S x D x 2B x n_layers) fit the per-chip budget —
+    the standard production lever for deep stacks at 16 GiB/chip."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("pod", 1) * sizes.get("data", 1)
+    b_loc = max(shape.global_batch // dp, 1)
+    # RWKV's time-mix runs in f32 (decay/state numerics): 2x the bytes.
+    act_bytes = 4 if cfg.family == "ssm" else 2
+    per_sample = shape.seq_len * cfg.d_model * act_bytes * cfg.n_layers
+    mb = 1
+    while mb < b_loc and (b_loc // mb) * per_sample > budget_bytes:
+        mb *= 2
+    return mb
+
+
+def make_lowering_spec(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       *, microbatches: int | None = None) -> LoweringSpec:
+    meta = {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+    }
+
+    if shape.kind == "train":
+        from repro.train.loop import make_train_step
+
+        if microbatches is None:
+            microbatches = microbatches_for(cfg, shape, mesh)
+        meta["microbatches"] = microbatches
+        opt_cfg = optimizer_config_from_model(cfg)
+        params_abs, p_sh = _param_shardings(cfg, mesh, "train")
+        opt_init, _ = make_optimizer(opt_cfg)
+        opt_abs = jax.eval_shape(opt_init, params_abs)
+        o_axes = opt_state_axes(opt_cfg, build_lm(cfg, key=None)[1], params_abs)
+        o_sh = tree_shardings(o_axes, mesh, jax.tree.map(lambda s: s.shape, opt_abs))
+        batch_abs, b_sh = _batch_structs(cfg, shape, mesh, microbatches)
+        step = make_train_step(cfg, opt_cfg, microbatches=microbatches)
+        return LoweringSpec(
+            name=f"{cfg.name}:{shape.name}:train_step",
+            fn=step,
+            args=(params_abs, opt_abs, batch_abs),
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            meta=meta,
+            donate=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        params_abs, p_sh = _param_shardings(cfg, mesh, "decode")
+        batch_abs, b_sh = _batch_structs(cfg, shape, mesh)
+        cache_abs, c_sh = _cache_structs(cfg, shape, mesh)
+
+        def prefill_step(params, tokens, cache, memory=None):
+            return lm_prefill(cfg, params, tokens, cache, memory=memory)
+
+        args = [params_abs, batch_abs["tokens"], cache_abs]
+        in_sh = [p_sh, b_sh["tokens"], c_sh]
+        if cfg.frontend == "vision":
+            args.append(batch_abs["memory"])
+            in_sh.append(b_sh["memory"])
+        logits_sh = sharding_for(("batch", None), mesh,
+                                 (shape.global_batch, cfg.vocab_size))
+        return LoweringSpec(
+            name=f"{cfg.name}:{shape.name}:prefill_step",
+            fn=prefill_step,
+            args=tuple(args),
+            in_shardings=tuple(in_sh),
+            out_shardings=(logits_sh, c_sh),
+            meta=meta,
+        )
+
+    if shape.kind == "decode":
+        params_abs, p_sh = _param_shardings(cfg, mesh, "decode")
+        cache_abs, c_sh = _cache_structs(cfg, shape, mesh)
+        b = shape.global_batch
+        token = Struct((b,), jnp.int32)
+        t_sh = sharding_for(("batch",), mesh, (b,))
+        pos = Struct((), jnp.int32)
+        pos_sh = NamedSharding(mesh, P())
+
+        def serve_step(params, token, cache, pos):
+            return lm_decode(cfg, params, token, cache, pos)
+
+        logits_sh = sharding_for(("batch", None), mesh, (b, cfg.vocab_size))
+        return LoweringSpec(
+            name=f"{cfg.name}:{shape.name}:serve_step",
+            fn=serve_step,
+            args=(params_abs, token, cache_abs, pos),
+            in_shardings=(p_sh, t_sh, c_sh, pos_sh),
+            out_shardings=(logits_sh, c_sh),
+            meta=meta,
+        )
+
+    raise ValueError(shape.kind)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """The brief's entry point: ShapeDtypeStruct stand-ins for every model
+    input of the given cell (without shardings; see make_lowering_spec for
+    the mesh-aware version)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.frontend == "audio":
+            out = {"tokens": Struct((b, s, cfg.d_model), jnp.float32)}
+        else:
+            out = {"tokens": Struct((b, s), jnp.int32)}
+        out["labels"] = Struct((b, s), jnp.int32)
+        if cfg.frontend == "vision":
+            out["memory"] = Struct((b, cfg.num_media_tokens, cfg.d_model), jnp.float32)
+        return out
+    if shape.kind == "prefill":
+        out = input_specs(cfg, dataclasses.replace(shape, kind="train"))
+        out.pop("labels")
+        out["cache"], _ = build_cache(cfg, b, s, abstract=True)
+        return out
+    if shape.kind == "decode":
+        cache, _ = build_cache(cfg, b, s, abstract=True)
+        return {
+            "token": Struct((b,), jnp.int32),
+            "cache": cache,
+            "pos": Struct((), jnp.int32),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,73 @@
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch glm4-9b \
+      --steps 1000 --ckpt-dir /ckpts/glm4 [--smoke]
+
+On a real TPU slice this process runs per host under `jax.distributed`
+(initialize() is called when JAX_COORDINATOR_ADDRESS is set); on this CPU
+container use --smoke for the reduced config. XLA collective/compute
+overlap flags for the latency-hiding scheduler are set here — they are the
+"overlap memory operations with arithmetic" discipline of §3.2 at pod scale.
+"""
+
+import os
+
+# Latency-hiding scheduler: overlap collectives with compute (TPU).
+os.environ.setdefault(
+    "LIBTPU_INIT_ARGS",
+    "--xla_enable_async_collective_permute=true "
+    "--xla_tpu_enable_async_collective_fusion=true",
+)
+
+import argparse
+import dataclasses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--grad-compression", choices=["none", "bf16"], default="none")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--data", default="synthetic", help="synthetic | path to token file")
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_COORDINATOR_ADDRESS"):
+        import jax
+
+        jax.distributed.initialize()
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.data import DataConfig, make_dataset
+    from repro.launch.mesh import make_host_mesh
+    from repro.train import TrainConfig, train
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.smoke:
+        cfg = dataclasses.replace(cfg, remat=False)
+    mesh = make_host_mesh()
+
+    dc = DataConfig(
+        seq_len=args.seq,
+        global_batch=args.global_batch,
+        vocab_size=cfg.vocab_size,
+        kind="synthetic" if args.data == "synthetic" else "file",
+        path="" if args.data == "synthetic" else args.data,
+    )
+    tc = TrainConfig(
+        steps=args.steps,
+        microbatches=args.microbatches,
+        ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir,
+        grad_compression=args.grad_compression,
+    )
+    train(cfg, tc, mesh, make_dataset(dc))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model zoo: composable LM blocks covering the 10 assigned architectures."""
+
+from repro.models.lm import (
+    build_cache,
+    build_lm,
+    lm_decode,
+    lm_forward,
+    lm_loss,
+    lm_prefill,
+)

@@ -1,0 +1,829 @@
+"""Transformer building blocks: norms, RoPE, GQA attention, FFN, MoE.
+
+Conventions
+-----------
+* Params are plain dicts; every ``init_*`` returns ``(params, axes)`` where
+  ``axes`` mirrors the params pytree with tuples of *logical* axis names
+  (see repro.dist.sharding). ``None`` entries mean replicated.
+* Params are stored in ``cfg.param_dtype`` and cast to ``cfg.compute_dtype``
+  at use; reductions (softmax, norms, router) run in f32.
+* Attention caches are dicts ``{"k","v"}`` of shape ``(B, L, K, Dh)`` plus a
+  shared ``slot_pos (L,)`` table of absolute positions (-1 = empty). The
+  same mechanism serves full caches (L = max context) and sliding-window
+  ring buffers (L = window, slot = pos % window).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Array = jax.Array
+
+
+def dt(cfg: ModelConfig, kind: str = "param"):
+    return jnp.dtype(cfg.param_dtype if kind == "param" else cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Param builder.
+# ---------------------------------------------------------------------------
+
+
+class PBuilder:
+    """Accumulates (params, logical_axes) pairs with fan-in scaled init.
+
+    ``abstract=True`` produces ``jax.ShapeDtypeStruct`` leaves instead of
+    arrays (no RNG, no allocation) — the dry-run path. The same init code
+    serves both modes so shapes/axes can never diverge.
+    """
+
+    def __init__(self, key: Array | None, dtype, *, abstract: bool = False):
+        self._key = key
+        self.dtype = dtype
+        self.abstract = abstract or key is None
+        self.params: dict[str, Any] = {}
+        self.axes: dict[str, Any] = {}
+
+    def key(self) -> Array | None:
+        if self.abstract:
+            return None
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def add(self, name, shape, axes, *, init="fan_in", scale=1.0, fan_axes=None):
+        assert len(shape) == len(axes), (name, shape, axes)
+        if self.abstract:
+            val = jax.ShapeDtypeStruct(tuple(shape), self.dtype)
+        elif init == "zeros":
+            val = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            val = jnp.ones(shape, self.dtype)
+        elif init == "const":
+            val = jnp.full(shape, scale, self.dtype)
+        else:
+            fan_in = 1
+            for i in (fan_axes if fan_axes is not None else range(len(shape) - 1)):
+                fan_in *= shape[i]
+            std = scale / math.sqrt(max(fan_in, 1))
+            val = (jax.random.normal(self.key(), shape, jnp.float32) * std).astype(self.dtype)
+        self.params[name] = val
+        self.axes[name] = tuple(axes)
+        return val
+
+    def sub(self, name, builder_out):
+        params, axes = builder_out
+        self.params[name] = params
+        self.axes[name] = axes
+
+    def build(self):
+        return self.params, self.axes
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, key: Array):
+    b = PBuilder(key, dt(cfg))
+    b.add("scale", (cfg.d_model,), (None,), init="ones")
+    if cfg.norm == "layernorm":
+        b.add("bias", (cfg.d_model,), (None,), init="zeros")
+    return b.build()
+
+
+def apply_norm(cfg: ModelConfig, p, x: Array) -> Array:
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mean = x32.mean(-1, keepdims=True)
+        var = ((x32 - mean) ** 2).mean(-1, keepdims=True)
+        y = (x32 - mean) * jax.lax.rsqrt(var + 1e-6)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = (x32**2).mean(-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE.
+# ---------------------------------------------------------------------------
+
+
+def rope_rotate(x: Array, positions: Array, theta: float) -> Array:
+    """Applies rotary embedding. x: (B, S, H, Dh); positions: (S,)."""
+    half = x.shape[-1] // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs       # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]                       # (1, S, 1, half)
+    sin = jnp.sin(ang)[None, :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., :half], x32[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (self / cross, full / sliding window, GQA, cache).
+# ---------------------------------------------------------------------------
+
+
+def init_attention(cfg: ModelConfig, key: Array, *, cross: bool = False):
+    d, h, k, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.pad_heads_to:
+        # TP-divisibility padding: extra heads init at 0 (wq AND wo), so
+        # they contribute exactly nothing while letting `heads` shard.
+        h = max(h, cfg.pad_heads_to)
+    b = PBuilder(key, dt(cfg))
+    b.add("wq", (d, h, dh), ("fsdp", "heads", "head_dim"))
+    b.add("wk", (d, k, dh), ("fsdp", "kv_heads", "head_dim"))
+    b.add("wv", (d, k, dh), ("fsdp", "kv_heads", "head_dim"))
+    b.add("wo", (h, dh, d), ("heads", "head_dim", "fsdp"))
+    if cfg.qkv_bias:
+        b.add("bq", (h, dh), ("heads", "head_dim"), init="zeros")
+        b.add("bk", (k, dh), ("kv_heads", "head_dim"), init="zeros")
+        b.add("bv", (k, dh), ("kv_heads", "head_dim"), init="zeros")
+    if cross:
+        b.add("gate", (), (), init="zeros")  # tanh-gated cross-attn (llama-vision)
+    return b.build()
+
+
+def _project_qkv(cfg, p, x, memory=None):
+    cdt = dt(cfg, "compute")
+    xq = x.astype(cdt)
+    src = (memory if memory is not None else x).astype(cdt)
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(cdt))
+    kk = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(cdt))
+    if "bq" in p:
+        q = q + p["bq"].astype(cdt)
+        kk = kk + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    return q, kk, v
+
+
+def _gqa_scores(q: Array, k: Array) -> Array:
+    """q: (B,S,H,Dh), k: (B,L,K,Dh) -> scores (B, H, S, L) with GQA groups."""
+    b_, s, h, dh = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    qg = q.reshape(b_, s, kheads, g, dh)
+    sc = jnp.einsum("bskgd,blkd->bkgsl", qg, k)
+    return sc.reshape(b_, h, s, k.shape[1])
+
+
+def _gqa_out(w: Array, v: Array) -> Array:
+    """w: (B,H,S,L), v: (B,L,K,Dh) -> (B,S,H,Dh)."""
+    b_, h, s, _ = w.shape
+    kheads = v.shape[2]
+    g = h // kheads
+    wg = w.reshape(b_, kheads, g, s, w.shape[-1])
+    out = jnp.einsum("bkgsl,blkd->bskgd", wg, v)
+    return out.reshape(b_, s, h, v.shape[-1])
+
+
+# Sequence length above which the no-cache path switches to the chunked
+# online-softmax (flash-style) formulation. Pure XLA (lax.scan over KV
+# blocks), so it lowers for the CPU dry-run AND keeps prefill memory at
+# O(S * chunk) instead of O(S^2).
+FLASH_THRESHOLD = 2048
+FLASH_CHUNK = 512
+
+
+def _chunk_mask(rows: Array, i, chunk: int, causal: bool, window: int) -> Array:
+    cols = i * chunk + jnp.arange(chunk)
+    mask = jnp.ones((rows.shape[0], chunk), bool)
+    if causal:
+        mask &= cols[None, :] <= rows[:, None]
+    if window:
+        mask &= cols[None, :] > rows[:, None] - window
+    return mask
+
+
+def _flash_fwd_scan(q, k, v, *, causal, window, scale, chunk, unroll, row_offset=0):
+    """Returns (out (B,H,Sq,Dh) f32, lse (B,H,Sq) f32).
+
+    ``k``/``v`` may be longer than ``q`` (Sq != Skv); ``row_offset`` places
+    q's rows at absolute positions ``row_offset + arange(Sq)`` within the kv
+    axis — how the blocked sliding-window path expresses "this Q block sits
+    after its halo block".
+    """
+    b_, s, h, dh = q.shape
+    s_kv = k.shape[1]
+    n_chunks = s_kv // chunk
+    rows = row_offset + jnp.arange(s)
+
+    def body(carry, i):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, i * chunk, chunk, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, i * chunk, chunk, 1)
+        sc = jnp.einsum("bshd,bchd->bhsc", q, ks).astype(jnp.float32) * scale
+        mask = _chunk_mask(rows, i, chunk, causal, window)
+        sc = jnp.where(mask[None, None], sc, -1e30)
+        m_new = jnp.maximum(m, sc.max(-1))
+        p = jnp.where(mask[None, None], jnp.exp(sc - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhsc,bchd->bhsd", p.astype(vs.dtype), vs
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((b_, h, s), -1e30, jnp.float32),
+        jnp.zeros((b_, h, s), jnp.float32),
+        jnp.zeros((b_, h, s, dh), jnp.float32),
+    )
+    if unroll:
+        carry = init
+        for i in range(n_chunks):
+            carry, _ = body(carry, jnp.int32(i))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]
+    lse = m + jnp.log(l)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash_core(q, k, v, causal, window, scale, chunk, unroll, row_offset=0):
+    """Flash attention with recompute-based backward (memory O(S*chunk)).
+
+    The transformer analogue of the paper's fused Laplacian->flux chain:
+    the S x S score matrix never exists in HBM; each KV tile is streamed
+    once and folded into running (max, denom, acc) registers — the
+    accumulator-residency discipline of §3.2, in both directions of AD.
+    q: (B,Sq,H,Dh); k/v: (B,Skv,H,Dh) with KV already repeated to H heads.
+    """
+    out, _ = _flash_fwd_scan(q, k, v, causal=causal, window=window, scale=scale,
+                             chunk=chunk, unroll=unroll, row_offset=row_offset)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B,Sq,H,Dh)
+
+
+def _flash_core_fwd(q, k, v, causal, window, scale, chunk, unroll, row_offset=0):
+    out, lse = _flash_fwd_scan(q, k, v, causal=causal, window=window, scale=scale,
+                               chunk=chunk, unroll=unroll, row_offset=row_offset)
+    out_bshd = jnp.moveaxis(out, 1, 2).astype(q.dtype)
+    return out_bshd, (q, k, v, out_bshd, lse)
+
+
+def _flash_core_bwd(causal, window, scale, chunk, unroll, row_offset, res, g):
+    q, k, v, out, lse = res
+    b_, s, h, dh = q.shape
+    s_kv = k.shape[1]
+    rows = row_offset + jnp.arange(s)
+    n_chunks = s_kv // chunk
+    g32 = g.astype(jnp.float32)
+    # delta[b,h,s] = sum_d dOut * Out  (rowwise correction term)
+    delta = jnp.einsum("bshd,bshd->bhs", g32, out.astype(jnp.float32))
+
+    def body(dq, i):
+        ks = jax.lax.dynamic_slice_in_dim(k, i * chunk, chunk, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, i * chunk, chunk, 1)
+        sc = jnp.einsum("bshd,bchd->bhsc", q, ks).astype(jnp.float32) * scale
+        mask = _chunk_mask(rows, i, chunk, causal, window)
+        p = jnp.where(mask[None, None], jnp.exp(sc - lse[..., None]), 0.0)  # (B,H,S,C)
+        dv_c = jnp.einsum("bhsc,bshd->bchd", p, g32)
+        dp = jnp.einsum("bshd,bchd->bhsc", g32, vs.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bhsc,bchd->bshd", ds, ks.astype(jnp.float32))
+        dk_c = jnp.einsum("bhsc,bshd->bchd", ds, q.astype(jnp.float32))
+        return dq, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((b_, s, h, dh), jnp.float32)
+    if unroll:
+        dq, dks, dvs = dq0, [], []
+        for i in range(n_chunks):
+            dq, (dk_c, dv_c) = body(dq, jnp.int32(i))
+            dks.append(dk_c)
+            dvs.append(dv_c)
+        dk = jnp.concatenate(dks, axis=1)
+        dv = jnp.concatenate(dvs, axis=1)
+    else:
+        dq, (dks, dvs) = jax.lax.scan(body, dq0, jnp.arange(n_chunks))
+        dk = jnp.moveaxis(dks, 0, 1).reshape(b_, s_kv, h, dh)
+        dv = jnp.moveaxis(dvs, 0, 1).reshape(b_, s_kv, h, dh)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def _flash_attention(
+    q: Array, k: Array, v: Array, *, causal: bool, window: int, scale: float,
+    chunk: int = FLASH_CHUNK, unroll: bool = False,
+) -> Array:
+    """Flash attention wrapper: repeats GQA KV heads to H then runs the
+    custom-VJP core. Causal sliding-window attention at S >> window takes
+    the BLOCKED LOCAL path instead (see _local_attention_blocked)."""
+    b_, s, h, dh = q.shape
+    kheads = k.shape[2]
+    if kheads != h:
+        k = jnp.repeat(k, h // kheads, axis=2)
+        v = jnp.repeat(v, h // kheads, axis=2)
+    if causal and window and _pick_block_size(s, window):
+        return _local_attention_blocked(q, k, v, window=window, scale=scale)
+    assert s % chunk == 0, (s, chunk)
+    return _flash_core(q, k, v, causal, window, scale, chunk, unroll)
+
+
+def _pick_block_size(s: int, window: int, target_blocks: int = 16) -> int | None:
+    """Sub-block size for windowed attention: the largest divisor of both
+    ``window`` and ``s`` that still yields >= target_blocks blocks (so the
+    block axis fills the model mesh axis); falls back to the smallest
+    feasible divisor, or None if blocking is impossible/pointless."""
+    min_bs = min(128, max(window // 2, 1))
+    cands = [b for b in range(min_bs, window + 1)
+             if window % b == 0 and s % b == 0 and s // b >= 2]
+    if not cands:
+        return None
+    good = [b for b in cands if s // b >= target_blocks]
+    return max(good) if good else min(cands)
+
+
+def _local_attention_blocked(
+    q: Array, k: Array, v: Array, *, window: int, scale: float
+) -> Array:
+    """Causal sliding-window attention via sub-block + halo — the paper's
+    B-block decomposition applied to the sequence axis.
+
+    The sequence is tiled into sub-blocks of ``window // 2``; each Q block
+    attends to (2 previous blocks ++ own block) — its radius-2 halo, like
+    hdiff's radius-2 stencil. Compute is O(S * 1.5*window) instead of the
+    O(S^2) a masked full pass costs (8x FLOP cut for starcoder2 prefill).
+
+    Crucially the BLOCK axis is a free batch dim, constrained to shard over
+    `model`: this is sequence parallelism that works for ANY head count —
+    starcoder2 (24 heads) and recurrentgemma (10 heads) cannot shard heads
+    16-way, and without this their attention replicates across the model
+    axis (16x redundant compute, the baseline's worst useful-FLOPs cell).
+    """
+    from repro.dist.sharding import constrain
+
+    b_, s, h, dh = q.shape
+    bs = _pick_block_size(s, window)
+    r = window // bs           # halo radius in blocks
+    nb = s // bs
+    qb = q.reshape(b_, nb, bs, h, dh)
+    kb = k.reshape(b_, nb, bs, h, dh)
+    vb = v.reshape(b_, nb, bs, h, dh)
+    qb = constrain(qb, ("batch", "blocks", None, None, None))
+    kb = constrain(kb, ("batch", "blocks", None, None, None))
+    vb = constrain(vb, ("batch", "blocks", None, None, None))
+
+    def shift(x, by):
+        pad = jnp.zeros_like(x[:, :by])
+        return jnp.concatenate([pad, x[:, :-by]], axis=1) if by else x
+
+    # context = (prev_r ++ ... ++ prev_1 ++ cur): (B, nb, (r+1)*bs, H, Dh)
+    kk = jnp.concatenate([shift(kb, i) for i in range(r, -1, -1)], axis=2)
+    vv = jnp.concatenate([shift(vb, i) for i in range(r, -1, -1)], axis=2)
+    kk = constrain(kk, ("batch", "blocks", None, None, None))
+    vv = constrain(vv, ("batch", "blocks", None, None, None))
+
+    sc = jnp.einsum("bnqhd,bnkhd->bnhqk", qb, kk).astype(jnp.float32) * scale
+    rows = jnp.arange(bs)[:, None]            # q position within block
+    cols = jnp.arange((r + 1) * bs)[None, :]  # position within halo context
+    rel = cols - r * bs - rows                # kv offset relative to q
+    mask = (rel <= 0) & (rel > -window)
+    # first blocks: zero-padded halo entries are at global positions < 0
+    blk = jnp.arange(nb)[:, None, None]
+    glob_col = (blk - r) * bs + cols[None]
+    m = mask[None] & (glob_col >= 0)
+    sc = jnp.where(m[None, :, None], sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bnhqk,bnkhd->bnqhd", w.astype(vv.dtype), vv)
+    out = constrain(out, ("batch", "blocks", None, None, None))
+    return out.reshape(b_, s, h, dh)
+
+
+def attention_apply(
+    cfg: ModelConfig,
+    p,
+    x: Array,
+    *,
+    window: int = 0,
+    cross: bool = False,
+    memory: Array | None = None,
+    cache: dict | None = None,
+    pos: Array | None = None,
+    force_flash: bool | None = None,
+):
+    """Self/cross attention.
+
+    Train/prefill: ``x (B,S,D)``, cache=None -> returns (y, new_cache-or-None).
+    Decode: ``x (B,1,D)`` with ``cache`` and scalar ``pos`` (current absolute
+    position) -> (y, updated cache).
+    """
+    cdt = dt(cfg, "compute")
+    b_, s, d = x.shape
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+
+    q, k, v = _project_qkv(cfg, p, x, memory if cross else None)
+
+    if cross:
+        # No positional rotation, no mask (memory is a set of media tokens).
+        scores = _gqa_scores(q, k).astype(jnp.float32) * scale
+        w = jax.nn.softmax(scores, axis=-1).astype(cdt)
+        out = _gqa_out(w, v)
+    elif cache is None:
+        positions = jnp.arange(s)
+        if cfg.rope:
+            q = rope_rotate(q, positions, cfg.rope_theta)
+            k = rope_rotate(k, positions, cfg.rope_theta)
+        use_flash = force_flash if force_flash is not None else s > FLASH_THRESHOLD
+        if use_flash:
+            out = _flash_attention(q, k, v, causal=cfg.causal, window=window,
+                                   scale=scale, chunk=min(FLASH_CHUNK, s),
+                                   unroll=cfg.flash_unroll)
+        else:
+            scores = _gqa_scores(q, k).astype(jnp.float32) * scale
+            mask = _self_mask(s, causal=cfg.causal, window=window)
+            scores = jnp.where(mask, scores, -1e30)
+            w = jax.nn.softmax(scores, axis=-1).astype(cdt)
+            out = _gqa_out(w, v)
+    else:
+        assert s == 1 and pos is not None
+        if cfg.rope:
+            q = rope_rotate(q, jnp.full((1,), pos), cfg.rope_theta)
+            k = rope_rotate(k, jnp.full((1,), pos), cfg.rope_theta)
+        cache = cache_write(cache, k[:, 0], v[:, 0], pos)
+        ck, cv, slot_pos = cache["k"], cache["v"], cache["slot_pos"]
+        scores = _gqa_scores(q, ck.astype(cdt)).astype(jnp.float32) * scale
+        valid = (slot_pos >= 0) & (slot_pos <= pos)
+        if window:
+            valid &= slot_pos > pos - window
+        scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(cdt)
+        out = _gqa_out(w, cv.astype(cdt))
+
+    if cfg.pad_heads_to and cfg.pad_heads_to > cfg.n_heads:
+        # Kill padded heads exactly (zero fwd AND zero grads to their
+        # params). Layout is group-major: each of the n_kv groups carries
+        # g_new = pad/kv heads of which the last g_new - g_real are dead —
+        # this keeps every real head attached to its original KV group.
+        h_pad = out.shape[2]
+        g_new = h_pad // cfg.n_kv_heads
+        g_real = cfg.n_heads // cfg.n_kv_heads
+        head_mask = ((jnp.arange(h_pad) % g_new) < g_real).astype(out.dtype)
+        out = out * head_mask[None, None, :, None]
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+    if cross and "gate" in p:
+        y = jnp.tanh(p["gate"].astype(jnp.float32)).astype(cdt) * y
+    return y, cache
+
+
+@functools.lru_cache(maxsize=64)
+def _self_mask_np(s: int, causal: bool, window: int):
+    import numpy as np
+
+    i = np.arange(s)[:, None]
+    j = np.arange(s)[None, :]
+    mask = np.ones((s, s), bool)
+    if causal:
+        mask &= j <= i
+    if window:
+        mask &= j > i - window
+    return mask
+
+
+def _self_mask(s: int, *, causal: bool, window: int) -> Array:
+    return jnp.asarray(_self_mask_np(s, causal, window))
+
+
+# -- cache ---------------------------------------------------------------
+
+
+def make_buf(shape, dtype, abstract: bool, fill=0):
+    """jnp buffer or ShapeDtypeStruct (dry-run inputs), one code path."""
+    if abstract:
+        return jax.ShapeDtypeStruct(tuple(shape), dtype)
+    return jnp.full(shape, fill, dtype) if fill else jnp.zeros(shape, dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, length: int, dtype=None, *, abstract: bool = False):
+    """Empty attention cache of ``length`` slots (window ring or full)."""
+    k = cfg.n_kv_heads
+    dh = cfg.head_dim
+    dtype = dtype or dt(cfg, "compute")
+    return {
+        "k": make_buf((batch, length, k, dh), dtype, abstract),
+        "v": make_buf((batch, length, k, dh), dtype, abstract),
+        "slot_pos": make_buf((length,), jnp.int32, abstract, fill=-1),
+    }
+
+
+def cache_axes(cfg: ModelConfig):
+    return {
+        "k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+        "v": ("batch", "kv_seq", "kv_heads", "head_dim"),
+        "slot_pos": (None,),
+    }
+
+
+def cache_write(cache, k_t: Array, v_t: Array, pos: Array):
+    """Writes one timestep (B,K,Dh) at slot pos % L."""
+    length = cache["k"].shape[1]
+    slot = jnp.asarray(pos, jnp.int32) % length
+    k = jax.lax.dynamic_update_slice(cache["k"], k_t[:, None].astype(cache["k"].dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_t[:, None].astype(cache["v"].dtype), (0, slot, 0, 0))
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], jnp.asarray(pos, jnp.int32)[None], (slot,)
+    )
+    return {"k": k, "v": v, "slot_pos": slot_pos}
+
+
+def cache_fill_from_prefill(cfg: ModelConfig, cache, k: Array, v: Array):
+    """Writes a full prefill (B,S,K,Dh) into the cache (keeping the last
+    ``L`` tokens when S > L, i.e. window semantics)."""
+    length = cache["k"].shape[1]
+    s = k.shape[1]
+    if s <= length:
+        kk = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        vv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        slot_pos = cache["slot_pos"].at[:s].set(jnp.arange(s, dtype=jnp.int32))
+        return {"k": kk, "v": vv, "slot_pos": slot_pos}
+    # keep last `length` tokens, ring-aligned so slot = pos % length
+    start = s - length
+    ktail, vtail = k[:, start:], v[:, start:]
+    positions = jnp.arange(start, s, dtype=jnp.int32)
+    slots = positions % length
+    order = jnp.argsort(slots)
+    kk = ktail[:, order].astype(cache["k"].dtype)
+    vv = vtail[:, order].astype(cache["v"].dtype)
+    return {"k": kk, "v": vv, "slot_pos": positions[order]}
+
+
+# ---------------------------------------------------------------------------
+# FFN.
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(cfg: ModelConfig, key: Array, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    b = PBuilder(key, dt(cfg))
+    gated = cfg.activation in ("swiglu", "geglu")
+    b.add("w1", (d, f), ("fsdp", "mlp"))
+    if gated:
+        b.add("w3", (d, f), ("fsdp", "mlp"))
+    b.add("w2", (f, d), ("mlp", "fsdp"))
+    return b.build()
+
+
+def apply_ffn(cfg: ModelConfig, p, x: Array) -> Array:
+    cdt = dt(cfg, "compute")
+    x = x.astype(cdt)
+    h = x @ p["w1"].astype(cdt)
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"].astype(cdt))
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(h) * (x @ p["w3"].astype(cdt))
+    elif cfg.activation == "gelu":
+        h = jax.nn.gelu(h)
+    elif cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(cfg.activation)
+    return h @ p["w2"].astype(cdt)
+
+
+# ---------------------------------------------------------------------------
+# MoE: top-k routing with sort-based capacity dispatch (no T*E*C one-hots).
+# ---------------------------------------------------------------------------
+
+
+def init_moe(cfg: ModelConfig, key: Array):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    b = PBuilder(key, dt(cfg))
+    b.add("router", (d, e), ("fsdp", "experts"), scale=0.1)
+    b.add("w1", (e, d, f), ("experts", "fsdp", "mlp"))
+    b.add("w3", (e, d, f), ("experts", "fsdp", "mlp"))
+    b.add("w2", (e, f, d), ("experts", "mlp", "fsdp"))
+    if cfg.moe_dense_residual:
+        b.sub("dense", init_ffn(cfg, b.key()))
+    return b.build()
+
+
+def apply_moe(cfg: ModelConfig, p, x: Array) -> tuple[Array, Array]:
+    """MoE dispatcher. Under an ambient mesh with a ``model`` axis, TRAIN/
+    PREFILL shapes take the SHARD_MAP expert-parallel path (local routing,
+    per-shard experts, one psum combine — weights stay put, tokens are
+    plentiful). DECODE (seq len 1, a handful of tokens per chip) keeps the
+    GSPMD path: gathering ~GiB of expert weights per layer to serve 8
+    tokens inverts the traffic equation, so there tokens move instead."""
+    from repro.dist.sharding import _ambient_mesh
+
+    mesh = _ambient_mesh()
+    if mesh is not None and "model" in mesh.axis_names and x.shape[1] > 1:
+        return apply_moe_sharded(cfg, p, x)
+    return _apply_moe_local(cfg, p, x)
+
+
+def _apply_moe_local(cfg: ModelConfig, p, x: Array) -> tuple[Array, Array]:
+    """x: (B, S, D) -> (y, aux_loss). Sort-based dropping dispatch:
+
+    tokens are argsorted by assigned expert; each expert processes up to
+    ``capacity`` tokens in a dense (E, C, D) buffer (overflow tokens are
+    dropped — GShard-style). Memory is O(E*C*D), never O(T*E*C).
+    """
+    cdt = dt(cfg, "compute")
+    b_, s, d = x.shape
+    t = b_ * s
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32)) @ p["router"].astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (Switch): E * sum_e f_e * P_e.
+    me = probs.mean(0)
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    capacity = max(int(math.ceil(k * t / e * cfg.capacity_factor)), 4)
+    capacity = min(capacity, t)
+
+    flat_e = idx.reshape(-1)                      # (T*k,)
+    flat_tok = jnp.repeat(jnp.arange(t), k)       # token id per assignment
+    flat_gate = gate.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, stok, sgate = flat_e[order], flat_tok[order], flat_gate[order]
+    group_start = jnp.searchsorted(se, jnp.arange(e), side="left")
+    pos_in_grp = jnp.arange(t * k) - group_start[se]
+    keep = pos_in_grp < capacity
+    slot = jnp.where(keep, se * capacity + pos_in_grp, e * capacity)  # overflow -> sentinel
+
+    buf_tok = jnp.full((e * capacity + 1,), t, jnp.int32).at[slot].set(stok.astype(jnp.int32))
+    buf_gate = jnp.zeros((e * capacity + 1,), jnp.float32).at[slot].set(sgate)
+    buf_tok, buf_gate = buf_tok[:-1], buf_gate[:-1]
+
+    xpad = jnp.concatenate([xt.astype(cdt), jnp.zeros((1, d), cdt)], axis=0)
+    xe = xpad[buf_tok].reshape(e, capacity, d)    # (E, C, D)
+
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w1"].astype(cdt))
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w3"].astype(cdt))
+    h = jax.nn.silu(h) * g
+    yexp = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(cdt))
+    yflat = (yexp.reshape(e * capacity, d).astype(jnp.float32)) * buf_gate[:, None]
+
+    y = jnp.zeros((t + 1, d), jnp.float32).at[buf_tok].add(yflat)[:t]
+    y = y.astype(cdt)
+
+    if cfg.moe_dense_residual:
+        y = y + apply_ffn(cfg, p["dense"], xt)
+    return y.reshape(b_, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel MoE under shard_map.
+#
+# The GSPMD partitioner handles the dense expert einsums well but falls over
+# on the dispatch (a global argsort over tokens forces giant all-gathers).
+# Here the paper's B-block lesson — provision compute per memory channel and
+# keep routing local — becomes: every (data, model) device routes ITS tokens
+# to ITS 1/mp slice of the experts, computes locally, and one psum over
+# `model` combines. Wire cost per MoE layer = one (T_loc, D) psum + the
+# usual FSDP weight gathers, independent of n_experts.
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_local(xt, gate, idx, e_lo, e_hi, capacity, e_loc, cdt):
+    """Builds (E_loc, C, D) buffers + gate/token maps for MY experts only."""
+    t, d = xt.shape
+    k = idx.shape[-1]
+    flat_e = idx.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    flat_gate = gate.reshape(-1)
+    mine = (flat_e >= e_lo) & (flat_e < e_hi)
+    key = jnp.where(mine, flat_e - e_lo, e_loc)  # foreign -> overflow group
+    order = jnp.argsort(key, stable=True)
+    se, stok, sgate = key[order], flat_tok[order], flat_gate[order]
+    group_start = jnp.searchsorted(se, jnp.arange(e_loc), side="left")
+    pos_in_grp = jnp.arange(t * k) - group_start[jnp.minimum(se, e_loc - 1)]
+    keep = (se < e_loc) & (pos_in_grp < capacity)
+    slot = jnp.where(keep, se * capacity + pos_in_grp, e_loc * capacity)
+
+    buf_tok = jnp.full((e_loc * capacity + 1,), t, jnp.int32).at[slot].set(stok.astype(jnp.int32))
+    buf_gate = jnp.zeros((e_loc * capacity + 1,), jnp.float32).at[slot].set(sgate)
+    buf_tok, buf_gate = buf_tok[:-1], buf_gate[:-1]
+    xpad = jnp.concatenate([xt.astype(cdt), jnp.zeros((1, d), cdt)], axis=0)
+    xe = xpad[buf_tok].reshape(e_loc, capacity, d)
+    return xe, buf_tok, buf_gate
+
+
+def apply_moe_sharded(cfg: ModelConfig, p, x: Array) -> tuple[Array, Array]:
+    """shard_map expert-parallel MoE. Requires the ambient mesh (set_mesh)
+    with a ``model`` axis; params sharded by the standard rules."""
+    from repro.dist.sharding import _ambient_mesh, spec_for
+    from jax.sharding import PartitionSpec as P
+
+    mesh = _ambient_mesh()
+    amesh = jax.sharding.get_abstract_mesh()
+    cdt = dt(cfg, "compute")
+    b_, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    mp_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    e_loc = e // mp_size if e % mp_size == 0 else 0
+    if e_loc == 0:
+        return _apply_moe_local(cfg, p, x)
+
+    sp = lambda axes, shape: spec_for(axes, mesh, shape, mode="train")  # noqa: E731
+    in_specs = (
+        P(dp if dp else None, None, None),                       # x
+        sp(("fsdp", "experts"), p["router"].shape),              # router
+        sp(("experts", "fsdp", "mlp"), p["w1"].shape),           # w1
+        sp(("experts", "fsdp", "mlp"), p["w3"].shape),           # w3
+        sp(("experts", "mlp", "fsdp"), p["w2"].shape),           # w2
+    )
+    dense_args = ()
+    if cfg.moe_dense_residual:
+        dense_args = (p["dense"]["w1"], p["dense"]["w3"], p["dense"]["w2"])
+        in_specs = in_specs + (
+            sp(("fsdp", "mlp"), p["dense"]["w1"].shape),
+            sp(("fsdp", "mlp"), p["dense"]["w3"].shape),
+            sp(("mlp", "fsdp"), p["dense"]["w2"].shape),
+        )
+
+    def _gather(arr, spec, dtype, keep_model: bool = True):
+        """All-gathers sharded dims back (in compute dtype). By default the
+        expert (`model`) dim stays local; the router needs it gathered too
+        (routing scores span ALL experts)."""
+        out = arr.astype(dtype)
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                if a != "model" or not keep_model:
+                    out = jax.lax.all_gather(out, a, axis=dim, tiled=True)
+        return out
+
+    def local_moe(x_loc, router, w1, w3, w2, *dense):
+        t_loc = x_loc.shape[0] * x_loc.shape[1]
+        xt = x_loc.reshape(t_loc, d)
+        router_f = _gather(router, in_specs[1], jnp.float32, keep_model=False)
+        logits = xt.astype(jnp.float32) @ router_f
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, idx = jax.lax.top_k(probs, k)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+        # Globalise the per-expert stats BEFORE the product so the aux loss
+        # equals the unsharded estimator (mean-of-products != product-of-means).
+        me = probs.mean(0)
+        ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (t_loc * k)
+        if dp:
+            me = jax.lax.pmean(me, dp)
+            ce = jax.lax.pmean(ce, dp)
+        aux = e * jnp.sum(me * ce)
+        aux = jax.lax.pmean(aux, tuple(mesh.axis_names))
+
+        j = jax.lax.axis_index("model")
+        capacity = max(int(math.ceil(k * t_loc / e * cfg.capacity_factor)), 4)
+        capacity = min(capacity, t_loc)
+        xe, buf_tok, buf_gate = _dispatch_local(
+            xt, gate, idx, j * e_loc, (j + 1) * e_loc, capacity, e_loc, cdt
+        )
+        w1_f = _gather(w1, in_specs[2], cdt)
+        w3_f = _gather(w3, in_specs[3], cdt)
+        w2_f = _gather(w2, in_specs[4], cdt)
+        h = jnp.einsum("ecd,edf->ecf", xe, w1_f)
+        g = jnp.einsum("ecd,edf->ecf", xe, w3_f)
+        yexp = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * g, w2_f)
+        yflat = yexp.reshape(e_loc * capacity, d).astype(jnp.float32) * buf_gate[:, None]
+        y = jnp.zeros((t_loc + 1, d), jnp.float32).at[buf_tok].add(yflat)[:t_loc]
+
+        if dense:
+            dw1, dw3, dw2 = dense
+            # TP dense branch: mlp dim stays sharded over `model`; the same
+            # psum that combines experts combines the dense partials.
+            dw1 = _gather(dw1, in_specs[5], cdt)
+            dw3 = _gather(dw3, in_specs[6], cdt)
+            dw2 = _gather(dw2, in_specs[7], cdt)
+            hd = jax.nn.silu(xt.astype(cdt) @ dw1) * (xt.astype(cdt) @ dw3)
+            y = y + (hd @ dw2).astype(jnp.float32)
+
+        y = jax.lax.psum(y.astype(cdt), "model")
+        return y.reshape(x_loc.shape), aux
+
+    fn = jax.shard_map(
+        local_moe,
+        mesh=amesh,
+        in_specs=in_specs,
+        out_specs=(P(dp if dp else None, None, None), P()),
+        check_vma=False,
+    )
+    y, aux = fn(x, p["router"], p["w1"], p["w3"], p["w2"], *dense_args)
+    return y.astype(cdt), aux

@@ -1,0 +1,407 @@
+"""The LM model zoo: one composable decoder/encoder covering all 10 assigned
+architectures via ``ModelConfig.block_pattern``.
+
+Layer stacking uses scan-over-SUPERBLOCKS: the block pattern (e.g.
+recurrentgemma's ("rglru", "rglru", "local_attn")) forms one superblock whose
+params are stacked ``(n_super, ...)`` and scanned with ``jax.lax.scan`` —
+keeping the traced HLO size O(pattern) instead of O(n_layers), which is what
+makes the 100-layer 90B dry-run compile in minutes on one CPU core.
+Remainder layers (n_layers % len(pattern)) get their own unstacked params,
+applied after the scan.
+
+Three entry points (all pure functions of (cfg, params, ...)):
+  * ``lm_loss``      — train: tokens/labels -> (loss, aux)
+  * ``lm_prefill``   — forward + cache build (serving prefill)
+  * ``lm_decode``    — one-token step with cache (serving decode)
+
+Abstract mode: ``build_lm(cfg, key=None)`` / ``build_cache(..., abstract=True)``
+produce ShapeDtypeStruct pytrees for the multi-pod dry-run — no allocation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import recurrent as R
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+
+
+def _init_block(cfg: ModelConfig, kind: str, key: Array | None):
+    b = L.PBuilder(key, L.dt(cfg))
+    b.sub("norm1", L.init_norm(cfg, b.key()))
+    if kind in ("attn", "local_attn"):
+        b.sub("mixer", L.init_attention(cfg, b.key()))
+    elif kind == "cross_attn":
+        b.sub("mixer", L.init_attention(cfg, b.key(), cross=True))
+    elif kind == "rglru":
+        b.sub("mixer", R.init_rglru(cfg, b.key()))
+    elif kind == "rwkv6":
+        b.sub("mixer", R.init_rwkv_tmix(cfg, b.key()))
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    b.sub("norm2", L.init_norm(cfg, b.key()))
+    if kind == "rwkv6":
+        b.sub("ffn", R.init_rwkv_cmix(cfg, b.key()))
+    elif cfg.n_experts:
+        b.sub("ffn", L.init_moe(cfg, b.key()))
+    else:
+        b.sub("ffn", L.init_ffn(cfg, b.key()))
+    return b.build()
+
+
+def _init_superblock(cfg: ModelConfig, key: Array | None):
+    b = L.PBuilder(key, L.dt(cfg))
+    for i, kind in enumerate(cfg.block_pattern):
+        b.sub(f"b{i}", _init_block(cfg, kind, b.key()))
+    return b.build()
+
+
+def build_lm(cfg: ModelConfig, key: Array | None = None):
+    """Returns (params, logical_axes). ``key=None`` -> abstract structs."""
+    abstract = key is None
+    b = L.PBuilder(key, L.dt(cfg))
+    b.add("embed", (cfg.vocab_size, cfg.d_model), ("vocab", "fsdp"), scale=1.0,
+          fan_axes=(1,))
+    n_super = cfg.n_super
+    if n_super:
+        if abstract:
+            one_p, one_ax = _init_superblock(cfg, None)
+            stacked = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n_super,) + s.shape, s.dtype), one_p
+            )
+        else:
+            keys = jax.random.split(b.key(), n_super)
+            stacked = jax.vmap(lambda k: _init_superblock(cfg, k)[0])(keys)
+            _, one_ax = _init_superblock(cfg, None)
+        b.params["scan"] = stacked
+        b.axes["scan"] = jax.tree.map(
+            lambda ax: ("layers",) + ax,
+            one_ax,
+            is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+        )
+    tail_kinds = cfg.layer_kinds[n_super * len(cfg.block_pattern) :]
+    tail_p, tail_ax = [], []
+    for kind in tail_kinds:
+        p, ax = _init_block(cfg, kind, b.key())
+        tail_p.append(p)
+        tail_ax.append(ax)
+    b.params["tail"] = tail_p
+    b.axes["tail"] = tail_ax
+    b.sub("final_norm", L.init_norm(cfg, b.key()))
+    if not cfg.tied_embeddings:
+        b.add("head", (cfg.d_model, cfg.vocab_size), ("fsdp", "vocab"))
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# Cache init (serving).
+# ---------------------------------------------------------------------------
+
+
+def _block_cache(cfg: ModelConfig, kind: str, batch: int, length: int, *, abstract: bool):
+    if kind == "attn":
+        cap = min(length, cfg.window) if cfg.window else length
+        return L.init_cache(cfg, batch, cap, abstract=abstract)
+    if kind == "local_attn":
+        cap = min(length, cfg.window or length)
+        return L.init_cache(cfg, batch, cap, abstract=abstract)
+    if kind == "cross_attn":
+        # cross K/V over media tokens, filled at prefill, static afterwards
+        return {
+            "k": L.make_buf((batch, cfg.num_media_tokens, cfg.n_kv_heads, cfg.head_dim),
+                            L.dt(cfg, "compute"), abstract),
+            "v": L.make_buf((batch, cfg.num_media_tokens, cfg.n_kv_heads, cfg.head_dim),
+                            L.dt(cfg, "compute"), abstract),
+        }
+    if kind == "rglru":
+        return R.rglru_cache_init(cfg, batch, abstract=abstract)
+    if kind == "rwkv6":
+        return R.rwkv_cache_init(cfg, batch, abstract=abstract)
+    raise ValueError(kind)
+
+
+def _block_cache_axes(cfg: ModelConfig, kind: str):
+    if kind in ("attn", "local_attn"):
+        return L.cache_axes(cfg)
+    if kind == "cross_attn":
+        ax = L.cache_axes(cfg)
+        return {"k": ax["k"], "v": ax["v"]}
+    if kind == "rglru":
+        return R.rglru_cache_axes(cfg)
+    if kind == "rwkv6":
+        return R.rwkv_cache_axes(cfg)
+    raise ValueError(kind)
+
+
+def build_cache(cfg: ModelConfig, batch: int, length: int, *, abstract: bool = False):
+    """Returns (cache, logical_axes) for serving. ``length`` is the max
+    context (full-attn cache size; window archs clamp to their window)."""
+    n_super = cfg.n_super
+    pattern = cfg.block_pattern
+    one = {f"b{i}": _block_cache(cfg, k, batch, length, abstract=abstract)
+           for i, k in enumerate(pattern)}
+    one_ax = {f"b{i}": _block_cache_axes(cfg, k) for i, k in enumerate(pattern)}
+
+    def stack(s):
+        if abstract:
+            return jax.ShapeDtypeStruct((n_super,) + s.shape, s.dtype)
+        return jnp.broadcast_to(s[None], (n_super,) + s.shape).copy()
+
+    cache = {"scan": jax.tree.map(stack, one)} if n_super else {}
+    axes: dict[str, Any] = {}
+    if n_super:
+        axes["scan"] = jax.tree.map(
+            lambda ax: ("layers",) + ax,
+            one_ax,
+            is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+        )
+    tail_kinds = cfg.layer_kinds[n_super * len(pattern):]
+    cache["tail"] = [
+        _block_cache(cfg, k, batch, length, abstract=abstract) for k in tail_kinds
+    ]
+    axes["tail"] = [_block_cache_axes(cfg, k) for k in tail_kinds]
+    return cache, axes
+
+
+# ---------------------------------------------------------------------------
+# Apply.
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(cfg, kind, p, x, *, memory, cache, pos, prefill):
+    """One block. Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(cfg, p["norm1"], x)
+    new_cache = cache
+
+    if kind in ("attn", "local_attn"):
+        window = cfg.window
+        if cache is not None and not prefill:
+            y, new_cache = L.attention_apply(cfg, p["mixer"], h, window=window,
+                                             cache=cache, pos=pos)
+        else:
+            y, _ = L.attention_apply(cfg, p["mixer"], h, window=window)
+            if prefill:
+                q, k, v = L._project_qkv(cfg, p["mixer"], h)
+                if cfg.rope:
+                    k = L.rope_rotate(k, jnp.arange(h.shape[1]), cfg.rope_theta)
+                new_cache = L.cache_fill_from_prefill(cfg, cache, k, v)
+    elif kind == "cross_attn":
+        if cache is not None and not prefill:
+            y, _ = _cross_attn_cached(cfg, p["mixer"], h, cache)
+        else:
+            y, _ = L.attention_apply(cfg, p["mixer"], h, cross=True, memory=memory)
+            if prefill:
+                _, k, v = L._project_qkv(cfg, p["mixer"], h, memory)
+                new_cache = {"k": k.astype(cache["k"].dtype), "v": v.astype(cache["v"].dtype)}
+    elif kind == "rglru":
+        y, c2 = R.apply_rglru(cfg, p["mixer"], h, cache=None if prefill else cache)
+        if cache is not None:
+            new_cache = c2
+    elif kind == "rwkv6":
+        y, c2 = R.apply_rwkv_tmix(
+            cfg, p["mixer"], h,
+            cache=None if (prefill or cache is None) else cache["tmix"],
+        )
+        if cache is not None:
+            new_cache = dict(cache)
+            new_cache["tmix"] = c2
+    else:
+        raise ValueError(kind)
+    x = x + y
+
+    h = L.apply_norm(cfg, p["norm2"], x)
+    if kind == "rwkv6":
+        y, c3 = R.apply_rwkv_cmix(
+            cfg, p["ffn"], h,
+            cache=None if (prefill or cache is None) else cache["cmix"],
+        )
+        if cache is not None:
+            new_cache = dict(new_cache)
+            new_cache["cmix"] = c3
+    elif cfg.n_experts:
+        y, aux = L.apply_moe(cfg, p["ffn"], h)
+    else:
+        y = L.apply_ffn(cfg, p["ffn"], h)
+    return x + y, new_cache, aux
+
+
+def _cross_attn_cached(cfg, p, x, cache):
+    """Decode-time cross attention against the prefill-built media K/V."""
+    import math as _math
+
+    cdt = L.dt(cfg, "compute")
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(cdt), p["wq"].astype(cdt))
+    if "bq" in p:
+        q = q + p["bq"].astype(cdt)
+    scale = 1.0 / _math.sqrt(cfg.head_dim)
+    scores = L._gqa_scores(q, cache["k"].astype(cdt)).astype(jnp.float32) * scale
+    w = jax.nn.softmax(scores, axis=-1).astype(cdt)
+    out = L._gqa_out(w, cache["v"].astype(cdt))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+    if "gate" in p:
+        y = jnp.tanh(p["gate"].astype(jnp.float32)).astype(cdt) * y
+    return y, cache
+
+
+def _apply_superblock(cfg, p, x, *, memory, cache, pos, prefill):
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {} if cache is not None else None
+    for i, kind in enumerate(cfg.block_pattern):
+        c = cache[f"b{i}"] if cache is not None else None
+        x, c2, a = _apply_block(cfg, kind, p[f"b{i}"], x, memory=memory,
+                                cache=c, pos=pos, prefill=prefill)
+        if cache is not None:
+            new_cache[f"b{i}"] = c2
+        aux = aux + a
+    return x, new_cache, aux
+
+
+def _run_blocks(cfg, params, x, *, memory=None, cache=None, pos=None, prefill=False):
+    """Scan over superblocks + tail. Returns (x, new_cache, aux)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: dict[str, Any] = {}
+
+    if cfg.n_super:
+        from repro.dist.sharding import constrain
+
+        def body(carry, xs):
+            xc, aux = carry
+            if cache is not None:
+                p, c = xs
+            else:
+                p, c = xs, None
+            xc = constrain(xc, ("batch", "seq", "embed") if xc.ndim == 3 else ("batch", "embed"))
+            xc, c2, a = _apply_superblock(cfg, p, xc, memory=memory, cache=c,
+                                          pos=pos, prefill=prefill)
+            out = c2 if cache is not None else None
+            return (xc, aux + a), out
+
+        def _ckpt(fn):
+            if cfg.remat_policy == "dots":
+                return jax.checkpoint(
+                    fn, policy=jax.checkpoint_policies.dots_saveable
+                )
+            return jax.checkpoint(fn)
+
+        if cfg.unroll_layers:
+            # Unrolled path: used by the dry-run's cost-extrapolation variants
+            # (XLA cost analysis ignores `while` trip counts). Keep the remat
+            # wrapper so recompute FLOPs match the scanned path.
+            ubody = _ckpt(body) if (cfg.remat and cache is None) else body
+            outs = []
+            for i in range(cfg.n_super):
+                take = lambda t: jax.tree.map(lambda l: l[i], t)  # noqa: E731
+                xs = (take(params["scan"]), take(cache["scan"])) if cache is not None else take(params["scan"])
+                (x, aux_total), o = ubody((x, aux_total), xs)
+                outs.append(o)
+            scan_out = jax.tree.map(lambda *ls: jnp.stack(ls), *outs) if cache is not None else None
+        else:
+            body_fn = _ckpt(body) if (cfg.remat and cache is None) else body
+            xs = (params["scan"], cache["scan"]) if cache is not None else params["scan"]
+            (x, aux_total), scan_out = jax.lax.scan(body_fn, (x, aux_total), xs)
+        if cache is not None:
+            new_cache["scan"] = scan_out
+
+    tail_kinds = cfg.layer_kinds[cfg.n_super * len(cfg.block_pattern):]
+    tail_cache = []
+    for i, kind in enumerate(tail_kinds):
+        c = cache["tail"][i] if cache is not None else None
+        x, c2, a = _apply_block(cfg, kind, params["tail"][i], x, memory=memory,
+                                cache=c, pos=pos, prefill=prefill)
+        tail_cache.append(c2)
+        aux_total = aux_total + a
+    if cache is not None:
+        new_cache["tail"] = tail_cache
+    return x, (new_cache if cache is not None else None), aux_total
+
+
+def _embed(cfg, params, tokens_or_frames):
+    from repro.dist.sharding import constrain
+
+    cdt = L.dt(cfg, "compute")
+    if cfg.frontend == "audio":
+        x = tokens_or_frames.astype(cdt)  # stub: precomputed frame embeddings
+    else:
+        x = params["embed"].astype(cdt)[tokens_or_frames]
+    axes = ("batch", "seq", "embed") if x.ndim == 3 else ("batch", "embed")
+    return constrain(x, axes[: x.ndim])
+
+
+def _logits(cfg, params, x):
+    from repro.dist.sharding import constrain
+
+    cdt = L.dt(cfg, "compute")
+    if cfg.tied_embeddings:
+        out = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cdt))
+    else:
+        out = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(cdt))
+    # Keep the vocab dim sharded: a replicated (B, S, V) f32 logits tensor is
+    # the single biggest memory hazard at train shapes (tens of GiB/device).
+    return constrain(out, ("batch", "seq", "vocab"))
+
+
+def lm_forward(cfg: ModelConfig, params, tokens, *, memory=None):
+    """Plain forward (no cache): logits (B, S, V) + aux loss."""
+    x = _embed(cfg, params, tokens)
+    x, _, aux = _run_blocks(cfg, params, x, memory=memory)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return _logits(cfg, params, x), aux
+
+
+def lm_loss(cfg: ModelConfig, params, batch) -> tuple[Array, dict]:
+    """Cross-entropy train loss. batch: {"tokens", "labels", optional
+    "memory", optional "mask"}. Labels use -100 padding convention.
+
+    The cross-entropy is written as ``logsumexp - onehot-contraction`` so
+    every (B, S, V) intermediate reduces over the SHARDED vocab axis (SPMD
+    inserts a cheap psum over `model`); ``take_along_axis`` on a
+    vocab-sharded tensor would instead force an all-gather of the logits."""
+    logits, aux = lm_forward(cfg, params, batch["tokens"], memory=batch.get("memory"))
+    labels = batch["labels"]
+    valid = labels >= 0
+    labels_safe = jnp.maximum(labels, 0)
+
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)                       # (B, S)
+    onehot = jax.nn.one_hot(labels_safe, cfg.vocab_size, dtype=logits.dtype)
+    from repro.dist.sharding import constrain
+
+    onehot = constrain(onehot, ("batch", "seq", "vocab"))
+    label_logit = jnp.einsum("bsv,bsv->bs", logits32, onehot.astype(jnp.float32))
+    nll = jnp.where(valid, lse - label_logit, 0.0)
+    denom = jnp.maximum(valid.sum(), 1)
+    loss = nll.sum() / denom
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux, "ntokens": denom}
+
+
+def lm_prefill(cfg: ModelConfig, params, tokens, cache, *, memory=None):
+    """Prefill: runs the full prompt, fills the cache. Returns
+    (last_logits (B, V), cache)."""
+    x = _embed(cfg, params, tokens)
+    x, cache, _ = _run_blocks(cfg, params, x, memory=memory, cache=cache, prefill=True)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return _logits(cfg, params, x[:, -1:, :])[:, 0], cache
+
+
+def lm_decode(cfg: ModelConfig, params, token, cache, pos, *, memory=None):
+    """One decode step. token: (B,) int32 (or (B, D) frames), pos: scalar
+    absolute position. Returns (logits (B, V), new cache)."""
+    tok = token[:, None] if token.ndim == 1 else token[:, None, :]
+    x = _embed(cfg, params, tok)
+    x, cache, _ = _run_blocks(cfg, params, x, memory=memory, cache=cache, pos=pos)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return _logits(cfg, params, x)[:, 0], cache

@@ -1,0 +1,302 @@
+"""Recurrent token mixers: Griffin RG-LRU (recurrentgemma) and RWKV-6 "Finch".
+
+Both are linear recurrences, so train/prefill uses a PARALLEL form:
+  * RG-LRU: ``h_t = a_t * h_{t-1} + b_t`` via ``jax.lax.associative_scan``
+    (log-depth, the TPU-friendly form of the paper's "pipeline timesteps
+    through the array" insight applied to sequence instead of simulation
+    time).
+  * RWKV-6: matrix-valued state ``S_t = diag(w_t) S_{t-1} + k_t v_t^T``;
+    implemented as a CHUNKED scan: within a chunk the contribution of the
+    incoming state and the intra-chunk outer products are computed with
+    dense einsums (MXU-friendly), and the sequential ``lax.scan`` only runs
+    over S/chunk steps.
+
+Decode is the single-step recurrence with an explicit state cache.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import PBuilder, dt
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma) recurrent block.
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def init_rglru(cfg: ModelConfig, key: Array):
+    d, w = cfg.d_model, cfg.rnn_width
+    b = PBuilder(key, dt(cfg))
+    b.add("w_gate", (d, w), ("fsdp", "mlp"))        # GeLU gate branch
+    b.add("w_branch", (d, w), ("fsdp", "mlp"))      # recurrent branch input
+    b.add("conv_k", (cfg.conv_width, w), (None, "mlp"))  # depthwise temporal conv
+    b.add("conv_b", (w,), ("mlp",), init="zeros")
+    b.add("w_a", (w, w), ("mlp", None))             # recurrence gate
+    b.add("b_a", (w,), (None,), init="zeros")
+    b.add("w_x", (w, w), ("mlp", None))             # input gate
+    b.add("b_x", (w,), (None,), init="zeros")
+    # Lambda init so a = sigmoid(L) in [0.9, 0.999] (Griffin appendix).
+    lam0 = math.log(0.95 / (1 - 0.95))
+    b.add("lam", (w,), (None,), init="const", scale=lam0)
+    b.add("w_out", (w, d), ("mlp", "fsdp"))
+    return b.build()
+
+
+def _rglru_gates(p, bx: Array, cdt):
+    r = jax.nn.sigmoid(bx.astype(jnp.float32) @ p["w_a"].astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(bx.astype(jnp.float32) @ p["w_x"].astype(jnp.float32) + p["b_x"].astype(jnp.float32))
+    log_a = -_RGLRU_C * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bterm = mult * (i * bx.astype(jnp.float32))
+    return a, bterm
+
+
+def apply_rglru(
+    cfg: ModelConfig,
+    p,
+    x: Array,
+    *,
+    cache: dict | None = None,
+    pos: Any = None,
+):
+    """x: (B, S, D). cache = {"h": (B, W), "conv": (B, conv_width-1, W)}."""
+    cdt = dt(cfg, "compute")
+    x = x.astype(cdt)
+    b_, s, _ = x.shape
+    w = cfg.rnn_width
+
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(cdt))
+    bx = x @ p["w_branch"].astype(cdt)  # (B, S, W)
+
+    # Depthwise causal conv, width conv_width.
+    cw = cfg.conv_width
+    if cache is None:
+        prevs = jnp.zeros((b_, cw - 1, w), cdt)
+    else:
+        prevs = cache["conv"].astype(cdt)
+    bx_pad = jnp.concatenate([prevs, bx], axis=1)  # (B, S+cw-1, W)
+    conv = sum(
+        bx_pad[:, i : i + s, :] * p["conv_k"].astype(cdt)[i]
+        for i in range(cw)
+    ) + p["conv_b"].astype(cdt)
+
+    a, bterm = _rglru_gates(p, conv, cdt)  # (B, S, W) f32 each
+
+    if cache is None:
+        # associative scan over time: h_t = a_t h_{t-1} + b_t
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+        new_cache = None
+    else:
+        h0 = cache["h"].astype(jnp.float32)
+        h = a[:, 0] * h0 + bterm[:, 0]
+        new_cache = {
+            "h": h.astype(cdt),
+            "conv": bx_pad[:, -(cw - 1) :, :].astype(cdt),
+        }
+        h = h[:, None, :]
+
+    y = (h.astype(cdt) * gate) @ p["w_out"].astype(cdt)
+    if cache is None and s >= 1:
+        # expose final state for prefill -> decode handoff
+        new_cache = {"h": h[:, -1].astype(cdt), "conv": bx_pad[:, -(cw - 1) :, :].astype(cdt)}
+    return y, new_cache
+
+
+def rglru_cache_init(cfg: ModelConfig, batch: int, *, abstract: bool = False):
+    from repro.models.layers import make_buf
+
+    cdt = dt(cfg, "compute")
+    return {
+        "h": make_buf((batch, cfg.rnn_width), cdt, abstract),
+        "conv": make_buf((batch, cfg.conv_width - 1, cfg.rnn_width), cdt, abstract),
+    }
+
+
+def rglru_cache_axes(cfg: ModelConfig):
+    return {"h": ("batch", "mlp"), "conv": ("batch", None, "mlp")}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch): data-dependent decay time-mix + channel-mix.
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv_tmix(cfg: ModelConfig, key: Array):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    lora = 64
+    b = PBuilder(key, dt(cfg))
+    for nm in ("mu_x", "mu_w", "mu_k", "mu_v", "mu_r", "mu_g"):
+        b.add(nm, (d,), (None,), init="const", scale=0.5)
+    for nm in ("w", "k", "v", "r", "g"):
+        b.add(f"lora_a_{nm}", (d, lora), ("fsdp", None), scale=0.1)
+        b.add(f"lora_b_{nm}", (lora, d), (None, "fsdp"), init="zeros")
+    b.add("decay_base", (d,), (None,), init="const", scale=-2.0)  # w0
+    b.add("bonus", (nh, hs), (None, None), init="const", scale=0.5)  # u
+    b.add("wr", (d, d), ("fsdp", None))
+    b.add("wk", (d, d), ("fsdp", None))
+    b.add("wv", (d, d), ("fsdp", None))
+    b.add("wg", (d, d), ("fsdp", None))
+    b.add("wo", (d, d), (None, "fsdp"))
+    b.add("ln_scale", (d,), (None,), init="ones")  # per-head groupnorm
+    return b.build()
+
+
+def _ddlerp(p, nm: str, x, xprev, mix_base):
+    mu = p[f"mu_{nm}"].astype(jnp.float32)
+    lo = jnp.tanh(mix_base @ p[f"lora_a_{nm}"].astype(jnp.float32)) @ p[
+        f"lora_b_{nm}"
+    ].astype(jnp.float32)
+    return x + (xprev - x) * (mu + lo)
+
+
+def apply_rwkv_tmix(
+    cfg: ModelConfig,
+    p,
+    x: Array,
+    *,
+    cache: dict | None = None,
+    chunk: int = 128,
+):
+    """RWKV-6 time mix. x: (B, S, D).
+
+    cache = {"state": (B, H, hs, hs), "x_prev": (B, D)} for decode;
+    prefill/train starts from zeros and returns the final state.
+    """
+    b_, s, d = x.shape
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    x32 = x.astype(jnp.float32)
+
+    if cache is None:
+        xprev = jnp.concatenate([jnp.zeros((b_, 1, d), jnp.float32), x32[:, :-1]], axis=1)
+        state0 = jnp.zeros((b_, nh, hs, hs), jnp.float32)
+    else:
+        xprev = cache["x_prev"].astype(jnp.float32)[:, None, :]
+        state0 = cache["state"].astype(jnp.float32)
+
+    mix_base = x32 + (xprev - x32) * p["mu_x"].astype(jnp.float32)
+    xw = _ddlerp(p, "w", x32, xprev, mix_base)
+    xk = _ddlerp(p, "k", x32, xprev, mix_base)
+    xv = _ddlerp(p, "v", x32, xprev, mix_base)
+    xr = _ddlerp(p, "r", x32, xprev, mix_base)
+    xg = _ddlerp(p, "g", x32, xprev, mix_base)
+
+    # Data-dependent per-channel decay in (0, 1): w = exp(-exp(w0 + lora)).
+    dec = jnp.exp(
+        -jnp.exp(
+            p["decay_base"].astype(jnp.float32)
+            + jnp.tanh(xw @ p["lora_a_w"].astype(jnp.float32)) @ p["lora_b_w"].astype(jnp.float32)
+        )
+    )  # (B, S, D)
+
+    r = (xr @ p["wr"].astype(jnp.float32)).reshape(b_, s, nh, hs)
+    k = (xk @ p["wk"].astype(jnp.float32)).reshape(b_, s, nh, hs)
+    v = (xv @ p["wv"].astype(jnp.float32)).reshape(b_, s, nh, hs)
+    g = xg @ p["wg"].astype(jnp.float32)
+    w = dec.reshape(b_, s, nh, hs)
+    u = p["bonus"].astype(jnp.float32)
+
+    if cfg.rwkv_chunk and s > 1 and s % cfg.rwkv_chunk == 0:
+        # Chunked parallel form (see kernels/wkv6): O(S/chunk) sequential
+        # steps with dense intra-chunk matmuls — the MXU-friendly path used
+        # for train/prefill (§Perf rwkv6 hillclimb).
+        from repro.kernels.wkv6.ref import wkv6_chunked_ref
+
+        y4, state = wkv6_chunked_ref(r, k, v, w, u, state0, chunk=cfg.rwkv_chunk)
+        y = y4.reshape(b_, s, d)
+    else:
+        def step(state, inp):
+            r_t, k_t, v_t, w_t = inp  # (B, H, hs) each
+            kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,hs,hs)
+            y = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[..., :, None] * kv)
+            state = w_t[..., :, None] * state + kv
+            return state, y
+
+        xs = (
+            jnp.moveaxis(r, 1, 0),
+            jnp.moveaxis(k, 1, 0),
+            jnp.moveaxis(v, 1, 0),
+            jnp.moveaxis(w, 1, 0),
+        )
+        state, ys = jax.lax.scan(step, state0, xs)
+        y = jnp.moveaxis(ys, 0, 1).reshape(b_, s, d)  # (B,S,D)
+
+    # Per-head groupnorm, then silu(g) gate and output projection.
+    yh = y.reshape(b_, s, nh, hs)
+    mean = yh.mean(-1, keepdims=True)
+    var = ((yh - mean) ** 2).mean(-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 1e-6)
+    y = yh.reshape(b_, s, d) * p["ln_scale"].astype(jnp.float32)
+    y = y * jax.nn.silu(g)
+    out = y @ p["wo"].astype(jnp.float32)
+
+    new_cache = {"state": state.astype(jnp.float32), "x_prev": x32[:, -1]}
+    return out.astype(x.dtype), new_cache
+
+
+def init_rwkv_cmix(cfg: ModelConfig, key: Array):
+    d, f = cfg.d_model, cfg.d_ff
+    b = PBuilder(key, dt(cfg))
+    b.add("mu_k", (d,), (None,), init="const", scale=0.5)
+    b.add("mu_r", (d,), (None,), init="const", scale=0.5)
+    b.add("wk", (d, f), ("fsdp", "mlp"))
+    b.add("wv", (f, d), ("mlp", "fsdp"))
+    b.add("wr", (d, d), ("fsdp", None))
+    return b.build()
+
+
+def apply_rwkv_cmix(cfg: ModelConfig, p, x: Array, *, cache: dict | None = None):
+    """RWKV channel mix (the FFN analogue). cache = {"x_prev": (B, D)}."""
+    b_, s, d = x.shape
+    x32 = x.astype(jnp.float32)
+    if cache is None:
+        xprev = jnp.concatenate([jnp.zeros((b_, 1, d), jnp.float32), x32[:, :-1]], axis=1)
+    else:
+        xprev = cache["x_prev"].astype(jnp.float32)[:, None, :]
+    xk = x32 + (xprev - x32) * p["mu_k"].astype(jnp.float32)
+    xr = x32 + (xprev - x32) * p["mu_r"].astype(jnp.float32)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(jnp.float32)))
+    kv = k @ p["wv"].astype(jnp.float32)
+    y = jax.nn.sigmoid(xr @ p["wr"].astype(jnp.float32)) * kv
+    return y.astype(x.dtype), {"x_prev": x32[:, -1]}
+
+
+def rwkv_cache_init(cfg: ModelConfig, batch: int, *, abstract: bool = False):
+    from repro.models.layers import make_buf
+
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    return {
+        "tmix": {
+            "state": make_buf((batch, nh, hs, hs), jnp.float32, abstract),
+            "x_prev": make_buf((batch, d), jnp.float32, abstract),
+        },
+        "cmix": {"x_prev": make_buf((batch, d), jnp.float32, abstract)},
+    }
+
+
+def rwkv_cache_axes(cfg: ModelConfig):
+    return {
+        "tmix": {"state": ("batch", None, None, None), "x_prev": ("batch", None)},
+        "cmix": {"x_prev": ("batch", None)},
+    }

@@ -1,0 +1,12 @@
+from repro.optim.optimizers import (
+    OptimizerConfig,
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    make_optimizer,
+    opt_state_axes,
+    optimizer_config_from_model,
+    schedule_lr,
+)

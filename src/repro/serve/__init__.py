@@ -1,0 +1,1 @@
+from repro.serve.engine import BatchedServer, Request, make_serve_fns

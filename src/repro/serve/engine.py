@@ -1,0 +1,137 @@
+"""Serving: prefill/decode steps + a batched continuous-batching scheduler.
+
+``make_serve_fns`` builds the jitted prefill and decode steps the dry-run
+lowers (decode_32k / long_500k cells lower ``serve_step`` = one decode step
+with a seq_len-deep cache, per the brief).
+
+``BatchedServer`` is a minimal continuous-batching engine: fixed B decode
+lanes, each lane holds one request; finished lanes are refilled from the
+queue with a prefill that writes that lane's cache slice. Greedy sampling
+(argmax) for determinism in tests/examples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import build_cache, build_lm, lm_decode, lm_prefill
+
+Array = jax.Array
+
+
+def make_serve_fns(cfg: ModelConfig, *, batch: int, max_len: int):
+    """Returns (prefill_fn, decode_fn, cache_init_fn).
+
+    prefill_fn(params, tokens, cache)        -> (last_logits, cache)
+    decode_fn(params, token, cache, pos)     -> (logits, cache)
+    """
+    prefill = jax.jit(lambda p, t, c, m=None: lm_prefill(cfg, p, t, c, memory=m))
+    decode = jax.jit(lambda p, t, c, pos, m=None: lm_decode(cfg, p, t, c, pos, memory=m))
+
+    def cache_init():
+        cache, _ = build_cache(cfg, batch, max_len)
+        return cache
+
+    return prefill, decode, cache_init
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (p,) int32
+    max_new_tokens: int
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    """Continuous batching over ``lanes`` decode slots with a shared-step
+    decode loop. Lanes run in lock-step (one jitted decode per step for the
+    whole batch); finished lanes are immediately refilled.
+
+    Note: per-lane positions. The model's decode step takes a SCALAR pos
+    (uniform benchmark shapes); the server therefore tracks a per-lane
+    offset and left-aligns every prompt at pos 0 of its own lane by keeping
+    one cache PER LANE (batch=1 caches), trading a little throughput for
+    correct ragged batching on CPU. On TPU the same scheduler runs with a
+    batched cache and vectorised positions.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, lanes: int = 4, max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.lanes = lanes
+        self.max_len = max_len
+        self.prefill, self.decode, _ = make_serve_fns(cfg, batch=1, max_len=max_len)
+        self._lane_cache: list[Any] = [None] * lanes
+        self._lane_req: list[Request | None] = [None] * lanes
+        self._lane_pos: list[int] = [0] * lanes
+        self._queue: list[Request] = []
+        self._next_rid = 0
+        self.stats = {"prefills": 0, "decode_steps": 0, "tokens_out": 0}
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, np.asarray(prompt, np.int32), max_new_tokens))
+        return rid
+
+    def _fill_lanes(self):
+        for i in range(self.lanes):
+            if self._lane_req[i] is None and self._queue:
+                req = self._queue.pop(0)
+                cache, _ = build_cache(self.cfg, 1, self.max_len)
+                tokens = jnp.asarray(req.prompt[None, :])
+                logits, cache = self.prefill(self.params, tokens, cache)
+                tok = int(jnp.argmax(logits[0]))
+                req.out_tokens.append(tok)
+                self._lane_req[i] = req
+                self._lane_cache[i] = cache
+                self._lane_pos[i] = len(req.prompt)
+                self.stats["prefills"] += 1
+
+    def step(self) -> bool:
+        """One scheduler step: refill lanes, decode one token per active
+        lane. Returns False when idle."""
+        self._fill_lanes()
+        active = [i for i in range(self.lanes) if self._lane_req[i] is not None]
+        if not active:
+            return False
+        for i in active:
+            req = self._lane_req[i]
+            last = jnp.asarray([req.out_tokens[-1]], jnp.int32)
+            logits, cache = self.decode(
+                self.params, last, self._lane_cache[i], jnp.int32(self._lane_pos[i])
+            )
+            self._lane_cache[i] = cache
+            self._lane_pos[i] += 1
+            tok = int(jnp.argmax(logits[0]))
+            req.out_tokens.append(tok)
+            self.stats["decode_steps"] += 1
+            self.stats["tokens_out"] += 1
+            if len(req.out_tokens) >= req.max_new_tokens or self._lane_pos[i] >= self.max_len - 1:
+                req.done = True
+                self._lane_req[i] = None
+                self._lane_cache[i] = None
+        return True
+
+    def run_until_idle(self, max_steps: int = 10_000) -> list[Request]:
+        finished: list[Request] = []
+        seen: set[int] = set()
+        all_reqs: list[Request] = list(self._queue)
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        for r in all_reqs:
+            if r.done and r.rid not in seen:
+                finished.append(r)
+                seen.add(r.rid)
+        return finished

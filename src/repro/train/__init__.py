@@ -1,0 +1,9 @@
+from repro.train.loop import (
+    StepWatchdog,
+    TrainConfig,
+    batch_sharding,
+    init_train_state,
+    make_train_step,
+    train,
+)
+from repro.train.loop import shape_for_microbatches

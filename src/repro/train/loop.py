@@ -1,0 +1,273 @@
+"""Distributed training loop: pjit train_step, microbatch gradient
+accumulation, preemption-safe checkpointing, step-time watchdog.
+
+Fault-tolerance posture (1000+-node):
+  * Checkpoint every ``ckpt_every`` steps (async) + a final sync save; a
+    SIGTERM (TPU preemption notice) triggers an immediate synchronous save
+    before exit. Restart resumes from the latest COMMITted step, and the
+    data pipeline replays deterministically from that step (see
+    repro.data.pipeline).
+  * Elastic: restore re-shards onto whatever mesh the relaunch built
+    (checkpoints are mesh-agnostic; see repro.checkpoint.store).
+  * Straggler stance: TPU SPMD steps are globally synchronous, so per-step
+    straggler dodging (the GPU-world trick) does not apply; what remains is
+    (a) host input stalls — hidden by the Prefetcher, (b) a persistently
+    slow/failed host — detected by the step-time watchdog here and resolved
+    by checkpoint-restart ejection at the cluster layer.
+  * Collective/compute overlap: gradient accumulation psums ONCE per step
+    (not per microbatch) and XLA's latency-hiding scheduler overlaps the
+    FSDP all-gathers with layer compute under scan (flags in
+    launch/train.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import sharding_for, tree_shardings
+from repro.models import build_lm, lm_loss
+from repro.optim.optimizers import (
+    OptimizerConfig,
+    clip_by_global_norm,
+    make_optimizer,
+    opt_state_axes,
+    optimizer_config_from_model,
+)
+
+Array = jax.Array
+_IS_AX = lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)  # noqa: E731
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    microbatches: int = 1            # gradient accumulation
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = ""
+    keep_last: int = 3
+    watchdog_factor: float = 3.0     # flag steps slower than factor * median
+    grad_compression: str = "none"   # none | bf16 (cross-pod reduce)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: OptimizerConfig,
+    *,
+    microbatches: int = 1,
+) -> Callable:
+    """Builds train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). Pure; jit/pjit-able. Batch: {"tokens": (B, S), "labels": ...}."""
+    _, update = make_optimizer(opt_cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def loss_fn(params, mb):
+        # Master-weight cast: params are cast to the compute dtype HERE,
+        # while still sharded, so FSDP all-gathers (and the matching
+        # gradient reduce-scatters) move bf16 on the wire — the f32 masters
+        # never leave their home chip. The optimizer below updates the f32
+        # masters with the (locally re-cast) f32 grads.
+        params_c = jax.tree.map(
+            lambda p: p.astype(cdt) if jnp.issubdtype(p.dtype, jnp.floating) else p,
+            params,
+        )
+        return lm_loss(cfg, params_c, mb)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            # Batch arrives PRE-SHAPED (mb, B/mb, ...) with dim 1 sharded
+            # over the data axes (see shape_for_microbatches) so microbatch
+            # indexing never slices across shards. Grads psum once per STEP,
+            # not per microbatch (collective/compute overlap posture).
+            def acc_body(i, carry):
+                gacc, lacc = carry
+                mb = jax.tree.map(lambda t: t[i], batch)
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return (
+                    jax.tree.map(lambda a, b: a + b, gacc, g),
+                    lacc + l,
+                )
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, loss = jax.lax.fori_loop(
+                0, microbatches, acc_body, (zeros, jnp.zeros((), jnp.float32))
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics_aux = {}
+        else:
+            (loss, metrics_aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        params, opt_state = update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        if isinstance(metrics_aux, dict):
+            metrics.update({k: v for k, v in metrics_aux.items() if k != "loss"})
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, mesh: Mesh, seed: int = 0):
+    """Initialises (params, opt_state) SHARDED on the mesh, plus shardings.
+
+    Init happens under jit with out_shardings so no host ever materialises
+    the full parameter set (required for the 100B+ configs)."""
+    opt_cfg = optimizer_config_from_model(cfg)
+    params_abs, axes = build_lm(cfg, key=None)
+    p_sh = tree_shardings(axes, mesh, jax.tree.map(lambda s: s.shape, params_abs))
+    opt_init, _ = make_optimizer(opt_cfg)
+    opt_abs = jax.eval_shape(opt_init, params_abs)
+    opt_axes = opt_state_axes(opt_cfg, axes, params_abs)
+    o_sh = tree_shardings(opt_axes, mesh, jax.tree.map(lambda s: s.shape, opt_abs))
+
+    with jax.set_mesh(mesh):
+        params = jax.jit(
+            lambda k: build_lm(cfg, k)[0], out_shardings=p_sh
+        )(jax.random.PRNGKey(seed))
+        opt_state = jax.jit(opt_init, out_shardings=o_sh)(params)
+    return params, opt_state, p_sh, o_sh, axes
+
+
+def batch_sharding(mesh: Mesh, batch_abs: Any, *, microbatches: int = 1):
+    def spec(s):
+        if microbatches > 1:
+            ax = (None, "batch") + (None,) * (len(s.shape) - 2)
+        else:
+            ax = ("batch",) + (None,) * (len(s.shape) - 1)
+        return sharding_for(ax, mesh, s.shape)
+
+    return jax.tree.map(lambda s: spec(s), batch_abs)
+
+
+def shape_for_microbatches(batch: Any, microbatches: int) -> Any:
+    """Host-side reshape (B, ...) -> (mb, B/mb, ...)."""
+    if microbatches <= 1:
+        return batch
+    return jax.tree.map(
+        lambda t: t.reshape((microbatches, t.shape[0] // microbatches) + t.shape[1:]),
+        batch,
+    )
+
+
+class StepWatchdog:
+    """Flags steps slower than ``factor`` x running median (straggler/
+    interference detection signal for the cluster layer)."""
+
+    def __init__(self, factor: float = 3.0, warmup: int = 5):
+        self.factor = factor
+        self.warmup = warmup
+        self.times: list[float] = []
+        self.flagged: list[tuple[int, float]] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        self.times.append(dt)
+        if len(self.times) <= self.warmup:
+            return False
+        med = float(np.median(self.times[-50:]))
+        if dt > self.factor * med:
+            self.flagged.append((step, dt))
+            return True
+        return False
+
+
+def train(
+    cfg: ModelConfig,
+    train_cfg: TrainConfig,
+    mesh: Mesh,
+    dataset,
+    *,
+    seed: int = 0,
+    log_fn=print,
+):
+    """End-to-end training driver (used by examples/train_lm.py)."""
+    from repro.checkpoint.store import CheckpointManager, latest_step, restore_checkpoint
+
+    opt_cfg = optimizer_config_from_model(cfg)
+    params, opt_state, p_sh, o_sh, _ = init_train_state(cfg, mesh, seed)
+
+    start_step = 0
+    manager = None
+    if train_cfg.ckpt_dir:
+        manager = CheckpointManager(train_cfg.ckpt_dir, keep_last=train_cfg.keep_last)
+        last = latest_step(train_cfg.ckpt_dir)
+        if last is not None:
+            (params, opt_state), extra = restore_checkpoint(
+                train_cfg.ckpt_dir, last, (params, opt_state), (p_sh, o_sh)
+            )
+            start_step = int(extra.get("step", last)) + 1
+            log_fn(f"[train] restored step {last}, resuming at {start_step}")
+
+    mb = train_cfg.microbatches
+    step_fn = make_train_step(cfg, opt_cfg, microbatches=mb)
+    batch0 = shape_for_microbatches(dataset.batch_at(start_step), mb)
+    b_sh = batch_sharding(
+        mesh,
+        jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch0),
+        microbatches=mb,
+    )
+    jit_step = jax.jit(
+        step_fn,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1),
+    )
+
+    # Preemption handling: SIGTERM -> synchronous save + exit.
+    preempted = {"flag": False}
+
+    def _on_sigterm(signum, frame):
+        preempted["flag"] = True
+
+    old_handler = signal.signal(signal.SIGTERM, _on_sigterm)
+
+    watchdog = StepWatchdog(train_cfg.watchdog_factor)
+    history = []
+    try:
+        with jax.set_mesh(mesh):
+            for step in range(start_step, train_cfg.steps):
+                t0 = time.perf_counter()
+                batch = jax.tree.map(
+                    jnp.asarray, shape_for_microbatches(dataset.batch_at(step), mb)
+                )
+                params, opt_state, metrics = jit_step(params, opt_state, batch)
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                slow = watchdog.record(step, dt)
+                history.append({"step": step, "loss": loss, "dt": dt})
+                if step % train_cfg.log_every == 0 or slow:
+                    flag = " [SLOW-STEP]" if slow else ""
+                    log_fn(
+                        f"[train] step {step} loss {loss:.4f} "
+                        f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms{flag}"
+                    )
+                if manager and step and step % train_cfg.ckpt_every == 0:
+                    manager.save_async(step, (params, opt_state), {"step": step})
+                if preempted["flag"]:
+                    log_fn(f"[train] SIGTERM at step {step}: sync checkpoint + exit")
+                    if manager:
+                        manager.wait()
+                        manager.save_async(step, (params, opt_state), {"step": step})
+                        manager.wait()
+                    break
+            else:
+                if manager:
+                    manager.wait()
+                    manager.save_async(train_cfg.steps - 1, (params, opt_state),
+                                       {"step": train_cfg.steps - 1})
+                    manager.wait()
+    finally:
+        signal.signal(signal.SIGTERM, old_handler)
+    return params, opt_state, history

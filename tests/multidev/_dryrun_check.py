@@ -1,0 +1,45 @@
+"""Subprocess body: the dry-run machinery on an 8-device mesh with smoke
+configs — lower + compile + cost/memory/collective extraction end-to-end
+for one train, one prefill, one decode cell across model families.
+"""
+
+import os
+
+assert "--xla_force_host_platform_device_count=8" in os.environ.get("XLA_FLAGS", "")
+
+import dataclasses
+
+import numpy as np
+import jax
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.launch.dryrun import parse_collective_bytes
+from repro.launch.inputs import make_lowering_spec
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 4), ("data", "model"))
+
+CASES = [
+    ("qwen3-moe-235b-a22b", ShapeConfig("t", 64, 4, "train")),
+    ("starcoder2-3b", ShapeConfig("p", 64, 4, "prefill")),
+    ("recurrentgemma-2b", ShapeConfig("d", 64, 4, "decode")),
+    ("rwkv6-3b", ShapeConfig("d", 64, 4, "decode")),
+    ("llama-3.2-vision-90b", ShapeConfig("t", 64, 4, "train")),
+]
+
+for arch, shape in CASES:
+    cfg = dataclasses.replace(get_smoke_config(arch), remat=False)
+    spec = make_lowering_spec(cfg, shape, mesh)
+    jt = jax.jit(spec.fn, in_shardings=spec.in_shardings, out_shardings=spec.out_shardings)
+    with jax.set_mesh(mesh):
+        compiled = jt.lower(*spec.args).compile()
+    cost = compiled.cost_analysis()
+    assert cost.get("flops", 0) > 0, (arch, shape.kind)
+    mem = compiled.memory_analysis()
+    assert mem.temp_size_in_bytes >= 0
+    coll = parse_collective_bytes(compiled.as_text())
+    print(f"{arch} {shape.kind}: flops={cost.get('flops'):.2e} "
+          f"coll_bytes={coll['bytes']['total']:.2e} counts={coll['counts']}")
+
+print("ALL_OK")

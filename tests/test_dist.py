@@ -1,0 +1,116 @@
+"""Distribution-layer tests.
+
+Multi-device correctness runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the main pytest
+process must keep seeing exactly 1 device, per the dry-run contract).
+Single-process tests cover the sharding-rule logic, which is pure.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import spec_for
+from repro.launch.mesh import make_host_mesh
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run_subprocess(script: str, n_dev: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "multidev" / script)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+@pytest.mark.multidev
+def test_halo_and_compression_multidevice():
+    out = _run_subprocess("_halo_check.py")
+    assert "ALL_OK" in out
+
+
+# --- sharding rules (pure logic, fake mesh via the real 1-device mesh) -------
+
+
+class FakeMesh:
+    """Duck-typed mesh: only axis_names + devices.shape are consulted."""
+
+    def __init__(self, shape, axes):
+        import numpy as np
+
+        self.axis_names = axes
+        self.devices = np.empty(shape, dtype=object)
+
+
+def test_spec_batch_folds_pod():
+    mesh = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    spec = spec_for(("batch", "seq", "embed"), mesh, (256, 4096, 1024))
+    assert spec == P(("pod", "data"), None, None)
+
+
+def test_spec_divisibility_fallback():
+    mesh = FakeMesh((16, 16), ("data", "model"))
+    # 24 heads don't divide 16 -> replicate that dim.
+    spec = spec_for(("batch", "heads", "head_dim"), mesh, (256, 24, 128))
+    assert spec == P("data", None, None)
+    # 64 heads divide 16 -> sharded.
+    spec = spec_for(("batch", "heads", "head_dim"), mesh, (256, 64, 128))
+    assert spec == P("data", "model", None)
+
+
+def test_spec_no_double_assignment():
+    mesh = FakeMesh((16, 16), ("data", "model"))
+    # Both logical axes want "model"; only the first gets it.
+    spec = spec_for(("heads", "mlp"), mesh, (64, 12288))
+    assert spec == P("model", None)
+
+
+def test_spec_decode_kv_seq():
+    mesh = FakeMesh((16, 16), ("data", "model"))
+    spec = spec_for(("batch", "kv_seq", "kv_heads", "head_dim"), mesh, (128, 32768, 8, 128), mode="decode")
+    assert spec == P("data", "model", None, None)
+    # In train mode kv_seq is replicated; 8 kv heads can't shard 16-way so
+    # they fall back to replication too.
+    spec = spec_for(("batch", "kv_seq", "kv_heads", "head_dim"), mesh, (128, 32768, 8, 128), mode="train")
+    assert spec == P("data", None, None, None)
+    # With 16 kv heads the head dim shards.
+    spec = spec_for(("batch", "kv_seq", "kv_heads", "head_dim"), mesh, (128, 32768, 16, 128), mode="train")
+    assert spec == P("data", None, "model", None)
+
+
+def test_spec_fsdp_partial_divisibility():
+    mesh = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    # dim 32 divides 32 (pod*data) -> both axes; dim 16 only divides data.
+    assert spec_for(("fsdp",), mesh, (32,)) == P(("pod", "data"))
+    assert spec_for(("fsdp",), mesh, (16,)) == P(("data",))
+
+
+def test_host_mesh_single_device():
+    mesh = make_host_mesh()
+    assert mesh.devices.size == len(jax.devices())
+
+
+@pytest.mark.multidev
+def test_moe_sharded_multidevice():
+    out = _run_subprocess("_moe_check.py")
+    assert "ALL_OK" in out
+
+
+@pytest.mark.multidev
+def test_dryrun_machinery_multidevice():
+    out = _run_subprocess("_dryrun_check.py")
+    assert "ALL_OK" in out

@@ -1,0 +1,114 @@
+"""hdiff correctness vs a NumPy loop oracle (Alg. 1 / Eq. 1-4, verbatim)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import hdiff, hdiff_simple, hdiff_staged, make_hdiff_compound
+
+
+def hdiff_oracle(src: np.ndarray, coeff, limit: bool) -> np.ndarray:
+    """Direct transcription of the paper's Algorithm 1 (plus the Eq. 2-3
+    limiter when ``limit``). Triple loop; small grids only."""
+    src = np.asarray(src, dtype=np.float64)
+    depth, rows, cols = src.shape
+    coeff_arr = np.broadcast_to(np.asarray(coeff, dtype=np.float64), src.shape)
+    dst = src.copy()
+
+    def lap(d, r, c):
+        return (
+            4.0 * src[d, r, c]
+            - src[d, r + 1, c]
+            - src[d, r - 1, c]
+            - src[d, r, c + 1]
+            - src[d, r, c - 1]
+        )
+
+    def limited(dlap, dpsi):
+        if not limit:
+            return dlap
+        return dlap if dlap * dpsi <= 0 else 0.0
+
+    for d in range(depth):
+        for r in range(2, rows - 2):
+            for c in range(2, cols - 2):
+                lap_cr = lap(d, r, c)
+                lap_rp = lap(d, r + 1, c)
+                lap_rm = lap(d, r - 1, c)
+                lap_cp = lap(d, r, c + 1)
+                lap_cm = lap(d, r, c - 1)
+                flx_r = limited(lap_rp - lap_cr, src[d, r + 1, c] - src[d, r, c])
+                flx_rm = limited(lap_cr - lap_rm, src[d, r, c] - src[d, r - 1, c])
+                flx_c = limited(lap_cp - lap_cr, src[d, r, c + 1] - src[d, r, c])
+                flx_cm = limited(lap_cr - lap_cm, src[d, r, c] - src[d, r, c - 1])
+                dst[d, r, c] = src[d, r, c] - coeff_arr[d, r, c] * (
+                    (flx_r - flx_rm) + (flx_c - flx_cm)
+                )
+    return dst
+
+
+@pytest.fixture(scope="module")
+def small_grid():
+    rng = np.random.default_rng(0)
+    return rng.standard_normal((3, 12, 10)).astype(np.float32)
+
+
+@pytest.mark.parametrize("limit", [True, False])
+def test_hdiff_matches_loop_oracle(small_grid, limit):
+    coeff = 0.025
+    want = hdiff_oracle(small_grid, coeff, limit)
+    fn = hdiff if limit else hdiff_simple
+    got = np.asarray(fn(jnp.asarray(small_grid), coeff))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_hdiff_per_point_coeff(small_grid):
+    rng = np.random.default_rng(1)
+    coeff = rng.uniform(0.0, 0.1, size=small_grid.shape).astype(np.float32)
+    want = hdiff_oracle(small_grid, coeff, True)
+    got = np.asarray(hdiff(jnp.asarray(small_grid), jnp.asarray(coeff)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_hdiff_boundary_passthrough(small_grid):
+    out = np.asarray(hdiff(jnp.asarray(small_grid)))
+    np.testing.assert_array_equal(out[:, :2, :], small_grid[:, :2, :])
+    np.testing.assert_array_equal(out[:, -2:, :], small_grid[:, -2:, :])
+    np.testing.assert_array_equal(out[:, :, :2], small_grid[:, :, :2])
+    np.testing.assert_array_equal(out[:, :, -2:], small_grid[:, :, -2:])
+
+
+def test_staged_equals_fused(small_grid):
+    x = jnp.asarray(small_grid)
+    np.testing.assert_allclose(
+        np.asarray(hdiff_staged(x, 0.025, limit=True)),
+        np.asarray(hdiff(x, 0.025)),
+        rtol=1e-6,
+        atol=1e-6,
+    )
+
+
+def test_compound_dag_equals_hdiff(small_grid):
+    x = jnp.asarray(small_grid)
+    comp = make_hdiff_compound(coeff=0.025, limit=True)
+    for policy in ("fused-xla", "staged"):
+        np.testing.assert_allclose(
+            np.asarray(comp.apply(x, policy=policy)),
+            np.asarray(hdiff(x, 0.025)),
+            rtol=1e-6,
+            atol=1e-6,
+        )
+
+
+def test_hdiff_constant_field_is_fixed_point():
+    x = jnp.full((2, 10, 10), 3.25, jnp.float32)
+    np.testing.assert_allclose(np.asarray(hdiff(x)), np.asarray(x), rtol=0, atol=0)
+
+
+def test_hdiff_depth_is_batch_dim(small_grid):
+    """Planes must be independent (the paper parallelises over depth)."""
+    x = jnp.asarray(small_grid)
+    whole = hdiff(x, 0.025)
+    per_plane = jnp.stack([hdiff(x[d], 0.025) for d in range(x.shape[0])])
+    np.testing.assert_allclose(np.asarray(whole), np.asarray(per_plane), rtol=0, atol=0)

@@ -1,0 +1,40 @@
+"""TP head-padding (arctic 56->64): padded model must be EXACTLY the
+unpadded model — dead heads contribute nothing and receive zero grads."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import layers as L
+
+
+def test_pad_heads_exact_and_dead():
+    cfg0 = dataclasses.replace(
+        get_smoke_config("arctic-480b"), compute_dtype="float32",
+        n_heads=6, n_kv_heads=2, head_dim=16, pad_heads_to=0,
+    )
+    cfg1 = dataclasses.replace(cfg0, pad_heads_to=8)
+    p1, _ = L.init_attention(cfg1, jax.random.PRNGKey(0))
+    # group-major layout: kv0 -> heads [0,1,2,(3 dead)], kv1 -> [4,5,6,(7 dead)]
+    real = jnp.asarray([0, 1, 2, 4, 5, 6])
+    p0 = dict(p1)
+    p0["wq"] = p1["wq"][:, real]
+    p0["wo"] = p1["wo"][real]
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg0.d_model), jnp.float32)
+    y1, _ = L.attention_apply(cfg1, p1, x)
+    y0, _ = L.attention_apply(cfg0, p0, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=1e-5, atol=1e-6)
+
+    g = jax.grad(lambda p: jnp.sum(L.attention_apply(cfg1, p, x)[0] ** 2))(p1)
+    dead = jnp.asarray([3, 7])
+    assert float(jnp.abs(g["wq"][:, dead]).max()) == 0.0
+    assert float(jnp.abs(g["wo"][dead]).max()) == 0.0
+
+
+def test_arctic_config_pads():
+    cfg = get_config("arctic-480b")
+    assert cfg.pad_heads_to == 64
+    assert cfg.n_heads == 56  # the ARCHITECTURE stays 56 heads

@@ -1,0 +1,44 @@
+"""Temporal-blocked hdiff kernel == hdiff(hdiff(x)) composed oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import hdiff, hdiff_simple
+from repro.kernels.hdiff.multistep import hdiff_twostep
+
+
+def _rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("shape", [(1, 16, 12), (2, 32, 32), (1, 64, 48)])
+@pytest.mark.parametrize("limit", [True, False])
+def test_twostep_matches_composed(shape, limit):
+    x = _rand(shape, seed=shape[1])
+    ref = hdiff if limit else hdiff_simple
+    want = ref(ref(x, 0.025), 0.025)
+    got = hdiff_twostep(x, 0.025, limit=limit, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_rows", [8, 16, 32])
+def test_twostep_block_sweep(block_rows):
+    x = _rand((1, 32, 24), seed=5)
+    want = hdiff(hdiff(x, 0.05), 0.05)
+    got = hdiff_twostep(x, 0.05, block_rows=block_rows, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_twostep_boundary_ring_preserved():
+    x = _rand((1, 20, 20), seed=7)
+    got = np.asarray(hdiff_twostep(x, interpret=True))
+    np.testing.assert_array_equal(got[:, :2, :], np.asarray(x[:, :2, :]))
+    np.testing.assert_array_equal(got[:, -2:, :], np.asarray(x[:, -2:, :]))
+
+
+def test_twostep_rejects_tiny_blocks():
+    x = _rand((1, 16, 16))
+    with pytest.raises(ValueError):
+        hdiff_twostep(x, block_rows=4, interpret=True)

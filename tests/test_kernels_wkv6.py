@@ -1,0 +1,46 @@
+"""WKV-6 kernel + chunked form vs sequential oracle, shape sweeps."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.wkv6 import wkv6, wkv6_chunked_ref, wkv6_ref
+
+
+def _inputs(b=2, t=32, h=2, n=16, seed=0):
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.standard_normal((b, t, h, n)).astype(np.float32)) * 0.5
+    k = jnp.asarray(rng.standard_normal((b, t, h, n)).astype(np.float32)) * 0.5
+    v = jnp.asarray(rng.standard_normal((b, t, h, n)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.6, 0.999, (b, t, h, n)).astype(np.float32))
+    u = jnp.asarray(rng.standard_normal((h, n)).astype(np.float32)) * 0.3
+    s0 = jnp.asarray(rng.standard_normal((b, h, n, n)).astype(np.float32)) * 0.1
+    return r, k, v, w, u, s0
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_chunked_ref_matches_sequential(chunk):
+    r, k, v, w, u, s0 = _inputs()
+    y_seq, s_seq = wkv6_ref(r, k, v, w, u, s0)
+    y_ch, s_ch = wkv6_chunked_ref(r, k, v, w, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_ch), np.asarray(y_seq), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_ch), np.asarray(s_seq), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("shape", [(1, 16, 1, 8), (2, 64, 3, 16), (1, 128, 2, 32)])
+@pytest.mark.parametrize("chunk", [8, 16])
+def test_kernel_matches_oracle(shape, chunk):
+    b, t, h, n = shape
+    r, k, v, w, u, s0 = _inputs(b, t, h, n, seed=shape[1])
+    y_ref, s_ref = wkv6_ref(r, k, v, w, u, s0)
+    y, s = wkv6(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=3e-4, atol=3e-4)
+
+
+def test_kernel_zero_state_default():
+    r, k, v, w, u, _ = _inputs(1, 16, 1, 8)
+    y_ref, _ = wkv6_ref(r, k, v, w, u, None)
+    y, _ = wkv6(r, k, v, w, u, None, chunk=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=3e-4, atol=3e-4)

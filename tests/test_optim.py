@@ -1,0 +1,114 @@
+"""Optimizer correctness: AdamW vs a NumPy reference, Adafactor invariants,
+schedule shape, clipping."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.optim import (
+    OptimizerConfig,
+    clip_by_global_norm,
+    make_optimizer,
+    schedule_lr,
+)
+
+
+def _tree():
+    rng = np.random.default_rng(0)
+    return {
+        "w": jnp.asarray(rng.standard_normal((8, 4)).astype(np.float32)),
+        "b": jnp.asarray(rng.standard_normal((4,)).astype(np.float32)),
+    }
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = OptimizerConfig(name="adamw", learning_rate=1e-2, b1=0.9, b2=0.99,
+                          eps=1e-8, weight_decay=0.01, warmup_steps=0,
+                          total_steps=10_000, min_lr_ratio=1.0)
+    params = _tree()
+    grads = jax.tree.map(lambda p: 0.1 * jnp.ones_like(p), params)
+    init, update = make_optimizer(cfg)
+    state = init(params)
+
+    p_np = {k: np.asarray(v, np.float64) for k, v in params.items()}
+    m_np = {k: np.zeros_like(v) for k, v in p_np.items()}
+    v_np = {k: np.zeros_like(v) for k, v in p_np.items()}
+
+    new_params, new_state = params, state
+    for t in range(1, 4):
+        new_params, new_state = update(grads, new_state, new_params)
+        lr = 1e-2  # constant (warmup 0, no decay because min_lr_ratio=1)
+        for k in p_np:
+            g = 0.1
+            m_np[k] = 0.9 * m_np[k] + 0.1 * g
+            v_np[k] = 0.99 * v_np[k] + 0.01 * g * g
+            mh = m_np[k] / (1 - 0.9**t)
+            vh = v_np[k] / (1 - 0.99**t)
+            p_np[k] = p_np[k] - lr * (mh / (np.sqrt(vh) + 1e-8) + 0.01 * p_np[k])
+    for k in p_np:
+        np.testing.assert_allclose(np.asarray(new_params[k]), p_np[k], rtol=1e-4, atol=1e-6)
+
+
+def test_adamw_moment_dtype_bf16():
+    cfg = OptimizerConfig(name="adamw", moment_dtype="bfloat16")
+    params = _tree()
+    init, update = make_optimizer(cfg)
+    state = init(params)
+    assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(state.mu))
+    grads = jax.tree.map(jnp.ones_like, params)
+    p2, s2 = update(grads, state, params)
+    assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(s2.mu))
+    assert all(bool(jnp.all(jnp.isfinite(l.astype(jnp.float32)))) for l in jax.tree.leaves(p2))
+
+
+def test_adafactor_memory_is_factored():
+    cfg = OptimizerConfig(name="adafactor", factored_threshold=16)
+    params = {"big": jnp.zeros((64, 32)), "small": jnp.zeros((3,))}
+    init, update = make_optimizer(cfg)
+    state = init(params)
+    assert state.vr["big"].shape == (64,)
+    assert state.vc["big"].shape == (32,)
+    assert state.vr["small"].shape == (3,)
+    grads = jax.tree.map(jnp.ones_like, params)
+    p2, s2 = update(grads, state, params)
+    assert p2["big"].shape == (64, 32)
+    assert bool(jnp.all(jnp.isfinite(p2["big"])))
+
+
+def test_adafactor_reduces_loss_on_quadratic():
+    cfg = OptimizerConfig(name="adafactor", learning_rate=0.1, weight_decay=0.0,
+                          warmup_steps=0, min_lr_ratio=1.0, factored_threshold=4)
+    target = jnp.asarray(np.random.default_rng(1).standard_normal((16, 8)).astype(np.float32))
+    params = {"w": jnp.zeros((16, 8))}
+    init, update = make_optimizer(cfg)
+    state = init(params)
+    loss = lambda p: jnp.mean((p["w"] - target) ** 2)  # noqa: E731
+    l0 = float(loss(params))
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state = update(g, state, params)
+    assert float(loss(params)) < 0.3 * l0
+
+
+def test_schedule_warmup_and_decay():
+    cfg = OptimizerConfig(learning_rate=1.0, warmup_steps=10, total_steps=110, min_lr_ratio=0.1)
+    lr0 = float(schedule_lr(cfg, jnp.int32(0)))
+    lr5 = float(schedule_lr(cfg, jnp.int32(5)))
+    lr10 = float(schedule_lr(cfg, jnp.int32(10)))
+    lr_end = float(schedule_lr(cfg, jnp.int32(110)))
+    assert lr0 == 0.0
+    assert abs(lr5 - 0.5) < 1e-6
+    assert abs(lr10 - 1.0) < 1e-6
+    assert abs(lr_end - 0.1) < 1e-3
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((4,), 10.0)}
+    clipped, gnorm = clip_by_global_norm(grads, 1.0)
+    assert abs(float(gnorm) - 20.0) < 1e-4
+    norm_after = float(jnp.linalg.norm(clipped["a"]))
+    assert abs(norm_after - 1.0) < 1e-4
+    # under the limit -> unchanged
+    clipped2, _ = clip_by_global_norm(grads, 100.0)
+    np.testing.assert_allclose(np.asarray(clipped2["a"]), np.asarray(grads["a"]))

@@ -1,0 +1,20 @@
+"""rwkv6 model with chunked WKV must equal the sequential-scan model."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import build_lm, lm_forward
+
+
+def test_chunked_model_matches_sequential():
+    cfg = dataclasses.replace(get_smoke_config("rwkv6-3b"), compute_dtype="float32")
+    params, _ = build_lm(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size)
+    l_seq, _ = lm_forward(cfg, params, tokens)
+    cfg_c = dataclasses.replace(cfg, rwkv_chunk=8)
+    l_ch, _ = lm_forward(cfg_c, params, tokens)
+    np.testing.assert_allclose(np.asarray(l_ch), np.asarray(l_seq), rtol=2e-4, atol=2e-4)

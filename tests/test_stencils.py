@@ -1,0 +1,96 @@
+"""Elementary stencil correctness vs NumPy loop oracles (§3.5 suite)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    jacobi1d,
+    jacobi2d_3pt,
+    jacobi2d_5pt,
+    jacobi2d_9pt,
+    lap_field,
+    laplacian,
+    seidel2d_exact,
+    seidel2d_sweep,
+)
+
+
+@pytest.fixture(scope="module")
+def grid2d():
+    rng = np.random.default_rng(42)
+    return rng.standard_normal((9, 11)).astype(np.float32)
+
+
+def test_jacobi1d(grid2d):
+    x = grid2d[0]
+    want = x.copy()
+    for i in range(1, len(x) - 1):
+        want[i] = (x[i - 1] + x[i] + x[i + 1]) / 3.0
+    np.testing.assert_allclose(np.asarray(jacobi1d(jnp.asarray(x))), want, rtol=1e-6)
+
+
+def test_jacobi1d_batched(grid2d):
+    out = np.asarray(jacobi1d(jnp.asarray(grid2d)))
+    for r in range(grid2d.shape[0]):
+        np.testing.assert_allclose(out[r], np.asarray(jacobi1d(jnp.asarray(grid2d[r]))), rtol=0)
+
+
+def test_jacobi2d_3pt(grid2d):
+    want = grid2d.copy()
+    for i in range(1, grid2d.shape[0] - 1):
+        for j in range(1, grid2d.shape[1] - 1):
+            want[i, j] = (grid2d[i - 1, j] + grid2d[i, j] + grid2d[i + 1, j]) / 3.0
+    np.testing.assert_allclose(np.asarray(jacobi2d_3pt(jnp.asarray(grid2d))), want, rtol=1e-5)
+
+
+def test_laplacian(grid2d):
+    want = grid2d.copy()
+    for i in range(1, grid2d.shape[0] - 1):
+        for j in range(1, grid2d.shape[1] - 1):
+            want[i, j] = (
+                4 * grid2d[i, j]
+                - grid2d[i + 1, j]
+                - grid2d[i - 1, j]
+                - grid2d[i, j + 1]
+                - grid2d[i, j - 1]
+            )
+    np.testing.assert_allclose(np.asarray(laplacian(jnp.asarray(grid2d))), want, rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(lap_field(jnp.asarray(grid2d))), want[1:-1, 1:-1], rtol=1e-5
+    )
+
+
+def test_jacobi2d_5pt(grid2d):
+    want = grid2d.copy()
+    for i in range(1, grid2d.shape[0] - 1):
+        for j in range(1, grid2d.shape[1] - 1):
+            want[i, j] = 0.2 * (
+                grid2d[i, j] + grid2d[i + 1, j] + grid2d[i - 1, j] + grid2d[i, j + 1] + grid2d[i, j - 1]
+            )
+    np.testing.assert_allclose(np.asarray(jacobi2d_5pt(jnp.asarray(grid2d))), want, rtol=1e-5)
+
+
+def test_jacobi2d_9pt(grid2d):
+    want = grid2d.copy()
+    for i in range(1, grid2d.shape[0] - 1):
+        for j in range(1, grid2d.shape[1] - 1):
+            want[i, j] = grid2d[i - 1 : i + 2, j - 1 : j + 2].sum() / 9.0
+    np.testing.assert_allclose(np.asarray(jacobi2d_9pt(jnp.asarray(grid2d))), want, rtol=1e-5)
+
+
+def test_seidel2d_exact(grid2d):
+    want = grid2d.astype(np.float64).copy()
+    for i in range(1, grid2d.shape[0] - 1):
+        for j in range(1, grid2d.shape[1] - 1):
+            want[i, j] = want[i - 1 : i + 2, j - 1 : j + 2].sum() / 9.0
+    got = np.asarray(seidel2d_exact(jnp.asarray(grid2d)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_seidel_sweep_is_9pt(grid2d):
+    np.testing.assert_allclose(
+        np.asarray(seidel2d_sweep(jnp.asarray(grid2d))),
+        np.asarray(jacobi2d_9pt(jnp.asarray(grid2d))),
+        rtol=0,
+    )
