@@ -1,4 +1,6 @@
 """repro: SPARTA-on-TPU — compound weather-stencil acceleration in JAX/Pallas
 plus the multi-arch LM framework substrate (see DESIGN.md)."""
 
+from repro import compat as _compat  # noqa: F401  (backfills jax API names)
+
 __version__ = "1.0.0"

@@ -1,0 +1,142 @@
+"""JAX version-compatibility layer.
+
+The codebase is written against the unified sharding API of recent JAX
+(``jax.set_mesh``, ``jax.shard_map``, ``jax.sharding.AxisType``,
+``jax.sharding.get_abstract_mesh``, ``jax.make_mesh(..., axis_types=...)``).
+The pinned container toolchain ships jax 0.4.x, where those names either do
+not exist or live under ``jax.experimental``. Importing :mod:`repro`
+installs the missing names onto the ``jax`` namespace so the SAME source
+runs on both. Every patch is gated on ``hasattr`` — on a new-enough JAX
+this module is a no-op.
+
+Nothing here changes behaviour that already exists; it only backfills:
+
+  * ``jax.shard_map``            <- ``jax.experimental.shard_map.shard_map``
+    (keyword-only calling convention, ``check_vma`` -> ``check_rep``).
+  * ``jax.set_mesh(mesh)``       -> context manager recording the ambient
+    mesh consulted by :func:`repro.dist.sharding._ambient_mesh` (and hence
+    ``constrain`` / the MoE shard_map path).
+  * ``jax.sharding.get_abstract_mesh()`` -> returns the ambient mesh.
+  * ``jax.sharding.AxisType``    -> minimal Auto/Explicit/Manual enum.
+  * ``jax.make_mesh``            -> wrapper accepting (and dropping) the
+    ``axis_types=`` keyword on versions whose signature predates it.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding as _jsharding
+
+
+def _ambient():  # late import: repro.dist owns the context variable
+    from repro.dist import sharding as _s
+
+    return _s
+
+
+# --- jax.shard_map -----------------------------------------------------------
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+    @functools.wraps(_shard_map_impl)
+    def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                   check_rep=None, **kwargs):
+        if check_vma is not None:  # new-API spelling of check_rep
+            kwargs["check_rep"] = check_vma
+        elif check_rep is not None:
+            kwargs["check_rep"] = check_rep
+        return _shard_map_impl(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+
+    jax.shard_map = _shard_map
+
+
+# --- jax.set_mesh ------------------------------------------------------------
+
+if not hasattr(jax, "set_mesh"):
+
+    def _set_mesh(mesh):
+        return _ambient().use_mesh(mesh)  # one ambient-mesh protocol, one home
+
+    jax.set_mesh = _set_mesh
+
+
+# --- jax.sharding.get_abstract_mesh ------------------------------------------
+
+if not hasattr(_jsharding, "get_abstract_mesh"):
+
+    def _get_abstract_mesh():
+        return _ambient()._ambient_mesh()
+
+    # _ambient_mesh falls back to the NATIVE get_abstract_mesh when its
+    # ContextVar is unset; this flag stops it recursing into the backfill.
+    _get_abstract_mesh._repro_compat = True
+    _jsharding.get_abstract_mesh = _get_abstract_mesh
+
+
+# --- jax.sharding.AxisType ---------------------------------------------------
+
+if not hasattr(_jsharding, "AxisType"):
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    _jsharding.AxisType = AxisType
+
+
+# --- Compiled.cost_analysis: list[dict] -> dict ------------------------------
+
+def _normalize_cost_analysis() -> None:
+    import jax.stages as _stages
+
+    probe = _stages.Compiled.cost_analysis
+    if getattr(probe, "_repro_normalized", False):
+        return
+    _orig_cost = probe
+
+    def cost_analysis(self):
+        out = _orig_cost(self)
+        if isinstance(out, (list, tuple)):  # old JAX: one dict per program
+            out = out[0] if out else {}
+        return out
+
+    cost_analysis._repro_normalized = True
+    _stages.Compiled.cost_analysis = cost_analysis
+
+
+try:
+    _normalize_cost_analysis()
+except (ImportError, AttributeError):
+    pass
+
+
+# --- pallas: MemorySpace rename ----------------------------------------------
+
+try:
+    import jax.experimental.pallas.tpu as _pltpu
+
+    if not hasattr(_pltpu, "MemorySpace") and hasattr(_pltpu, "TPUMemorySpace"):
+        _pltpu.MemorySpace = _pltpu.TPUMemorySpace
+except Exception:  # best-effort: a broken/absent pallas must not take down
+    pass           # `import repro` for users who never touch the kernels
+
+
+# --- jax.make_mesh(..., axis_types=...) --------------------------------------
+
+if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+    _make_mesh_impl = jax.make_mesh
+
+    @functools.wraps(_make_mesh_impl)
+    def _make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        del axis_types  # pre-AxisType JAX: every axis behaves as Auto
+        return _make_mesh_impl(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = _make_mesh

@@ -1,0 +1,43 @@
+"""repro.dist: the distribution layer.
+
+Three pieces (see ROADMAP / §3.4 of the paper):
+
+  * :mod:`repro.dist.sharding` — logical-axis -> mesh-axis rule engine
+    (``spec_for`` / ``sharding_for`` / ``tree_shardings``), the ambient
+    mesh, and in-graph ``constrain`` annotations.
+  * :mod:`repro.dist.halo` — ``make_sharded_hdiff``: shard_map domain
+    decomposition of the COSMO hdiff (depth-parallel planes + radius-2
+    row halo exchange), matching the single-device kernels exactly.
+  * :mod:`repro.dist.reduce` — ``reduce_gradients``: cross-shard
+    all-reduce with a bf16-compressed wire path.
+"""
+
+from repro.dist.halo import (
+    exchange_row_halos,
+    halo_exchange_bytes,
+    make_sharded_hdiff,
+    owned_rows_mask,
+)
+from repro.dist.reduce import compress_bf16, decompress_bf16, reduce_gradients
+from repro.dist.sharding import (
+    constrain,
+    sharding_for,
+    spec_for,
+    tree_shardings,
+    use_mesh,
+)
+
+__all__ = [
+    "constrain",
+    "compress_bf16",
+    "decompress_bf16",
+    "exchange_row_halos",
+    "halo_exchange_bytes",
+    "make_sharded_hdiff",
+    "owned_rows_mask",
+    "reduce_gradients",
+    "sharding_for",
+    "spec_for",
+    "tree_shardings",
+    "use_mesh",
+]

@@ -1,0 +1,140 @@
+"""Domain-decomposed hdiff: depth-parallel planes + row halo exchange.
+
+The paper's B-block scale-out (§3.4, Fig. 10) maps each depth plane to its
+own compute resource (embarrassingly parallel — depth never enters the
+stencil) and, past 64 shards, decomposes rows with a radius-2 halo. The
+TPU analogue here is a ``shard_map`` over the device mesh:
+
+  * ``depth_axis``: the (D, R, C) grid's depth dim is split over a mesh
+    axis with ZERO collectives per step.
+  * ``row_axis``: rows are split; each step every shard pushes its edge
+    rows (HALO=2 of them — flux-of-Laplacian radius) to both neighbours
+    with ``ppermute``, computes the stencil on the padded block, and keeps
+    the rows it owns.
+
+Global-boundary correctness uses ABSOLUTE row indexing: a shard knows its
+row offset from ``axis_index``, so the radius-2 passthrough ring of the
+global grid is preserved exactly, even when it falls entirely inside the
+first/last shard — the zero halos ppermute delivers at the grid edges are
+never read into an owned output row. Columns are not decomposed (they are
+the contiguous/vectorised dim), so the column ring is handled locally.
+
+Per-step wire traffic matches :func:`halo_exchange_bytes`, the analytical
+model benchmarked by ``benchmarks/fig10_scaling.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.hdiff import HALO, _hdiff_interior, hdiff, hdiff_simple
+from repro.dist.sharding import _mesh_sizes
+
+
+def exchange_row_halos(block: jax.Array, row_axis: str, n_shards: int, halo: int = HALO):
+    """Pads ``block`` (..., R_loc, C) with ``halo`` rows from each row
+    neighbour via two ``ppermute`` pushes. Edge shards receive zeros on
+    their outward side (ppermute's fill for uncovered targets); callers
+    must not emit output rows computed from them (see absolute-row mask).
+    Returns (..., R_loc + 2*halo, C)."""
+    down = [(j, j + 1) for j in range(n_shards - 1)]   # my bottom rows -> next shard's top halo
+    up = [(j + 1, j) for j in range(n_shards - 1)]     # my top rows -> prev shard's bottom halo
+    top_halo = jax.lax.ppermute(block[..., -halo:, :], row_axis, down)
+    bot_halo = jax.lax.ppermute(block[..., :halo, :], row_axis, up)
+    return jnp.concatenate([top_halo, block, bot_halo], axis=-2)
+
+
+def owned_rows_mask(shard_index, rows_local: int, rows_global: int, halo: int = HALO):
+    """Boolean (rows_local,): which of my rows are GLOBAL interior rows
+    (the radius-``halo`` global boundary ring passes through)."""
+    g = shard_index * rows_local + jnp.arange(rows_local)
+    return (g >= halo) & (g < rows_global - halo)
+
+
+def halo_exchange_bytes(
+    depth: int,
+    rows: int,
+    cols: int,
+    row_shards: int,
+    itemsize: int = 4,
+    halo: int = HALO,
+) -> int:
+    """Total bytes on the wire per sweep for the row halo exchange, summed
+    over the whole mesh: every internal shard boundary moves ``halo`` rows
+    in each direction. Independent of depth sharding (depth planes are
+    disjoint; the per-device blocks are smaller but more numerous)."""
+    if row_shards <= 1:
+        return 0
+    return 2 * (row_shards - 1) * depth * halo * cols * itemsize
+
+
+def make_sharded_hdiff(
+    mesh,
+    *,
+    depth_axis: str | None = "data",
+    row_axis: str | None = None,
+    limit: bool = True,
+    coeff: float = 0.025,
+) -> Callable[[jax.Array], jax.Array]:
+    """Builds a jitted ``psi (D, R, C) -> psi'`` matching single-device
+    :func:`repro.core.hdiff` (or ``hdiff_simple`` with ``limit=False``)
+    while domain-decomposed over ``mesh``.
+
+    Args:
+      mesh: the device mesh; axes named by ``depth_axis`` / ``row_axis``.
+      depth_axis: mesh axis sharding dim 0 (planes), or None.
+      row_axis: mesh axis sharding dim 1 (rows, with halo exchange), or
+        None for pure depth parallelism.
+      limit: apply the COSMO flux limiter (Eq. 2-3).
+      coeff: scalar diffusion coefficient.
+    """
+    sizes = _mesh_sizes(mesh)
+    for ax in (depth_axis, row_axis):
+        if ax is not None and ax not in sizes:
+            raise ValueError(f"mesh {tuple(sizes)} has no axis {ax!r}")
+    if depth_axis is not None and depth_axis == row_axis:
+        raise ValueError("depth_axis and row_axis must be distinct mesh axes")
+    n_row = sizes[row_axis] if row_axis is not None else 1
+    n_depth = sizes[depth_axis] if depth_axis is not None else 1
+
+    spec = P(depth_axis, row_axis if n_row > 1 else None, None)
+    single = hdiff if limit else hdiff_simple
+
+    def local_step(block: jax.Array) -> jax.Array:
+        if row_axis is None or n_row == 1:
+            # Full rows present locally: the single-device kernel's own
+            # boundary handling is already correct.
+            return single(block, coeff)
+        padded = exchange_row_halos(block, row_axis, n_row)
+        interior = _hdiff_interior(padded, coeff, limit=limit)  # rows: R_loc, cols: C-2H
+        r_loc = block.shape[-2]
+        mask = owned_rows_mask(jax.lax.axis_index(row_axis), r_loc, r_loc * n_row)
+        cur = block[..., :, HALO:-HALO]
+        out = jnp.where(mask[:, None], interior.astype(block.dtype), cur)
+        return block.at[..., :, HALO:-HALO].set(out)
+
+    mapped = jax.shard_map(
+        local_step, mesh=mesh, in_specs=(spec,), out_specs=spec, check_vma=False
+    )
+
+    @jax.jit
+    def step(psi: jax.Array) -> jax.Array:
+        if psi.ndim != 3:
+            raise ValueError(f"expected (depth, rows, cols), got shape {psi.shape}")
+        d, r, _ = psi.shape
+        if n_depth > 1 and d % n_depth:
+            raise ValueError(f"depth {d} not divisible by {n_depth} {depth_axis!r} shards")
+        if n_row > 1:
+            if r % n_row:
+                raise ValueError(f"rows {r} not divisible by {n_row} {row_axis!r} shards")
+            if r // n_row < HALO:
+                raise ValueError(
+                    f"rows/shard {r // n_row} < halo {HALO}: too many row shards"
+                )
+        return mapped(psi)
+
+    return step

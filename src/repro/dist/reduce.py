@@ -1,0 +1,73 @@
+"""Cross-shard gradient reduction with optional wire compression.
+
+``reduce_gradients`` is the data-parallel all-reduce used inside
+``shard_map``-style per-shard code (train/loop's pjit path lets XLA insert
+the psums itself; this is the explicit-collective path for shard_map
+regions and for cross-pod reduces where the wire is the bottleneck).
+
+Compression (``method="bf16"``): gradients are cast to bfloat16 BEFORE the
+psum so the all-reduce moves half the bytes over the slowest links (DCN /
+pod-to-pod), then the mean is finished in the gradient's original dtype.
+bf16 keeps f32's exponent range, so there is no overflow cliff — only
+~3 relative decimal digits of mantissa, which gradient noise dwarfs (the
+tolerance story mirrors the master-weight cast in train/loop.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+_METHODS = ("none", "bf16")
+
+
+def compress_bf16(x: jax.Array) -> jax.Array:
+    """The wire format of the bf16 path (exposed for unit tests)."""
+    return x.astype(jnp.bfloat16)
+
+
+def decompress_bf16(x: jax.Array, dtype) -> jax.Array:
+    return x.astype(dtype)
+
+
+def reduce_gradients(
+    grads: Any,
+    axes: Sequence[str],
+    method: str = "none",
+    mean: bool = True,
+) -> Any:
+    """All-reduces every leaf of ``grads`` over the named mesh ``axes``.
+
+    Must be called inside a ``shard_map`` (or other context where ``axes``
+    are bound). Returns the mean by default (sum with ``mean=False``).
+
+    Args:
+      grads: pytree of per-shard gradient arrays.
+      axes: mesh axis names to reduce over, e.g. ``("data",)`` or
+        ``("pod", "data")``.
+      method: "none" (full-precision psum) or "bf16" (compressed wire).
+    """
+    if method not in _METHODS:
+        raise ValueError(f"unknown reduction method {method!r}; pick from {_METHODS}")
+    axes = tuple(axes)
+    if not axes:
+        return grads
+    # psum of a Python literal folds to the static axis-size product at
+    # trace time — no extra collective rides the wire for the count.
+    n = jax.lax.psum(1, axes)
+
+    def red(g):
+        dtype = g.dtype
+        if method == "bf16" and jnp.issubdtype(dtype, jnp.floating):
+            total = decompress_bf16(jax.lax.psum(compress_bf16(g), axes), dtype)
+        else:
+            total = jax.lax.psum(g, axes)
+        if not mean:
+            return total
+        if jnp.issubdtype(dtype, jnp.floating):
+            return total / jnp.asarray(n, dtype)
+        return total // jnp.asarray(n, total.dtype)
+
+    return jax.tree.map(red, grads)

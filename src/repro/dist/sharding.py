@@ -1,0 +1,232 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Everything in models/ and train/ names tensor dimensions with *logical*
+axes (``batch``, ``seq``, ``embed``, ``heads``, ``mlp``, ``fsdp``, ...);
+this module is the single place where logical names meet a physical mesh
+(``("data", "model")`` single-pod, ``("pod", "data", "model")`` multi-pod
+— see :mod:`repro.launch.mesh`).
+
+Rules (``mode`` is "train" or "decode"):
+
+  batch     -> the data axes, pod folded in: ``("pod", "data")`` on a
+               multi-pod mesh, ``"data"`` on a single-pod one.
+  fsdp      -> parameter sharding spanning the data axes. Divisibility is
+               checked *partially*: a dim divisible by ``data`` but not by
+               ``pod*data`` shards over ``("data",)`` alone.
+  heads, kv_heads, mlp, experts, vocab, blocks
+            -> ``"model"`` (tensor/expert/sequence parallelism inside a
+               pod, where ICI is fastest).
+  kv_seq    -> ``"model"`` in decode (the cache, not the heads, is the big
+               tensor there); replicated in train.
+  seq, embed, head_dim, None -> replicated.
+
+Two invariants, enforced uniformly:
+
+  * divisibility-aware fallback: a logical axis whose dim does not divide
+    the mesh axis size is REPLICATED, never padded (e.g. 24 heads on a
+    16-wide model axis).
+  * no double assignment: each mesh axis is consumed at most once per
+    spec, first (leftmost) logical axis wins.
+
+The *ambient mesh* (set by ``jax.set_mesh`` / :func:`use_mesh`) lets deep
+model code annotate intermediates via :func:`constrain` without threading
+a mesh argument through every layer.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from contextvars import ContextVar
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Mesh axes that carry batch/data parallelism, outermost first.
+_DATA_AXES = ("pod", "data")
+
+# Logical axes that ride the model (tensor-parallel) axis unconditionally.
+_MODEL_LOGICAL = ("heads", "kv_heads", "mlp", "experts", "vocab", "blocks")
+
+# Logical axes that are always replicated.
+_REPLICATED = ("seq", "embed", "head_dim")
+
+
+# --- ambient mesh -------------------------------------------------------------
+
+_AMBIENT: ContextVar[Any] = ContextVar("repro_ambient_mesh", default=None)
+
+
+def _ambient_mesh():
+    """The mesh installed by ``jax.set_mesh`` / :func:`use_mesh`, or None.
+
+    On old JAX the ``jax.set_mesh`` backfill (repro.compat) writes the
+    ContextVar directly; on JAX new enough to ship a native ``set_mesh``
+    the context lives inside JAX, so fall through to its abstract mesh
+    (the compat-installed ``get_abstract_mesh`` is skipped — it reads this
+    very function)."""
+    mesh = _AMBIENT.get()
+    if mesh is not None:
+        return mesh
+    native = getattr(jax.sharding, "get_abstract_mesh", None)
+    if native is None or getattr(native, "_repro_compat", False):
+        return None
+    mesh = native()
+    if mesh is None or getattr(mesh, "empty", False):
+        return None
+    if not tuple(getattr(mesh, "axis_names", ())):
+        return None
+    return mesh
+
+
+def _push_mesh(mesh):
+    return _AMBIENT.set(mesh)
+
+
+def _pop_mesh(token) -> None:
+    _AMBIENT.reset(token)
+
+
+@contextmanager
+def use_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    token = _push_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        _pop_mesh(token)
+
+
+# --- rule engine --------------------------------------------------------------
+
+
+def _mesh_sizes(mesh) -> dict[str, int]:
+    """Duck-typed: ``axis_names`` + ``devices.shape`` (concrete Mesh or the
+    FakeMesh of tests), with an ``axis_sizes`` fallback for AbstractMesh."""
+    names = tuple(mesh.axis_names)
+    devices = getattr(mesh, "devices", None)
+    if devices is not None:
+        return dict(zip(names, tuple(devices.shape)))
+    return dict(zip(names, tuple(mesh.axis_sizes)))
+
+
+def _fold_data_axes(dim: int, sizes: dict[str, int], used: set[str]):
+    """Longest suffix of ("pod", "data") present+unused whose product
+    divides ``dim``; pod is dropped first (partial divisibility)."""
+    axes = tuple(a for a in _DATA_AXES if a in sizes and a not in used)
+    while axes:
+        prod = 1
+        for a in axes:
+            prod *= sizes[a]
+        if prod > 0 and dim % prod == 0:
+            return axes
+        axes = axes[1:]
+    return ()
+
+
+def _take_model(dim: int, sizes: dict[str, int], used: set[str]):
+    if "model" in sizes and "model" not in used and dim % sizes["model"] == 0:
+        return "model"
+    return None
+
+
+def _assign(name, dim: int, sizes: dict[str, int], used: set[str], mode: str):
+    """One PartitionSpec entry for one (logical axis, dim). Mutates used."""
+    if name is None or name in _REPLICATED:
+        return None
+    if name == "batch":
+        axes = _fold_data_axes(dim, sizes, used)
+        if not axes:
+            return None
+        used.update(axes)
+        return axes if len(axes) > 1 else axes[0]
+    if name == "fsdp":
+        # Always a tuple entry: fsdp conceptually SPANS the data axes, and
+        # the entry shape must not depend on how many survive divisibility.
+        axes = _fold_data_axes(dim, sizes, used)
+        if not axes:
+            return None
+        used.update(axes)
+        return axes
+    if name == "kv_seq":
+        if mode != "decode":
+            return None
+        ax = _take_model(dim, sizes, used)
+        if ax:
+            used.add(ax)
+        return ax
+    if name in _MODEL_LOGICAL:
+        ax = _take_model(dim, sizes, used)
+        if ax:
+            used.add(ax)
+        return ax
+    # Unknown logical name: replicate (permissive — new layers can name
+    # axes before rules exist for them).
+    return None
+
+
+def spec_for(
+    logical_axes: Sequence[str | None],
+    mesh,
+    shape: Sequence[int],
+    mode: str = "train",
+) -> P:
+    """PartitionSpec for a tensor with the given logical axes and shape.
+
+    ``mesh`` may be a real ``jax.sharding.Mesh`` or anything exposing
+    ``axis_names`` and ``devices.shape``.
+    """
+    if len(logical_axes) != len(shape):
+        raise ValueError(
+            f"logical axes {tuple(logical_axes)} do not match shape {tuple(shape)}"
+        )
+    sizes = _mesh_sizes(mesh)
+    used: set[str] = set()
+    entries = [
+        _assign(name, int(dim), sizes, used, mode)
+        for name, dim in zip(logical_axes, shape)
+    ]
+    # Trailing Nones are semantically redundant but kept: specs must have
+    # one entry per dim so tests can compare against explicit P(...) forms.
+    return P(*entries)
+
+
+def sharding_for(
+    logical_axes: Sequence[str | None],
+    mesh,
+    shape: Sequence[int],
+    mode: str = "train",
+) -> NamedSharding:
+    """NamedSharding on ``mesh`` from the logical-axis rules."""
+    return NamedSharding(mesh, spec_for(logical_axes, mesh, shape, mode=mode))
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def tree_shardings(axes_tree: Any, mesh, shapes_tree: Any, mode: str = "train") -> Any:
+    """Maps a pytree of logical-axis tuples (+ matching shapes) to
+    NamedShardings. ``axes_tree`` leaves are tuples of str/None; the shape
+    subtree at each leaf position is taken whole (a tuple of ints)."""
+    return jax.tree.map(
+        lambda ax, shp: sharding_for(ax, mesh, tuple(shp), mode=mode),
+        axes_tree,
+        shapes_tree,
+        is_leaf=_is_axes_leaf,
+    )
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[str | None], mode: str = "train"):
+    """In-graph sharding annotation: ``with_sharding_constraint`` against
+    the ambient mesh. A no-op when no mesh is ambient (single-device tests,
+    plain ``jax.jit`` without ``set_mesh``) so model code can call it
+    unconditionally."""
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    spec = spec_for(logical_axes, mesh, x.shape, mode=mode)
+    if getattr(mesh, "devices", None) is None:
+        # AbstractMesh (native set_mesh): bare specs bind to the ambient mesh.
+        return jax.lax.with_sharding_constraint(x, spec)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

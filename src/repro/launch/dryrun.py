@@ -1,13 +1,22 @@
 import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
-).strip()
+
+if __name__ == "__main__":  # `python -m repro.launch.dryrun` only: library
+    # importers (parse_collective_bytes) must NOT have their device count
+    # clobbered — they may be running under their own fake-device flags.
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+    ).strip()
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
-MUST run in a fresh process: the XLA_FLAGS line above executes before any
-other import (jax locks the device count on first init).
+MUST run in a fresh process (``python -m repro.launch.dryrun``): jax locks
+the device count on first BACKEND INIT, and the XLA_FLAGS line above
+executes before anything can trigger one. (Under ``python -m`` the
+``repro`` package — and via repro.compat, ``import jax`` — runs before
+this module body; that is safe because the backend initialises lazily,
+but nothing imported at package scope may touch device state, e.g. call
+``jax.devices()``.)
 
 Per cell this produces artifacts/dryrun/<arch>__<shape>__<mesh>.json with:
 
@@ -105,9 +114,24 @@ def parse_collective_bytes(hlo_text: str) -> dict:
         kind = m.group(1)
         lhs = line.split(m.group(0))[0]
         res_shapes = SHAPE_RE.findall(lhs)
-        res_bytes = sum(_shape_bytes(d, s) for d, s in res_shapes)
+        if "-start(" in line:
+            # Async form: the LHS tuple holds the aliased input AND the
+            # output plus u32[] scalar contexts — summing double-counts.
+            # The OUTPUT is what the cost model wants: the largest tensor
+            # entry for permute/all-reduce/all-to-all (in==out) and
+            # all-gather (out is bigger); the smallest for reduce-scatter
+            # (out is 1/g of the input). Scalar contexts are dropped.
+            tensors = [_shape_bytes(d, s) for d, s in res_shapes if s]
+            pick = min if kind == "reduce-scatter" else max
+            res_bytes = pick(tensors) if tensors else 0
+        else:
+            res_bytes = sum(_shape_bytes(d, s) for d, s in res_shapes)
         g = _group_size(line)
-        if g <= 1:
+        if kind == "collective-permute":
+            # Point-to-point: moves its result bytes; no replica_groups
+            # (HLO encodes source_target_pairs instead, so g is meaningless).
+            moved = float(res_bytes) if "source_target_pairs" in line else 0.0
+        elif g <= 1:
             moved = 0.0
         elif kind == "all-reduce":
             moved = 2.0 * res_bytes * (g - 1) / g
@@ -115,10 +139,8 @@ def parse_collective_bytes(hlo_text: str) -> dict:
             moved = res_bytes * (g - 1) / g
         elif kind == "reduce-scatter":
             moved = float(res_bytes) * (g - 1)
-        elif kind == "all-to-all":
+        else:  # all-to-all
             moved = res_bytes * (g - 1) / g
-        else:  # collective-permute
-            moved = float(res_bytes)
         totals[kind] = totals.get(kind, 0.0) + moved
         counts[kind] = counts.get(kind, 0) + 1
     totals["total"] = sum(v for k, v in totals.items() if k != "total")

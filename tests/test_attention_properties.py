@@ -6,7 +6,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import get_smoke_config
 from repro.models import build_cache, build_lm, lm_decode, lm_forward, lm_prefill

@@ -1,0 +1,154 @@
+"""Single-process unit tests for repro.dist internals.
+
+Multi-device behaviour is covered by tests/multidev/_halo_check.py (8 fake
+devices, subprocess); these tests exercise the pure pieces — halo padding,
+absolute-row ownership masks, the analytical wire model, and the bf16
+compression round trip — on the 1-device mesh so the halo logic runs in
+the fast tier-1 path.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import HALO, hdiff, hdiff_simple
+from repro.dist import (
+    compress_bf16,
+    decompress_bf16,
+    exchange_row_halos,
+    halo_exchange_bytes,
+    make_sharded_hdiff,
+    owned_rows_mask,
+    reduce_gradients,
+)
+from repro.launch.mesh import make_mesh
+
+BF16_REL = 2.0 ** -8  # half-ulp of bfloat16's 7-bit mantissa
+
+
+# --- ownership masks (pure) ---------------------------------------------------
+
+
+def test_owned_rows_mask_edges_and_interior():
+    # 4 shards x 8 local rows = 32 global rows; global ring is 2 rows wide.
+    first = np.asarray(owned_rows_mask(0, 8, 32))
+    assert first.tolist() == [False, False] + [True] * 6
+    last = np.asarray(owned_rows_mask(3, 8, 32))
+    assert last.tolist() == [True] * 6 + [False, False]
+    assert np.asarray(owned_rows_mask(1, 8, 32)).all()
+    assert np.asarray(owned_rows_mask(2, 8, 32)).all()
+
+
+def test_owned_rows_mask_ring_inside_one_shard():
+    # 1 shard owns everything except the ring (the row_shards=1 degenerate).
+    m = np.asarray(owned_rows_mask(0, 8, 8))
+    assert m.tolist() == [False, False, True, True, True, True, False, False]
+
+
+# --- analytical halo-wire model -----------------------------------------------
+
+
+def test_halo_exchange_bytes_model():
+    assert halo_exchange_bytes(64, 256, 256, row_shards=1) == 0
+    # (n-1) internal boundaries x 2 directions x (depth * HALO * cols) * 4B
+    assert halo_exchange_bytes(64, 256, 256, row_shards=4) == 2 * 3 * 64 * HALO * 256 * 4
+    assert halo_exchange_bytes(64, 256, 256, row_shards=8) == 2 * 7 * 64 * HALO * 256 * 4
+    # scales linearly in depth and cols, with itemsize
+    assert halo_exchange_bytes(1, 16, 8, row_shards=2, itemsize=2) == 2 * 1 * HALO * 8 * 2
+
+
+# --- halo padding semantics on the 1-device mesh ------------------------------
+
+
+def test_exchange_row_halos_zero_fill_at_grid_edges():
+    """With a single row shard both halos are grid edges: ppermute has no
+    source, so the pads must be exactly zero (the masking contract)."""
+    mesh = make_mesh((1,), ("row",))
+    x = jnp.arange(2 * 4 * 3, dtype=jnp.float32).reshape(2, 4, 3)
+    fn = jax.shard_map(
+        lambda b: exchange_row_halos(b, "row", 1),
+        mesh=mesh,
+        in_specs=(P(None, "row", None),),
+        out_specs=P(None, "row", None),
+        check_vma=False,
+    )
+    out = np.asarray(fn(x))
+    assert out.shape == (2, 4 + 2 * HALO, 3)
+    np.testing.assert_array_equal(out[:, :HALO], 0.0)
+    np.testing.assert_array_equal(out[:, -HALO:], 0.0)
+    np.testing.assert_array_equal(out[:, HALO:-HALO], np.asarray(x))
+
+
+def test_sharded_hdiff_on_host_mesh_matches_single_device():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    rng = np.random.default_rng(7)
+    psi = jnp.asarray(rng.standard_normal((3, 16, 12)).astype(np.float32))
+    for limit, ref_fn in ((True, hdiff), (False, hdiff_simple)):
+        fn = make_sharded_hdiff(mesh, depth_axis="data", row_axis="model", limit=limit)
+        np.testing.assert_allclose(
+            np.asarray(fn(psi)), np.asarray(ref_fn(psi, 0.025)), rtol=1e-6, atol=1e-6
+        )
+
+
+def test_sharded_hdiff_validates_axes_and_shapes():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError):
+        make_sharded_hdiff(mesh, depth_axis="nope")
+    with pytest.raises(ValueError):
+        make_sharded_hdiff(mesh, depth_axis="data", row_axis="data")
+    fn = make_sharded_hdiff(mesh)
+    with pytest.raises(ValueError):
+        fn(jnp.zeros((4, 4)))  # rank-2: no depth dim
+
+
+# --- bf16 compression ---------------------------------------------------------
+
+
+def test_bf16_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    # magnitudes across 12 decades, both signs — bf16 keeps f32's exponent
+    # range so the bound is purely relative, never an overflow.
+    mag = 10.0 ** rng.uniform(-6, 6, size=4096)
+    x = (mag * rng.choice([-1.0, 1.0], size=mag.shape)).astype(np.float32)
+    y = np.asarray(decompress_bf16(compress_bf16(jnp.asarray(x)), jnp.float32))
+    rel = np.abs(y - x) / np.abs(x)
+    assert rel.max() <= BF16_REL * 1.001, rel.max()
+
+
+def test_reduce_gradients_identity_on_one_shard():
+    mesh = make_mesh((1,), ("data",))
+    grads = {
+        "w": jnp.linspace(-3.0, 3.0, 64, dtype=jnp.float32).reshape(8, 8),
+        "steps": jnp.int32(12),
+    }
+
+    def run(method):
+        return jax.shard_map(
+            lambda g: reduce_gradients(g, ("data",), method=method),
+            mesh=mesh,
+            in_specs=({"w": P(), "steps": P()},),
+            out_specs={"w": P(), "steps": P()},
+            check_vma=False,
+        )(grads)
+
+    exact = run("none")
+    np.testing.assert_array_equal(np.asarray(exact["w"]), np.asarray(grads["w"]))
+    assert int(exact["steps"]) == 12
+
+    lossy = run("bf16")
+    err = np.abs(np.asarray(lossy["w"]) - np.asarray(grads["w"]))
+    bound = BF16_REL * np.abs(np.asarray(grads["w"])) + 1e-7
+    assert (err <= bound).all(), err.max()
+    # integer leaves bypass compression entirely
+    assert int(lossy["steps"]) == 12
+
+
+def test_reduce_gradients_rejects_unknown_method_and_empty_axes():
+    g = {"w": jnp.ones((2, 2))}
+    with pytest.raises(ValueError):
+        reduce_gradients(g, ("data",), method="fp8")
+    # no axes -> no collective context needed, grads pass through
+    out = reduce_gradients(g, ())
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(g["w"]))

@@ -16,7 +16,10 @@ Invariants tested:
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import hdiff, hdiff_simple, jacobi2d_5pt, jacobi2d_9pt, plan_partition
 
