@@ -8,7 +8,6 @@ must land between the fused lower bound and the algorithmic upper bound.
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 

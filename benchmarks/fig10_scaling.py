@@ -19,10 +19,8 @@ import os
 import subprocess
 import sys
 
-import numpy as np
-
 from benchmarks.common import COLS, DEPTH, ROWS, emit
-from repro.core import TPUV5E, hdiff_flops, plan_partition
+from repro.core import plan_partition
 
 # Subprocess body for the REAL run: the main benchmark process must keep
 # seeing 1 device (dry-run contract), so the 8-fake-device mesh lives in a

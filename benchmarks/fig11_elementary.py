@@ -4,6 +4,11 @@ Paper: jacobi-1d / jacobi-2d-3pt / laplacian / jacobi-2d-9pt / seidel-2d on
 CPU vs GPU vs 32 AIEs. Here: XLA-fused jnp implementations (the CPU row)
 plus the Pallas kernels in interpret mode (correctness datapoint), on the
 paper's 256x256x64 domain.
+
+Each stencil additionally runs through the ``repro.ir`` compiler path —
+hand-written vs IR-lowered (reference and fused-Pallas backends) — and the
+row reports parity plus whether the graph-DERIVED op counts agree with the
+hand-written analytical model (``ELEMENTARY_SPECS``).
 """
 
 from __future__ import annotations
@@ -14,10 +19,31 @@ import jax.numpy as jnp
 
 from benchmarks.common import COLS, DEPTH, ROWS, emit, time_fn
 from repro.core import ELEMENTARY_FNS, ELEMENTARY_SPECS
+from repro.ir import ELEMENTARY_PROGRAMS, lower_pallas, lower_reference
 from repro.kernels.stencil2d import jacobi1d as jacobi1d_kernel
 from repro.kernels.stencil2d import stencil2d
 
 NAMES_2D = ["jacobi2d_3pt", "laplacian", "jacobi2d_5pt", "jacobi2d_9pt", "seidel2d"]
+
+
+def _parity(got, want, tol: float = 1e-6) -> str:
+    err = float(jnp.max(jnp.abs(got - want)))
+    return f"parity={'ok' if err <= tol else 'FAIL'}(max|d|={err:.1e})"
+
+
+def _spec_agreement(name: str) -> str:
+    derived = ELEMENTARY_PROGRAMS[name]().spec()
+    hand = ELEMENTARY_SPECS[name]
+    agree = (derived.macs, derived.other_ops, derived.reads, derived.radius) == (
+        hand.macs,
+        hand.other_ops,
+        hand.reads,
+        hand.radius,
+    )
+    return (
+        f"ops={'agree' if agree else 'MISMATCH'}"
+        f"({derived.macs}mac+{derived.other_ops}op r={derived.radius})"
+    )
 
 
 def run(fast: bool = False) -> None:
@@ -39,6 +65,20 @@ def run(fast: bool = False) -> None:
         emit(f"fig11/{name}_xla", us,
              f"gops={interior * spec.flops / us / 1e3:.2f}")
 
+    # IR-lowered reference backend vs hand-written, full domain: parity plus
+    # derived-vs-analytical op-count agreement per stencil.
+    want1 = ELEMENTARY_FNS["jacobi1d"](x1)
+    ir1 = lower_reference(ELEMENTARY_PROGRAMS["jacobi1d"]())
+    us = time_fn(ir1, x1)
+    emit("fig11/jacobi1d_ir_ref", us,
+         f"{_parity(ir1(x1), want1)} {_spec_agreement('jacobi1d')}")
+    for name in NAMES_2D:
+        want = ELEMENTARY_FNS[name](x3)
+        ir_fn = lower_reference(ELEMENTARY_PROGRAMS[name]())
+        us = time_fn(ir_fn, x3)
+        emit(f"fig11/{name}_ir_ref", us,
+             f"{_parity(ir_fn(x3), want)} {_spec_agreement(name)}")
+
     # Pallas kernels (interpret mode, correctness-path timing).
     small = x3[:2]
     for name in ["jacobi2d_3pt", "laplacian", "jacobi2d_9pt"]:
@@ -47,3 +87,15 @@ def run(fast: bool = False) -> None:
         emit(f"fig11/{name}_pallas_interpret", us, "interpret mode (depth=2)")
     us = time_fn(lambda a: jacobi1d_kernel(a, interpret=True), x1[:8], warmup=1, iters=3)
     emit("fig11/jacobi1d_pallas_interpret", us, "interpret mode (8 rows)")
+
+    # IR fused-Pallas backend (generic codegen), interpret mode.
+    for name in ["jacobi2d_3pt", "laplacian", "jacobi2d_9pt"]:
+        ir_pl = lower_pallas(ELEMENTARY_PROGRAMS[name](), interpret=True)
+        want = ELEMENTARY_FNS[name](small)
+        us = time_fn(ir_pl, small, warmup=1, iters=3)
+        emit(f"fig11/{name}_ir_pallas_interpret", us,
+             f"{_parity(ir_pl(small), want)} (depth=2)")
+    ir_pl1 = lower_pallas(ELEMENTARY_PROGRAMS["jacobi1d"](), interpret=True)
+    us = time_fn(ir_pl1, x1[:8], warmup=1, iters=3)
+    emit("fig11/jacobi1d_ir_pallas_interpret", us,
+         f"{_parity(ir_pl1(x1[:8]), ELEMENTARY_FNS['jacobi1d'](x1[:8]))} (8 rows)")

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.kernels.wkv6 import wkv6, wkv6_chunked_ref, wkv6_ref
+from repro.kernels.wkv6 import wkv6_chunked_ref, wkv6_ref
 
 
 def run(fast: bool = False) -> None:

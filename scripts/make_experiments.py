@@ -7,7 +7,6 @@ artifacts/dryrun/*.json. Rerunnable as cells complete.
 from __future__ import annotations
 
 import json
-import sys
 from pathlib import Path
 
 ART = Path("artifacts/dryrun")

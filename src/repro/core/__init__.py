@@ -13,6 +13,7 @@ from repro.core.analytical import (
     TPUV5E,
     MachineModel,
     aie_hdiff_cycles,
+    aie_stencil_cycles,
     arithmetic_intensity,
     dominant_term,
     roofline_fraction,

@@ -72,6 +72,35 @@ def aie_hdiff_cycles(rows: int, cols: int, depth: int) -> dict[str, float]:
     }
 
 
+def aie_stencil_cycles(
+    spec, rows: int, cols: int, depth: int, *, itemsize_bits: int = 32
+) -> dict[str, float]:
+    """AIE cycle estimate for ANY stencil from its (graph-derived) spec.
+
+    ``spec`` is anything with ``macs`` / ``other_ops`` / ``reads`` / ``radius``
+    per-output-point fields (``repro.ir.ProgramSpec`` or ``StencilSpec``).
+    Compute charges one cycle per ``AIE_MACS_PER_CYCLE`` ops (MAC and non-MAC
+    vector ops issue at the same rate on the AIE VLIW slots); memory charges
+    ``spec.reads`` — the composed *distinct-element* footprint, i.e. WITH
+    register reuse. This is deliberately NOT the same accounting as
+    :func:`aie_hdiff_cycles`, which reproduces Eq. 5-10 verbatim (every
+    stage re-streams its operands — 33 reads/point for hdiff vs 13 here, and
+    Eq. 7 excludes the output stage — 45 ops vs this model's 46). Use
+    ``aie_hdiff_cycles`` for paper-faithful hdiff numbers and this function
+    for planning new graph-defined stencils.
+    """
+    side = 2 * spec.radius
+    interior = max(rows - side, 0) * max(cols - side, 0) * depth
+    compute = interior * (spec.macs + spec.other_ops) / AIE_MACS_PER_CYCLE
+    memory = interior * spec.reads * itemsize_bits / AIE_LOAD_BITS_PER_CYCLE
+    return {
+        "compute_cycles": compute,
+        "memory_cycles": memory,
+        "bound": "memory" if memory > compute else "compute",
+        "seconds": max(compute, memory) / AIE_CLOCK_HZ,
+    }
+
+
 def roofline_terms(
     flops: float,
     hbm_bytes: float,

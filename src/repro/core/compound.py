@@ -4,55 +4,64 @@ The paper's central systems idea is that a *compound* stencil (a DAG of
 elementary stages with producer/consumer dependencies) should be executed so
 that intermediates never round-trip through external memory, and so that the
 compute provisioned per stage matches that stage's compute/byte ratio
-(§3.1-§3.2). This module makes that idea a first-class, reusable feature:
+(§3.1-§3.2). Since the ``repro.ir`` subsystem landed, this module is a thin
+policy layer over the IR lowerings:
 
-  * :class:`StencilStage` — one stage: a jnp function plus its §3.1-style op
-    accounting.
-  * :class:`CompoundStencil` — an ordered DAG of stages with three execution
-    policies:
-      - ``staged``        every stage materialised + barriered (single-AIE /
-                          load-store baseline; reproduces the slow side of
-                          Fig. 9),
-      - ``fused-xla``     one jitted function (XLA fusion; paper-faithful
-                          algorithm on the default compiler path),
-      - ``fused-pallas``  the hand-fused Pallas TPU kernel from
-                          ``repro.kernels`` (the multi-AIE/B-block analogue;
-                          fast side of Fig. 9).
+  * :class:`CompoundStencil` — wraps a :class:`repro.ir.StencilProgram` and
+    dispatches its three execution policies to the compiler backends:
+      - ``staged``        ``ir.lower_reference(mode="staged")`` — every stage
+                          materialised + barriered (single-AIE / load-store
+                          baseline; reproduces the slow side of Fig. 9),
+      - ``fused-xla``     ``ir.lower_reference(mode="fused")`` — one jitted
+                          function (XLA fusion on the default compiler path),
+      - ``fused-pallas``  ``ir.lower_pallas`` — generic fused VMEM tile
+                          codegen (the multi-AIE/B-block analogue; fast side
+                          of Fig. 9). No longer hdiff-only.
+  * :class:`StencilStage` — per-op accounting view derived from the graph
+    (§3.1-style op counts), kept for the analytical reports.
   * :func:`plan_partition` — the B-block planner: given a grid and a device
     mesh, chooses depth-parallel vs halo row-decomposition by evaluating the
     analytical model's three terms (compute / HBM / ICI seconds) for each
-    candidate, exactly how §3.4 sizes lanes per shimDMA channel.
+    candidate, exactly how §3.4 sizes lanes per shimDMA channel. Pass an IR
+    ``program`` to drive it from graph-inferred halo and op counts.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import hdiff as hdiff_mod
 from repro.core.analytical import TPUV5E, MachineModel, roofline_terms
+from repro.ir import (
+    StencilProgram,
+    hdiff_program,
+    lower_pallas,
+    lower_reference,
+)
 
 Array = jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
 class StencilStage:
-    """One stage of a compound stencil.
+    """Accounting view of one stage of a compound stencil (metadata only —
+    execution goes through the IR lowerings, not through this class).
 
-    ``fn`` maps (dict of named inputs) -> named output array. ``macs`` /
-    ``other_ops`` follow the paper's Eq. 5-6 accounting per interior output
-    point; ``reads`` counts distinct input elements per point (Eq. 8-9).
+    ``macs`` / ``other_ops`` follow the paper's Eq. 5-6 accounting per
+    evaluation; ``reads`` counts declared accesses per evaluation (Eq. 8-9);
+    ``evaluations`` is how many times one output point consumes this stage
+    under the streaming model (derived from the composed offsets).
     """
 
     name: str
-    fn: Callable[..., Array]
     inputs: tuple[str, ...]
     macs: int
     other_ops: int
     reads: int
+    evaluations: int = 1
 
     @property
     def flops(self) -> int:
@@ -60,86 +69,66 @@ class StencilStage:
 
 
 class CompoundStencil:
-    """An ordered sequence of stages forming a compound stencil DAG."""
+    """An IR program plus the three named execution policies."""
 
-    def __init__(self, name: str, stages: Sequence[StencilStage], radius: int):
+    POLICIES = ("staged", "fused-xla", "fused-pallas")
+
+    def __init__(self, name: str, program: StencilProgram):
         self.name = name
-        self.stages = tuple(stages)
-        self.radius = radius
-        by_name = {}
-        for s in self.stages:
-            for dep in s.inputs:
-                if dep not in by_name and dep != "input":
-                    raise ValueError(f"stage {s.name} depends on unknown {dep!r}")
-            by_name[s.name] = s
-        self._fused = jax.jit(self._run)
+        self.program = program
+        self.radius = program.radius
+        evals = program.evaluations()
+        self.stages = tuple(
+            StencilStage(
+                name=op.name,
+                inputs=op.fields(),
+                macs=op.cost.macs,
+                other_ops=op.cost.other_ops,
+                reads=len(op.reads),
+                evaluations=evals[op.name],
+            )
+            for op in program.ops
+        )
+        self._fused = lower_reference(program, mode="fused")
+        self._staged = lower_reference(program, mode="staged")
+        # Built lazily: lower_pallas only supports single-input programs, and
+        # the other two policies must keep working for multi-input DAGs.
+        self._pallas: Callable[[Array], Array] | None = None
 
     # -- execution policies ------------------------------------------------
-
-    def _run(self, x: Array) -> Array:
-        env: dict[str, Array] = {"input": x}
-        out = x
-        for stage in self.stages:
-            out = stage.fn(*(env[k] for k in stage.inputs))
-            env[stage.name] = out
-        return out
 
     def apply(self, x: Array, policy: str = "fused-xla") -> Array:
         if policy == "fused-xla":
             return self._fused(x)
         if policy == "staged":
-            env: dict[str, Array] = {"input": x}
-            out = x
-            for stage in self.stages:
-                fn = jax.jit(stage.fn)
-                out = jax.block_until_ready(fn(*(env[k] for k in stage.inputs)))
-                env[stage.name] = out
-            return out
+            return self._staged(x)
         if policy == "fused-pallas":
-            raise NotImplementedError(
-                "fused-pallas policy is provided per-kernel via repro.kernels "
-                "(see kernels/hdiff/ops.py); generic DAG->Pallas codegen is out "
-                "of scope."
-            )
-        raise ValueError(f"unknown policy {policy!r}")
+            if self._pallas is None:
+                self._pallas = lower_pallas(self.program)
+            return self._pallas(x)
+        raise ValueError(f"unknown policy {policy!r} (want one of {self.POLICIES})")
 
-    # -- analytical accounting (§3.1) ---------------------------------------
+    # -- analytical accounting (§3.1), graph-derived -------------------------
 
     def total_flops(self, interior_points: int) -> int:
-        return interior_points * sum(s.flops for s in self.stages)
+        """Streaming-model flops per sweep (each stage charged once per
+        composed offset the output consumes it at — Eq. 5-7)."""
+        return interior_points * self.program.spec().flops
 
     def staged_bytes(self, interior_points: int, itemsize: int = 4) -> int:
         """HBM traffic under the staged policy: every stage reads its
         operands and writes its output through memory (Eq. 8-9 analogue)."""
-        total = 0
-        for s in self.stages:
-            total += (s.reads + 1) * interior_points * itemsize
-        return total
+        return self.program.staged_bytes(interior_points, itemsize)
 
-    def fused_bytes(self, total_points: int, itemsize: int = 4, n_inputs: int = 1) -> int:
+    def fused_bytes(self, total_points: int, itemsize: int = 4) -> int:
         """Compulsory HBM traffic under fusion: inputs once in, output once
         out (the B-block broadcast/VMEM-reuse analogue)."""
-        return (n_inputs + 1) * total_points * itemsize
+        return self.program.fused_bytes(total_points, itemsize)
 
 
 def make_hdiff_compound(coeff: float = 0.025, limit: bool = True) -> CompoundStencil:
-    """hdiff as an explicit 3-stage compound (Laplacian -> flux -> output)."""
-
-    def lap_stage(x):
-        return hdiff_mod._staged_lap(x)
-
-    def flux_stage(x, lap):
-        return jnp.stack(hdiff_mod._staged_flux(x, lap, limit=limit))
-
-    def out_stage(x, flx):
-        return hdiff_mod._staged_out(x, coeff, flx[0], flx[1], flx[2], flx[3])
-
-    stages = (
-        StencilStage("lap", lap_stage, ("input",), macs=5 * 5, other_ops=0, reads=5 * 5),
-        StencilStage("flux", flux_stage, ("input", "lap"), macs=4 * 1, other_ops=4 * 3, reads=2 * 4),
-        StencilStage("out", out_stage, ("input", "flux"), macs=1, other_ops=4, reads=6),
-    )
-    return CompoundStencil("hdiff", stages, radius=hdiff_mod.HALO)
+    """hdiff as an explicit compound DAG (Laplacian -> fluxes -> output)."""
+    return CompoundStencil("hdiff", hdiff_program(coeff, limit=limit))
 
 
 # ---------------------------------------------------------------------------
@@ -171,10 +160,11 @@ def plan_partition(
     cols: int,
     n_devices: int,
     *,
-    halo: int = hdiff_mod.HALO,
+    halo: int | None = None,
     itemsize: int = 4,
     machine: MachineModel = TPUV5E,
-    flops_per_point: int = hdiff_mod.HDIFF_SPEC.flops,
+    flops_per_point: int | None = None,
+    program: StencilProgram | None = None,
 ) -> PartitionPlan:
     """Chooses how to shard a (depth, rows, cols) grid over ``n_devices``.
 
@@ -183,7 +173,18 @@ def plan_partition(
     planes across lanes (which costs halo traffic). We enumerate candidate
     (depth_shards x row_shards) factorisations, evaluate the three roofline
     terms per device, and pick the minimum bottleneck term.
+
+    With ``program`` given, halo and flops/point come from the graph
+    analysis; otherwise they default to the (IR-derived) hdiff constants.
     """
+    if program is not None:
+        spec = program.spec()
+        halo = spec.radius if halo is None else halo
+        flops_per_point = spec.flops if flops_per_point is None else flops_per_point
+    if halo is None:
+        halo = hdiff_mod.HALO
+    if flops_per_point is None:
+        flops_per_point = hdiff_mod.HDIFF_SPEC.flops
     best: PartitionPlan | None = None
     for d_sh in _divisors(n_devices):
         r_sh = n_devices // d_sh

@@ -36,18 +36,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.stencils import StencilSpec
+from repro.ir.programs import hdiff_program
 
 Array = jax.Array
 
-# Radius of the compound stencil (flux-of-laplacian): 2 cells.
-HALO = 2
-
-# Per-output-point op counts for the analytical model (§3.1).
-# 5 Laplacians x 5 MACs; 4 fluxes x (1 sub + 1 mul [limiter product] +
-# 1 cmp + 1 select); output: 4 adds + 1 MAC (coeff).
+# Per-output-point op counts for the analytical model (§3.1), DERIVED from
+# the IR dataflow graph (repro.ir.programs.hdiff_program) rather than
+# hand-counted: 5 Laplacians x 5 MACs (the lap op is consumed at the 5 star
+# offsets); 4 fluxes x (1 sub + 1 mul [limiter product] + 1 cmp + 1 select);
+# output: 4 adds + 1 MAC (coeff); 13 distinct reads (the composed star-of-
+# star footprint); radius 2. tests/test_ir_graph.py pins the paper's
+# literal numbers (26 MACs / 20 ops / 13 reads / r=2) against this.
+_DERIVED = hdiff_program().spec()
 HDIFF_SPEC = StencilSpec(
-    name="hdiff", macs=5 * 5 + 1, other_ops=4 * 4 + 4, reads=13, radius=HALO
+    name="hdiff",
+    macs=_DERIVED.macs,
+    other_ops=_DERIVED.other_ops,
+    reads=_DERIVED.reads,
+    radius=_DERIVED.radius,
 )
+
+# Radius of the compound stencil (flux-of-laplacian): 2 cells, inferred.
+HALO = HDIFF_SPEC.radius
 
 
 def _limit(dlap: Array, dpsi: Array) -> Array:

@@ -19,12 +19,10 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from pathlib import Path
 from typing import Iterator
 
 import numpy as np
 
-import jax
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,50 @@
+"""repro.ir — stencil dataflow-graph IR and mini-compiler.
+
+One program, three backends (see README "The IR subsystem"):
+
+    graph (StencilOp DAG) --> analysis (halo / op counts, derived)
+        --> lower_reference   (jnp, fused or stage-at-a-time)
+        --> lower_pallas      (generic fused VMEM tile kernel)
+        --> lower_sharded     (shard_map + inferred-radius halo exchange,
+                               Pallas kernel composed inside the shard)
+
+This package is self-contained (no imports from other ``repro`` modules at
+import time), so ``repro.core`` and ``repro.kernels`` derive their specs and
+tile plans from it without cycles.
+"""
+
+from repro.ir.graph import (
+    Offset,
+    OpCost,
+    ProgramSpec,
+    Read,
+    StencilOp,
+    StencilProgram,
+)
+from repro.ir.ops import affine, flux, scaled_residual
+from repro.ir.programs import (
+    ELEMENTARY_PROGRAMS,
+    hdiff_program,
+    jacobi1d_program,
+    jacobi2d_3pt_program,
+    jacobi2d_5pt_program,
+    jacobi2d_9pt_program,
+    laplacian_program,
+    seidel2d_program,
+)
+from repro.ir.evaluate import (
+    apply_program,
+    embed_interior,
+    interior_eval,
+    interior_region,
+    ring_crop,
+)
+from repro.ir.plan import (
+    DEFAULT_VMEM_TILE_BUDGET,
+    VMEM_BUDGET_ENV,
+    pick_block_rows,
+    vmem_tile_budget,
+)
+from repro.ir.lower_reference import lower_reference
+from repro.ir.lower_pallas import lower_pallas
+from repro.ir.lower_sharded import lower_sharded

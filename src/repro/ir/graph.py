@@ -1,0 +1,226 @@
+"""Stencil program IR: a dataflow DAG of stencil ops with offset analysis.
+
+This is the repo's analogue of SPARTA's MLIR dataflow lowering (§3.2-§3.4)
+and StencilFlow's program graphs: a compound stencil is expressed ONCE as a
+DAG of :class:`StencilOp` nodes, each declaring the *access offsets* it reads
+from its input fields, and everything the hand-written paths used to hard-code
+is derived from the graph:
+
+  * **halo / radius** — forward-composed per-dimension margins
+    (:meth:`StencilProgram.margins`, :meth:`StencilProgram.halo`); composed
+    radii add, which the property tests check.
+  * **op / byte accounting** — the paper's §3.1 streaming model
+    (:meth:`StencilProgram.spec`): each op is charged once per *distinct
+    composed offset* at which the output consumes it (e.g. hdiff's Laplacian
+    is consumed at the 5 star offsets, hence "5 Laplacians x 5 MACs" in
+    Eq. 5), and ``reads`` is the size of the program's composed access
+    footprint on its source fields.
+
+The package is self-contained: nothing under ``repro.ir`` imports other
+``repro`` modules, so ``repro.core`` / ``repro.kernels`` can derive their
+constants from the IR without import cycles. The lowerings to the three
+execution backends live in the sibling ``lower_*`` modules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+Offset = tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class OpCost:
+    """Per-evaluation cost of one op, in the paper's Eq. 5-7 accounting.
+
+    ``macs`` counts multiply-accumulates (one per stencil tap, the Eq. 5
+    convention); ``other_ops`` counts non-MAC vector ops (add/sub/cmp/select).
+    Costs are attached by the combinator builders in :mod:`repro.ir.ops` —
+    they are properties of the *combinator*, never of a particular program.
+    """
+
+    macs: int = 0
+    other_ops: int = 0
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.macs + self.other_ops
+
+
+@dataclasses.dataclass(frozen=True)
+class Read:
+    """One access: ``field`` sampled at relative grid ``offset``."""
+
+    field: str
+    offset: Offset
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilOp:
+    """One node of the DAG: produces field ``name`` from its reads.
+
+    ``compute`` is an elementwise combinator: it receives one aligned array
+    per entry of ``reads`` (all the same shape — the op's output region) and
+    returns the output array. All spatial structure lives in the offsets, so
+    every lowering can evaluate the op by slicing differently-shifted views.
+    """
+
+    name: str
+    reads: tuple[Read, ...]
+    compute: Callable[..., object]
+    cost: OpCost
+
+    def fields(self) -> tuple[str, ...]:
+        """Distinct fields read, in first-read order."""
+        seen: dict[str, None] = {}
+        for r in self.reads:
+            seen.setdefault(r.field, None)
+        return tuple(seen)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramSpec:
+    """Graph-derived per-output-point accounting (mirrors core's StencilSpec)."""
+
+    name: str
+    macs: int
+    other_ops: int
+    reads: int
+    radius: int
+    ndim: int = 2
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.macs + self.other_ops
+
+
+class StencilProgram:
+    """An ordered DAG of :class:`StencilOp` over named fields.
+
+    ``ops`` must be topologically ordered: each op may read only source
+    ``inputs`` or earlier ops' outputs. The last op is the program output.
+    ``passthrough`` names the source field whose boundary ring the lowered
+    kernels carry through unchanged (the paper computes interior points only).
+    """
+
+    def __init__(
+        self,
+        name: str,
+        inputs: Sequence[str],
+        ops: Sequence[StencilOp],
+        *,
+        ndim: int = 2,
+        passthrough: str | None = None,
+    ):
+        if not ops:
+            raise ValueError("program needs at least one op")
+        self.name = name
+        self.inputs = tuple(inputs)
+        self.ops = tuple(ops)
+        self.ndim = ndim
+        self.passthrough = passthrough if passthrough is not None else self.inputs[0]
+        if self.passthrough not in self.inputs:
+            raise ValueError(f"passthrough {self.passthrough!r} is not a program input")
+
+        known = set(self.inputs)
+        for op in self.ops:
+            if op.name in known:
+                raise ValueError(f"duplicate field name {op.name!r}")
+            for read in op.reads:
+                if read.field not in known:
+                    raise ValueError(
+                        f"op {op.name!r} reads {read.field!r} before it is defined"
+                    )
+                if len(read.offset) != ndim:
+                    raise ValueError(
+                        f"op {op.name!r} offset {read.offset} is not {ndim}-D"
+                    )
+            known.add(op.name)
+        self.output = self.ops[-1].name
+
+    # -- analysis: composed footprints (reverse) ------------------------------
+
+    def footprints(self) -> dict[str, frozenset[Offset]]:
+        """For every field, the set of composed offsets (relative to one
+        output point) at which the output depends on it. Composition is the
+        Minkowski sum of per-op offset sets along each consumer path, unioned
+        over paths — StencilFlow's access-footprint inference."""
+        fp: dict[str, set[Offset]] = {f: set() for f in self.inputs}
+        fp.update({op.name: set() for op in self.ops})
+        fp[self.output].add((0,) * self.ndim)
+        for op in reversed(self.ops):
+            at = fp[op.name]
+            for read in op.reads:
+                fp[read.field].update(
+                    tuple(a + b for a, b in zip(o, read.offset)) for o in at
+                )
+        return {f: frozenset(s) for f, s in fp.items()}
+
+    def evaluations(self) -> dict[str, int]:
+        """Streaming-model evaluation count per op: one evaluation per
+        distinct composed offset the output consumes it at (§3.1)."""
+        fp = self.footprints()
+        return {op.name: len(fp[op.name]) for op in self.ops}
+
+    # -- analysis: materialisation margins (forward) --------------------------
+
+    def margins(self) -> dict[str, tuple[Offset, Offset]]:
+        """Per-field ``(lo, hi)`` margins: how far the field's valid region
+        is inset from the source grid on the low/high side of each dim when
+        every field is materialised on its maximal valid region."""
+        m: dict[str, tuple[Offset, Offset]] = {
+            f: ((0,) * self.ndim, (0,) * self.ndim) for f in self.inputs
+        }
+        for op in self.ops:
+            lo = [0] * self.ndim
+            hi = [0] * self.ndim
+            for read in op.reads:
+                in_lo, in_hi = m[read.field]
+                for d in range(self.ndim):
+                    lo[d] = max(lo[d], in_lo[d] + max(0, -read.offset[d]))
+                    hi[d] = max(hi[d], in_hi[d] + max(0, read.offset[d]))
+            m[op.name] = (tuple(lo), tuple(hi))
+        return m
+
+    def halo(self) -> tuple[Offset, Offset]:
+        """The program's ``(lo, hi)`` boundary margins: the inferred halo."""
+        return self.margins()[self.output]
+
+    @property
+    def radius(self) -> int:
+        lo, hi = self.halo()
+        return max(max(lo, default=0), max(hi, default=0))
+
+    # -- derived accounting ---------------------------------------------------
+
+    def spec(self) -> ProgramSpec:
+        """Per-output-point op/byte accounting, fully derived from the graph
+        (replaces the hand-written ``StencilSpec`` constants)."""
+        fp = self.footprints()
+        evals = self.evaluations()
+        return ProgramSpec(
+            name=self.name,
+            macs=sum(evals[op.name] * op.cost.macs for op in self.ops),
+            other_ops=sum(evals[op.name] * op.cost.other_ops for op in self.ops),
+            reads=sum(len(fp[f]) for f in self.inputs),
+            radius=self.radius,
+            ndim=self.ndim,
+        )
+
+    def staged_bytes(self, points: int, itemsize: int = 4) -> int:
+        """HBM traffic when every op materialises to memory (Eq. 8-9
+        analogue): each op reads one element per declared access and writes
+        its output once, per grid point."""
+        return sum((len(op.reads) + 1) * points * itemsize for op in self.ops)
+
+    def fused_bytes(self, points: int, itemsize: int = 4) -> int:
+        """Compulsory traffic under fusion: each source in once, output once
+        (the VMEM-residency / B-block broadcast analogue)."""
+        return (len(self.inputs) + 1) * points * itemsize
+
+    def __repr__(self) -> str:
+        return (
+            f"StencilProgram({self.name!r}, inputs={self.inputs}, "
+            f"ops={[op.name for op in self.ops]}, radius={self.radius})"
+        )

@@ -1,0 +1,185 @@
+"""Fused-Pallas lowering: generic VMEM-resident tile codegen for IR programs.
+
+Generalises the hand-fused hdiff kernel (``repro.kernels.hdiff.kernel``) to
+any single-input program: one program instance owns one row-tile of one
+plane; the inferred row halo is provided by the same three-slab trick (the
+input passed with block index maps ``i-1 / i / i+1``, clamped at the edges),
+and the whole DAG is evaluated in VMEM by ``interior_eval`` — intermediates
+never touch HBM, the paper's accumulator-residency discipline. Block shape
+comes from the shared VMEM budget planner (``repro.ir.plan``).
+
+1-D programs (jacobi1d) lower to a row-per-program kernel with the column
+halo handled in-tile, mirroring ``kernels.stencil2d.jacobi1d_pallas``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.ir.evaluate import interior_eval, ring_crop
+from repro.ir.graph import StencilProgram
+from repro.ir.plan import pick_block_rows
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _embed_cols(cur: Array, interior: Array, r: int) -> Array:
+    """Writes ``interior`` into ``cur``'s column ring interior [r, C-r)."""
+    if r == 0:
+        return interior
+    cols = cur.shape[-1]
+    return cur.at[..., r : cols - r].set(interior)
+
+
+def _generic_kernel(
+    prev_ref, cur_ref, next_ref, out_ref, *, program, block_rows, rows, r
+):
+    """Kernel body: blocks are (1, block_rows, C); grid is (depth, row_tiles).
+
+    ``r`` is the inferred program radius: the three-slab halo is ``r`` rows
+    from each neighbour block, and the square radius-``r`` ring of the
+    global grid passes through.
+    """
+    i = pl.program_id(1)
+    cur = cur_ref[0].astype(jnp.float32)
+    if r:
+        x = jnp.concatenate(
+            [
+                prev_ref[0, -r:, :].astype(jnp.float32),
+                cur,
+                next_ref[0, :r, :].astype(jnp.float32),
+            ],
+            axis=0,
+        )  # (block_rows + 2r, C)
+    else:
+        x = cur
+
+    # Evaluate the whole DAG in VMEM; crop the exact-margin interior to the
+    # ring region of the padded tile: rows [r, r+block_rows), cols [r, C-r).
+    vals = ring_crop(program, interior_eval(program, {program.inputs[0]: x}))
+    out = _embed_cols(cur, vals, r)
+
+    if r:
+        # Row passthrough: global boundary rows keep the input (the clamped
+        # edge slabs feed garbage only into rows this mask overwrites).
+        gl_row = i * block_rows + jax.lax.broadcasted_iota(
+            jnp.int32, (block_rows, 1), 0
+        )
+        keep = (gl_row < r) | (gl_row >= rows - r)
+        out = jnp.where(keep, cur, out)
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+def _kernel_1d(x_ref, out_ref, *, program, r):
+    x = x_ref[0].astype(jnp.float32)
+    vals = ring_crop(program, interior_eval(program, {program.inputs[0]: x}))
+    out = _embed_cols(x, vals, r)
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+def lower_pallas(
+    program: StencilProgram,
+    *,
+    block_rows: int | None = None,
+    vmem_budget: int | None = None,
+    interpret: bool | None = None,
+) -> Callable[[Array], Array]:
+    """Builds ``x -> program(x)`` as a fused Pallas kernel.
+
+    Args:
+      program: a single-input IR program (scalars baked into the graph).
+      block_rows: VMEM row-tile override; default picks the largest divisor
+        of rows fitting the shared VMEM budget (>= the inferred halo).
+      vmem_budget: per-block byte budget for the planner (arg > env > 4 MiB).
+      interpret: force interpreter mode; default = interpret iff not on TPU.
+    """
+    if len(program.inputs) != 1:
+        raise ValueError(
+            f"pallas lowering needs a single-input program, got {program.inputs}"
+        )
+    if program.ndim == 1:
+        return _lower_pallas_1d(program, interpret=interpret)
+    if program.ndim != 2:
+        raise ValueError(f"unsupported ndim {program.ndim}")
+
+    r = program.radius
+    min_block = max(r, 1)
+
+    @functools.partial(jax.jit, static_argnames=("br", "interp"))
+    def _call(x, br, interp):
+        depth, rows, cols = x.shape
+        row_tiles = rows // br
+        kernel = functools.partial(
+            _generic_kernel,
+            program=program,
+            block_rows=br,
+            rows=rows,
+            r=r,
+        )
+        spec = lambda fn: pl.BlockSpec((1, br, cols), fn)  # noqa: E731
+        return pl.pallas_call(
+            kernel,
+            grid=(depth, row_tiles),
+            in_specs=[
+                spec(lambda d, i: (d, jnp.maximum(i - 1, 0), 0)),
+                spec(lambda d, i: (d, i, 0)),
+                spec(lambda d, i: (d, jnp.minimum(i + 1, row_tiles - 1), 0)),
+            ],
+            out_specs=spec(lambda d, i: (d, i, 0)),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=interp,
+        )(x, x, x)
+
+    def fn(x: Array) -> Array:
+        if x.ndim != 3:
+            raise ValueError(f"expected (depth, rows, cols), got shape {x.shape}")
+        _, rows, cols = x.shape
+        br = block_rows
+        if br is None:
+            br = pick_block_rows(
+                rows, cols, budget_bytes=vmem_budget, min_rows=min_block
+            )
+        br = min(br, rows)
+        if rows % br:
+            raise ValueError(f"rows={rows} not divisible by block_rows={br}")
+        if br < min_block:
+            raise ValueError(
+                f"block_rows={br} < inferred row halo {min_block} for "
+                f"program {program.name!r}"
+            )
+        interp = interpret if interpret is not None else not _on_tpu()
+        return _call(x, br, interp)
+
+    return fn
+
+
+def _lower_pallas_1d(program, *, interpret):
+    @functools.partial(jax.jit, static_argnames=("interp",))
+    def _call(x, interp):
+        batch, n = x.shape
+        kernel = functools.partial(_kernel_1d, program=program, r=program.radius)
+        return pl.pallas_call(
+            kernel,
+            grid=(batch,),
+            in_specs=[pl.BlockSpec((1, n), lambda b: (b, 0))],
+            out_specs=pl.BlockSpec((1, n), lambda b: (b, 0)),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=interp,
+        )(x)
+
+    def fn(x: Array) -> Array:
+        if x.ndim != 2:
+            raise ValueError(f"expected (batch, n), got shape {x.shape}")
+        interp = interpret if interpret is not None else not _on_tpu()
+        return _call(x, interp)
+
+    return fn

@@ -1,0 +1,76 @@
+"""Reference lowering: stage-at-a-time jnp execution of an IR program.
+
+Two modes, matching the execution policies of ``repro.core.compound``:
+
+  * ``fused``  — one jitted function; XLA fuses the whole DAG (the paper's
+    algorithm on the default compiler path).
+  * ``staged`` — every op is a separately jitted function with
+    ``block_until_ready`` barriers, so each intermediate field round-trips
+    through HBM (the single-AIE / load-store baseline of Fig. 9).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Mapping
+
+import jax
+
+from repro.ir.evaluate import apply_program, embed_interior, op_views
+from repro.ir.graph import StencilProgram
+
+Array = jax.Array
+
+
+def lower_reference(
+    program: StencilProgram, *, mode: str = "fused"
+) -> Callable[[Array | Mapping[str, Array]], Array]:
+    if mode == "fused":
+        return jax.jit(lambda x: apply_program(program, x))
+    if mode == "staged":
+        return _lower_staged(program)
+    raise ValueError(f"unknown mode {mode!r} (want 'fused' or 'staged')")
+
+
+def _lower_staged(program: StencilProgram):
+    nd = program.ndim
+    margins = program.margins()
+
+    def make_stage(op):
+        reads = op.reads
+
+        @jax.jit
+        def stage(*arrays):
+            # Recover the source-grid extent from the first read's array
+            # (each field is stored inset by its own margins).
+            f0 = reads[0].field
+            lo0, hi0 = margins[f0]
+            grid = tuple(
+                arrays[0].shape[-nd + d] + lo0[d] + hi0[d] for d in range(nd)
+            )
+            env = {read.field: arr for read, arr in zip(reads, arrays)}
+            return op.compute(*op_views(op, env, margins, grid, nd))
+
+        return stage
+
+    stages = [(op, make_stage(op)) for op in program.ops]
+
+    @jax.jit
+    def embed(base, interior):
+        return embed_interior(program, base, interior)
+
+    def run(x):
+        if isinstance(x, Mapping):
+            env = dict(x)
+        else:
+            if len(program.inputs) != 1:
+                raise ValueError(
+                    f"program {program.name!r} has inputs {program.inputs}; "
+                    "pass a mapping"
+                )
+            env = {program.inputs[0]: x}
+        for op, stage in stages:
+            args = tuple(env[r.field] for r in op.reads)
+            env[op.name] = jax.block_until_ready(stage(*args))
+        return embed(env[program.passthrough], env[program.output])
+
+    return run

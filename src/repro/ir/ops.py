@@ -1,0 +1,123 @@
+"""Combinator library: the reusable node builders programs are made of.
+
+Each combinator constructs a :class:`~repro.ir.graph.StencilOp` whose
+``compute`` is a pure elementwise jnp function over aligned shifted views and
+whose :class:`~repro.ir.graph.OpCost` is intrinsic to the combinator (an
+instruction-cost table, following the paper's Eq. 5-6 conventions) — op
+counts for a *program* are then derived by the graph analysis, never written
+per kernel.
+
+Cost conventions (matching SPARTA §3.1):
+  * ``affine``          — one MAC per tap (Eq. 5 counts a 5-point Laplacian
+                          as 5 MACs).
+  * ``flux``            — 1 sub for the stencil difference, plus 3 ops
+                          (mul, cmp, select) when the Eq. 2-3 limiter is on.
+                          The limiter's *gradient* difference rides free, as
+                          in the paper's Eq. 6 accounting (4 ops per flux).
+  * ``scaled_residual`` — one accumulate per term plus a single MAC for the
+                          shared scale against the base field.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import jax.numpy as jnp
+
+from repro.ir.graph import Offset, OpCost, Read, StencilOp
+
+
+def _tree_sum(vals):
+    """Balanced pairwise sum — matches the hand-written kernels' grouping
+    of ``(a + b) + (c + d)`` so lowered programs stay bitwise-comparable."""
+    vals = list(vals)
+    while len(vals) > 1:
+        vals = [
+            vals[i] + vals[i + 1] if i + 1 < len(vals) else vals[i]
+            for i in range(0, len(vals), 2)
+        ]
+    return vals[0]
+
+
+def affine(name: str, field: str, taps: Mapping[Offset, float]) -> StencilOp:
+    """Weighted stencil sum: ``out = sum_k w_k * field[offset_k]``.
+
+    Tap order is preserved (it fixes floating-point association, so the
+    lowerings reproduce the hand-written kernels bit-for-bit). A uniform-
+    weight stencil is factored as ``w * (v_0 + v_1 + ...)``, the form the
+    jacobi family uses.
+    """
+    offsets = tuple(taps)
+    weights = tuple(float(taps[o]) for o in offsets)
+    uniform = len(set(weights)) == 1
+
+    def compute(*views):
+        if uniform:
+            acc = views[0]
+            for v in views[1:]:
+                acc = acc + v
+            return weights[0] * acc
+        acc = weights[0] * views[0]
+        for w, v in zip(weights[1:], views[1:]):
+            acc = acc + w * v
+        return acc
+
+    reads = tuple(Read(field, o) for o in offsets)
+    return StencilOp(name, reads, compute, OpCost(macs=len(offsets)))
+
+
+def flux(
+    name: str,
+    of: str,
+    lo: Offset,
+    hi: Offset,
+    *,
+    limiter: str | None = None,
+) -> StencilOp:
+    """Finite difference ``of[hi] - of[lo]``, optionally flux-limited.
+
+    With ``limiter=g`` the result is zeroed when it points up-gradient of
+    ``g`` across the same pair of points (Eq. 2-3):
+    ``F = d if d * (g[hi] - g[lo]) <= 0 else 0``.
+    """
+    reads = [Read(of, hi), Read(of, lo)]
+    if limiter is not None:
+        reads += [Read(limiter, hi), Read(limiter, lo)]
+
+    def compute(a_hi, a_lo, *grad):
+        d = a_hi - a_lo
+        if not grad:
+            return d
+        g = grad[0] - grad[1]
+        return jnp.where(d * g <= 0, d, jnp.zeros_like(d))
+
+    cost = OpCost(other_ops=1 + (3 if limiter is not None else 0))
+    return StencilOp(name, tuple(reads), compute, cost)
+
+
+def scaled_residual(
+    name: str,
+    base: str,
+    terms: Sequence[tuple[str, int]],
+    scale: float,
+    *,
+    ndim: int = 2,
+) -> StencilOp:
+    """``out = base - scale * sum(sign_i * term_i)`` at offset zero.
+
+    The hdiff output stage (Eq. 4) and any explicit-Euler update take this
+    shape. ``terms`` is a sequence of ``(field, sign)`` with sign in {+1,-1}.
+    The signed terms are combined pairwise, matching the hand-written
+    ``(F_r - F_rm) + (G_c - G_cm)`` grouping.
+    """
+    for f, s in terms:
+        if s not in (1, -1):
+            raise ValueError(f"sign for {f!r} must be +1/-1, got {s}")
+
+    def compute(b, *ts):
+        signed = [t if s > 0 else -t for t, (_, s) in zip(ts, terms)]
+        return b - scale * _tree_sum(signed)
+
+    zero = (0,) * ndim
+    reads = (Read(base, zero),) + tuple(Read(f, zero) for f, _ in terms)
+    return StencilOp(name, reads, compute, OpCost(macs=1, other_ops=len(terms)))

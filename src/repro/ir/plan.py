@@ -1,0 +1,55 @@
+"""VMEM tile planning shared by the hand-written kernels and the IR lowerer.
+
+The Pallas grid pipeline keeps ~3 input blocks + 1 output block live and
+double-buffers them (the shimDMA ping-pong of §3.2.1), so the per-block
+budget sits well under VMEM/8. The budget defaults to 4 MiB and is
+configurable per call (``budget_bytes``) or process-wide via the
+``REPRO_VMEM_BUDGET`` environment variable (bytes).
+"""
+
+from __future__ import annotations
+
+import os
+
+DEFAULT_VMEM_TILE_BUDGET = 4 * 1024 * 1024
+VMEM_BUDGET_ENV = "REPRO_VMEM_BUDGET"
+
+
+def vmem_tile_budget(budget_bytes: int | None = None) -> int:
+    """Resolves the per-block VMEM budget: explicit arg > env var > 4 MiB."""
+    if budget_bytes is not None:
+        return int(budget_bytes)
+    env = os.environ.get(VMEM_BUDGET_ENV)
+    if env:
+        try:
+            return int(env)
+        except ValueError as e:
+            raise ValueError(
+                f"{VMEM_BUDGET_ENV} must be an integer byte count, got {env!r}"
+            ) from e
+    return DEFAULT_VMEM_TILE_BUDGET
+
+
+def pick_block_rows(
+    rows: int,
+    cols: int,
+    *,
+    itemsize: int = 4,
+    budget_bytes: int | None = None,
+    min_rows: int = 1,
+) -> int:
+    """Largest divisor of ``rows`` whose (rows x cols) tile fits the budget.
+
+    ``min_rows`` is the kernel's structural floor (e.g. the three-slab halo
+    trick needs ``block_rows >= halo``). If no divisor fits the budget, the
+    smallest divisor >= ``min_rows`` is returned (correctness over budget).
+    """
+    budget = vmem_tile_budget(budget_bytes)
+    fallback = rows
+    for cand in range(rows, 0, -1):
+        if rows % cand or cand < min_rows:
+            continue
+        fallback = cand
+        if cand * cols * itemsize <= budget:
+            return cand
+    return fallback

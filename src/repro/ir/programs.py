@@ -1,0 +1,90 @@
+"""The paper's stencils expressed as IR programs.
+
+``hdiff_program`` is the compound COSMO horizontal diffusion (Eq. 1-4): a
+5-point Laplacian, four limited fluxes, and the coefficient update — six ops
+over two source-consumed fields. The five elementary §3.5 stencils are each
+a single affine op. Halo, op counts, and footprints for all of them are
+*derived* by the graph analysis; parity against the hand-written kernels in
+``repro.core`` is enforced by ``tests/test_ir_lowering.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.ir.graph import StencilProgram
+from repro.ir.ops import affine, flux, scaled_residual
+
+# Tap orders deliberately mirror the hand-written kernels' evaluation order
+# (see repro/core/{hdiff,stencils}.py) so lowered outputs are bit-identical.
+_LAP_TAPS = {(0, 0): 4.0, (1, 0): -1.0, (-1, 0): -1.0, (0, 1): -1.0, (0, -1): -1.0}
+
+
+def hdiff_program(coeff: float = 0.025, *, limit: bool = True) -> StencilProgram:
+    """COSMO horizontal diffusion as a 6-op DAG (Eq. 1-4 / Alg. 1).
+
+    ``limit=True`` is the production flux-limited kernel; ``limit=False`` is
+    Algorithm 1's unlimited polynomial form (NERO/NARMADA baseline).
+    """
+    lim = "psi" if limit else None
+    ops = [
+        affine("lap", "psi", _LAP_TAPS),
+        flux("flx_r", "lap", lo=(0, 0), hi=(1, 0), limiter=lim),
+        flux("flx_rm", "lap", lo=(-1, 0), hi=(0, 0), limiter=lim),
+        flux("flx_c", "lap", lo=(0, 0), hi=(0, 1), limiter=lim),
+        flux("flx_cm", "lap", lo=(0, -1), hi=(0, 0), limiter=lim),
+        scaled_residual(
+            "out",
+            "psi",
+            [("flx_r", 1), ("flx_rm", -1), ("flx_c", 1), ("flx_cm", -1)],
+            coeff,
+        ),
+    ]
+    return StencilProgram("hdiff" if limit else "hdiff_simple", ["psi"], ops)
+
+
+def jacobi1d_program(coeff: float = 1.0 / 3.0) -> StencilProgram:
+    taps = {(-1,): coeff, (0,): coeff, (1,): coeff}
+    return StencilProgram("jacobi1d", ["x"], [affine("out", "x", taps)], ndim=1)
+
+
+def jacobi2d_3pt_program(coeff: float = 1.0 / 3.0) -> StencilProgram:
+    taps = {(-1, 0): coeff, (0, 0): coeff, (1, 0): coeff}
+    return StencilProgram("jacobi2d_3pt", ["x"], [affine("out", "x", taps)])
+
+
+def laplacian_program() -> StencilProgram:
+    return StencilProgram("laplacian", ["x"], [affine("out", "x", _LAP_TAPS)])
+
+
+def jacobi2d_5pt_program(coeff: float = 0.2) -> StencilProgram:
+    taps = {
+        (0, 0): coeff,
+        (1, 0): coeff,
+        (-1, 0): coeff,
+        (0, 1): coeff,
+        (0, -1): coeff,
+    }
+    return StencilProgram("jacobi2d_5pt", ["x"], [affine("out", "x", taps)])
+
+
+def jacobi2d_9pt_program(coeff: float = 1.0 / 9.0) -> StencilProgram:
+    taps = {(dr, dc): coeff for dr in (-1, 0, 1) for dc in (-1, 0, 1)}
+    return StencilProgram("jacobi2d_9pt", ["x"], [affine("out", "x", taps)])
+
+
+def seidel2d_program(coeff: float = 1.0 / 9.0) -> StencilProgram:
+    """Parallel (Jacobi-style) 9-point sweep — the throughput form the
+    streaming spatial mapping pipelines (see ``core.stencils.seidel2d_sweep``)."""
+    taps = {(dr, dc): coeff for dr in (-1, 0, 1) for dc in (-1, 0, 1)}
+    return StencilProgram("seidel2d", ["x"], [affine("out", "x", taps)])
+
+
+ELEMENTARY_PROGRAMS: dict[str, Callable[[], StencilProgram]] = {
+    "jacobi1d": jacobi1d_program,
+    "jacobi2d_3pt": jacobi2d_3pt_program,
+    "laplacian": laplacian_program,
+    "jacobi2d_5pt": jacobi2d_5pt_program,
+    "jacobi2d_9pt": jacobi2d_9pt_program,
+    "seidel2d": seidel2d_program,
+}

@@ -10,10 +10,11 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from repro.core.hdiff import HALO
 from repro.core.hdiff import hdiff as _hdiff_ref
 from repro.core.hdiff import hdiff_simple as _hdiff_simple_ref
+from repro.ir.plan import pick_block_rows
 from repro.kernels.hdiff.kernel import hdiff_fixed_pallas, hdiff_pallas
 
 Array = jax.Array
@@ -30,6 +31,7 @@ def hdiff_fused(
     block_rows: int | None = None,
     limit: bool = True,
     interpret: bool | None = None,
+    vmem_budget: int | None = None,
 ) -> Array:
     """Fused hdiff (Laplacian+flux+output in one VMEM-resident kernel).
 
@@ -37,15 +39,17 @@ def hdiff_fused(
       psi: ``(depth, rows, cols)`` f32/bf16 field.
       coeff: scalar diffusion coefficient.
       block_rows: VMEM row-tile; default picks the largest divisor of rows
-        that keeps the tile under ~4 MiB (leaving headroom for the pipeline's
-        double buffers).
+        that keeps the tile under the VMEM budget (leaving headroom for the
+        pipeline's double buffers).
       limit: apply the Eq. 2-3 flux limiter (the production COSMO form).
       interpret: force interpreter mode; default = interpret iff not on TPU.
+      vmem_budget: per-block byte budget for the tile planner (default: the
+        ``REPRO_VMEM_BUDGET`` env var, else 4 MiB).
     """
     if interpret is None:
         interpret = not _on_tpu()
     if block_rows is None:
-        block_rows = _pick_block_rows(psi.shape)
+        block_rows = _pick_block_rows(psi.shape, budget_bytes=vmem_budget)
     return hdiff_pallas(
         psi, coeff, block_rows=block_rows, limit=limit, interpret=interpret
     )
@@ -58,12 +62,13 @@ def hdiff_fixed(
     coeff_shift: int = 10,
     block_rows: int | None = None,
     interpret: bool | None = None,
+    vmem_budget: int | None = None,
 ) -> Array:
     """int32 fixed-point hdiff (the paper's i32 datapath)."""
     if interpret is None:
         interpret = not _on_tpu()
     if block_rows is None:
-        block_rows = _pick_block_rows(psi_q.shape)
+        block_rows = _pick_block_rows(psi_q.shape, budget_bytes=vmem_budget)
     return hdiff_fixed_pallas(
         psi_q,
         coeff_num=coeff_num,
@@ -101,19 +106,16 @@ def _hdiff_ad_bwd(limit, res, g):
 hdiff_fused_ad.defvjp(_hdiff_ad_fwd, _hdiff_ad_bwd)
 
 
-def _pick_block_rows(shape: tuple[int, ...], budget_bytes: int = 4 * 1024 * 1024) -> int:
+def _pick_block_rows(shape: tuple[int, ...], budget_bytes: int | None = None) -> int:
     """Largest divisor of ``rows`` whose (rows x cols) f32 tile fits budget.
 
     The pipeline keeps ~3 input blocks + 1 output block live (prev/cur/next
     + out) and double-buffers them, so the per-block budget is set well under
-    VMEM/8.
+    VMEM/8. The budget is shared with the IR planner (``repro.ir.plan``):
+    explicit ``budget_bytes`` > ``REPRO_VMEM_BUDGET`` env var > 4 MiB.
     """
     _, rows, cols = shape
-    best = 8 if rows % 8 == 0 else 1
-    for cand in range(rows, 0, -1):
-        if rows % cand:
-            continue
-        if cand * cols * 4 <= budget_bytes:
-            best = cand
-            break
-    return best
+    # The three-slab halo trick needs block_rows >= 2*HALO (kernel validates).
+    return pick_block_rows(
+        rows, cols, budget_bytes=budget_bytes, min_rows=min(2 * HALO, rows)
+    )

@@ -19,8 +19,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.dist.sharding import sharding_for, tree_shardings
-from repro.models import build_cache, build_lm, lm_decode, lm_loss, lm_prefill
-from repro.models.lm import _block_cache_axes  # cache logical axes
+from repro.models import build_cache, build_lm, lm_decode, lm_prefill
 from repro.optim.optimizers import (
     make_optimizer,
     opt_state_axes,

@@ -6,7 +6,6 @@ over a synthetic request stream (or stdin token prompts).
 """
 
 import argparse
-import dataclasses
 import time
 
 import numpy as np

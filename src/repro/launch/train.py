@@ -19,8 +19,8 @@ os.environ.setdefault(
     "--xla_tpu_enable_async_collective_fusion=true",
 )
 
-import argparse
-import dataclasses
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
 
 
 def main() -> None:

@@ -20,7 +20,6 @@ produce ShapeDtypeStruct pytrees for the multi-pod dry-run — no allocation.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

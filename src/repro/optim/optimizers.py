@@ -14,7 +14,7 @@ the state-sharding posture the dry-run needs:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -13,8 +13,7 @@ queue with a prefill that writes that lane's cache slice. Greedy sampling
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable
+from typing import Any
 
 import numpy as np
 
@@ -22,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import build_cache, build_lm, lm_decode, lm_prefill
+from repro.models import build_cache, lm_decode, lm_prefill
 
 Array = jax.Array
 

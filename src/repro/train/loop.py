@@ -31,7 +31,7 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import sharding_for, tree_shardings

@@ -9,7 +9,6 @@ assert "--xla_force_host_platform_device_count=8" in os.environ.get("XLA_FLAGS",
 
 import dataclasses
 
-import numpy as np
 import jax
 
 from repro.configs import get_smoke_config

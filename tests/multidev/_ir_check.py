@@ -1,0 +1,79 @@
+"""Subprocess body: IR sharded lowering == reference on 8 fake devices.
+
+Run by tests/test_ir_multidev.py with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``. Covers both inner
+backends (reference evaluator and Pallas-kernel-inside-shard_map) at the
+graph-INFERRED halo — radius 2 for hdiff, radius 1 for the elementary
+9-point program — plus the paper-grid acceptance run.
+Exits nonzero (assertion) on any mismatch.
+"""
+
+import os
+
+assert "--xla_force_host_platform_device_count=8" in os.environ.get("XLA_FLAGS", "")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import hdiff, hdiff_simple
+from repro.core.stencils import jacobi2d_9pt
+from repro.ir import (
+    hdiff_program,
+    jacobi2d_9pt_program,
+    lower_reference,
+    lower_sharded,
+)
+from repro.launch.mesh import make_mesh
+
+assert len(jax.devices()) == 8
+
+rng = np.random.default_rng(0)
+psi = jnp.asarray(rng.standard_normal((8, 32, 16)).astype(np.float32))
+want = np.asarray(hdiff(psi, 0.025))
+prog = hdiff_program()
+
+# lower_sharded must match lower_reference (and therefore core.hdiff).
+ref = np.asarray(lower_reference(prog)(psi))
+np.testing.assert_allclose(ref, want, rtol=1e-6, atol=1e-6)
+
+for axes, d_ax, r_ax in [
+    ((8, 1), "data", None),       # depth-parallel: plane-per-B-block
+    ((2, 4), "data", "model"),    # depth x rows with radius-2 halo exchange
+    ((1, 8), None, "model"),      # rows barely larger than the halo
+]:
+    mesh = make_mesh(axes, ("data", "model"))
+    for inner in ("reference", "pallas"):
+        fn = lower_sharded(prog, mesh, depth_axis=d_ax, row_axis=r_ax, inner=inner)
+        got = np.asarray(fn(psi))
+        np.testing.assert_allclose(got, ref, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+        print(f"hdiff {axes} inner={inner} ok")
+
+# Unlimited variant.
+mesh = make_mesh((2, 4), ("data", "model"))
+fn = lower_sharded(hdiff_program(limit=False), mesh, depth_axis="data", row_axis="model")
+np.testing.assert_allclose(
+    np.asarray(fn(psi)), np.asarray(hdiff_simple(psi, 0.025)), rtol=1e-6, atol=1e-6
+)
+print("hdiff-simple ok")
+
+# Radius-1 elementary program: the exchange runs at the inferred halo of 1.
+p9 = jacobi2d_9pt_program()
+assert p9.radius == 1
+fn = lower_sharded(p9, mesh, depth_axis="data", row_axis="model", inner="pallas")
+np.testing.assert_allclose(
+    np.asarray(fn(psi)), np.asarray(jacobi2d_9pt(psi)), rtol=1e-6, atol=1e-6
+)
+print("jacobi2d_9pt (halo=1) ok")
+
+# Acceptance: the paper grid (64 x 256 x 256) on the full 8-device mesh.
+paper = jnp.asarray(rng.standard_normal((64, 256, 256)).astype(np.float32))
+mesh = make_mesh((4, 2), ("data", "model"))
+fn = lower_sharded(prog, mesh, depth_axis="data", row_axis="model", inner="reference")
+np.testing.assert_allclose(
+    np.asarray(fn(paper)), np.asarray(hdiff(paper, 0.025)), rtol=1e-6, atol=1e-6
+)
+print("paper-grid sharded ok")
+
+print("ALL_OK")

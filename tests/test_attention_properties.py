@@ -10,9 +10,9 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.configs import get_smoke_config
-from repro.models import build_cache, build_lm, lm_decode, lm_forward, lm_prefill
-from repro.models import layers as L
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.models import build_cache, build_lm, lm_decode, lm_forward, lm_prefill  # noqa: E402
+from repro.models import layers as L  # noqa: E402
 
 
 def _attn_cfg(**over):

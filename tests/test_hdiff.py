@@ -1,7 +1,6 @@
 """hdiff correctness vs a NumPy loop oracle (Alg. 1 / Eq. 1-4, verbatim)."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -5,10 +5,9 @@ product runs in CI.
 """
 
 import jax
-import jax.numpy as jnp
 import pytest
 
-from repro.configs import ARCH_IDS, all_cells, applicable_cells, get_config, get_shape
+from repro.configs import all_cells, get_config, get_shape
 from repro.launch.analytic import cell_flops, cell_hbm_bytes
 from repro.launch.inputs import input_specs
 

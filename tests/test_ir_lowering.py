@@ -1,0 +1,179 @@
+"""Parity tests: one IR program, three backends, vs the hand-written paths.
+
+Mirrors tests/test_dist_halo_unit.py for the sharded backend: the 1-device
+mesh runs in the fast tier-1 path here; 8-fake-device behaviour is covered
+by tests/multidev/_ir_check.py via tests/test_ir_multidev.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    ELEMENTARY_FNS,
+    hdiff,
+    hdiff_simple,
+    make_hdiff_compound,
+    plan_partition,
+)
+from repro.ir import (
+    ELEMENTARY_PROGRAMS,
+    StencilProgram,
+    affine,
+    hdiff_program,
+    lower_pallas,
+    lower_reference,
+    lower_sharded,
+)
+from repro.launch.mesh import make_mesh
+
+RNG = np.random.default_rng(11)
+
+
+def _grid(*shape):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+
+
+# --- hdiff: all three backends ------------------------------------------------
+
+
+@pytest.mark.parametrize("limit", [True, False])
+def test_hdiff_reference_and_staged_match(limit):
+    x = _grid(3, 18, 14)
+    prog = hdiff_program(limit=limit)
+    want = np.asarray((hdiff if limit else hdiff_simple)(x, 0.025))
+    for mode in ("fused", "staged"):
+        got = np.asarray(lower_reference(prog, mode=mode)(x))
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("limit", [True, False])
+def test_hdiff_pallas_matches(limit):
+    x = _grid(2, 16, 12)
+    prog = hdiff_program(limit=limit)
+    want = np.asarray((hdiff if limit else hdiff_simple)(x, 0.025))
+    got = np.asarray(lower_pallas(prog, interpret=True)(x))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_hdiff_all_backends_on_paper_grid():
+    """Acceptance: IR-lowered hdiff matches core.hdiff to 1e-6 on the
+    paper's 64x256x256 domain (reference + Pallas interpret here; the
+    8-device sharded run lives in tests/multidev/_ir_check.py)."""
+    x = _grid(64, 256, 256)
+    want = np.asarray(hdiff(x, 0.025))
+    prog = hdiff_program()
+    got_ref = np.asarray(lower_reference(prog)(x))
+    np.testing.assert_allclose(got_ref, want, rtol=1e-6, atol=1e-6)
+    got_pl = np.asarray(lower_pallas(prog, interpret=True)(x))
+    np.testing.assert_allclose(got_pl, want, rtol=1e-6, atol=1e-6)
+
+
+def test_hdiff_sharded_on_host_mesh_matches():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    x = _grid(3, 16, 12)
+    want = np.asarray(hdiff(x, 0.025))
+    for inner in ("reference", "pallas"):
+        fn = lower_sharded(
+            hdiff_program(), mesh, depth_axis="data", row_axis="model", inner=inner
+        )
+        np.testing.assert_allclose(np.asarray(fn(x)), want, rtol=1e-6, atol=1e-6)
+
+
+# --- elementary suite ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(ELEMENTARY_PROGRAMS))
+def test_elementary_programs_match_handwritten(name):
+    prog = ELEMENTARY_PROGRAMS[name]()
+    x = _grid(3, 14, 12) if prog.ndim == 2 else _grid(4, 16)
+    want = np.asarray(ELEMENTARY_FNS[name](x))
+    for tag, fn in [
+        ("fused", lower_reference(prog)),
+        ("staged", lower_reference(prog, mode="staged")),
+        ("pallas", lower_pallas(prog, interpret=True)),
+    ]:
+        got = np.asarray(fn(x))
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6, err_msg=f"{name}/{tag}")
+
+
+# --- compound policies are thin wrappers over the lowerings -------------------
+
+
+def test_compound_fused_pallas_policy_now_works():
+    x = _grid(2, 16, 12)
+    comp = make_hdiff_compound(coeff=0.025, limit=True)
+    want = np.asarray(hdiff(x, 0.025))
+    for policy in ("fused-xla", "staged", "fused-pallas"):
+        got = np.asarray(comp.apply(x, policy=policy))
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6, err_msg=policy)
+    with pytest.raises(ValueError, match="unknown policy"):
+        comp.apply(x, policy="nope")
+
+
+def test_compound_multi_input_program_keeps_reference_policies():
+    """lower_pallas is single-input only; CompoundStencil must not build it
+    eagerly, so staged/fused-xla keep working for multi-input DAGs."""
+    from repro.core.compound import CompoundStencil
+
+    prog = StencilProgram(
+        "sum2", ["a", "b"],
+        [affine("s_a", "a", {(0, 0): 1.0}),
+         affine("out", "s_a", {(0, 0): 1.0})],
+    )
+    comp = CompoundStencil("sum2", prog)  # must not raise
+    x = {"a": _grid(2, 8, 8), "b": _grid(2, 8, 8)}
+    got = np.asarray(comp.apply(x, policy="fused-xla"))
+    np.testing.assert_allclose(got, np.asarray(x["a"]), rtol=0, atol=0)
+    with pytest.raises(ValueError, match="single-input"):
+        comp.apply(x, policy="fused-pallas")
+
+
+def test_compound_accounting_is_graph_derived():
+    comp = make_hdiff_compound()
+    assert comp.radius == 2
+    assert comp.total_flops(10) == 10 * 72  # 2*26 + 20 per point
+    lap = next(s for s in comp.stages if s.name == "lap")
+    assert (lap.macs, lap.evaluations) == (5, 5)
+
+
+def test_plan_partition_accepts_program():
+    prog = hdiff_program()
+    plan = plan_partition(64, 256, 256, 8, program=prog)
+    default = plan_partition(64, 256, 256, 8)
+    assert plan == default  # hdiff defaults ARE the derived program numbers
+    assert plan.halo == 2
+    # A radius-1 program plans with a thinner halo.
+    plan1 = plan_partition(64, 256, 256, 8, program=ELEMENTARY_PROGRAMS["laplacian"]())
+    assert plan1.halo == 1
+
+
+# --- lowering validation ------------------------------------------------------
+
+
+def test_lower_pallas_rejects_bad_inputs():
+    prog = hdiff_program()
+    fn = lower_pallas(prog, interpret=True)
+    with pytest.raises(ValueError, match="depth, rows, cols"):
+        fn(_grid(8, 8))
+    with pytest.raises(ValueError, match="not divisible"):
+        lower_pallas(prog, block_rows=5, interpret=True)(_grid(2, 16, 12))
+    two_in = StencilProgram(
+        "two", ["a", "b"], [affine("out", "a", {(0, 0): 1.0})]
+    )
+    with pytest.raises(ValueError, match="single-input"):
+        lower_pallas(two_in)
+
+
+def test_lower_sharded_validates_axes_and_shapes():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    prog = hdiff_program()
+    with pytest.raises(ValueError, match="no axis"):
+        lower_sharded(prog, mesh, depth_axis="nope")
+    with pytest.raises(ValueError, match="distinct"):
+        lower_sharded(prog, mesh, depth_axis="data", row_axis="data")
+    with pytest.raises(ValueError, match="inner backend"):
+        lower_sharded(prog, mesh, inner="cuda")
+    fn = lower_sharded(prog, mesh)
+    with pytest.raises(ValueError, match="depth, rows, cols"):
+        fn(_grid(4, 4))

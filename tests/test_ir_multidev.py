@@ -1,0 +1,34 @@
+"""8-fake-device runs of the IR sharded lowering (subprocess, like
+tests/test_dist.py — the main pytest process must keep seeing 1 device)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run_subprocess(script: str, n_dev: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "multidev" / script)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+@pytest.mark.multidev
+def test_ir_sharded_multidevice():
+    out = _run_subprocess("_ir_check.py")
+    assert "ALL_OK" in out
+    assert "paper-grid sharded ok" in out

@@ -1,0 +1,55 @@
+"""VMEM tile-budget planner tests: shared between kernels and the IR."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.ir.plan import (
+    DEFAULT_VMEM_TILE_BUDGET,
+    VMEM_BUDGET_ENV,
+    pick_block_rows,
+    vmem_tile_budget,
+)
+from repro.kernels.hdiff import hdiff_fused
+from repro.kernels.hdiff.ops import _pick_block_rows
+from repro.core import hdiff
+
+
+def test_budget_resolution_order(monkeypatch):
+    monkeypatch.delenv(VMEM_BUDGET_ENV, raising=False)
+    assert vmem_tile_budget() == DEFAULT_VMEM_TILE_BUDGET
+    monkeypatch.setenv(VMEM_BUDGET_ENV, str(1 << 20))
+    assert vmem_tile_budget() == 1 << 20
+    # explicit argument wins over the env var
+    assert vmem_tile_budget(2048) == 2048
+    monkeypatch.setenv(VMEM_BUDGET_ENV, "not-a-number")
+    with pytest.raises(ValueError, match=VMEM_BUDGET_ENV):
+        vmem_tile_budget()
+
+
+def test_pick_block_rows_budget_and_floor():
+    # 256x256 f32 tile is 256 KiB: fits the 4 MiB default whole.
+    assert pick_block_rows(256, 256) == 256
+    # A 64 KiB budget allows 64 rows of 256 f32 cols.
+    assert pick_block_rows(256, 256, budget_bytes=64 * 1024) == 64
+    # The structural floor is respected even when smaller tiles would fit.
+    assert pick_block_rows(256, 256, budget_bytes=1024, min_rows=4) == 4
+    # Nothing fits: smallest divisor >= min_rows (correctness over budget).
+    assert pick_block_rows(12, 1 << 20, budget_bytes=1024, min_rows=4) == 4
+    assert pick_block_rows(7, 1 << 20, budget_bytes=1024, min_rows=2) == 7
+
+
+def test_pick_block_rows_env_override(monkeypatch):
+    monkeypatch.setenv(VMEM_BUDGET_ENV, str(64 * 1024))
+    assert pick_block_rows(256, 256) == 64
+    # kernels/hdiff's picker goes through the same budget resolution
+    assert _pick_block_rows((1, 256, 256)) == 64
+
+
+def test_hdiff_fused_respects_vmem_budget_argument():
+    rng = np.random.default_rng(3)
+    psi = jnp.asarray(rng.standard_normal((2, 32, 16)).astype(np.float32))
+    want = np.asarray(hdiff(psi, 0.025))
+    # 8-row tiles (32*16*4 = 2 KiB budget => 8 rows of 16 cols at 512 B/row).
+    got = hdiff_fused(psi, 0.025, interpret=True, vmem_budget=512 * 8)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6, atol=1e-6)

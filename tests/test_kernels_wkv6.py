@@ -1,7 +1,6 @@
 """WKV-6 kernel + chunked form vs sequential oracle, shape sweeps."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -4,7 +4,6 @@ schedule shape, clipping."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.optim import (
     OptimizerConfig,

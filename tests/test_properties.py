@@ -21,7 +21,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import hdiff, hdiff_simple, jacobi2d_5pt, jacobi2d_9pt, plan_partition
+from repro.core import hdiff, hdiff_simple, jacobi2d_5pt, jacobi2d_9pt, plan_partition  # noqa: E402
 
 
 def grids(min_side=6, max_side=16):

@@ -4,7 +4,6 @@ import dataclasses
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.models import build_lm, lm_forward

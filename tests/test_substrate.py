@@ -14,8 +14,8 @@ from repro.checkpoint import (
 from repro.configs import get_smoke_config
 from repro.data import DataConfig, Prefetcher, SyntheticLM, pack_documents
 from repro.launch.mesh import make_host_mesh
-from repro.models import build_lm, lm_forward
-from repro.optim import OptimizerConfig, make_optimizer
+from repro.models import build_lm
+from repro.optim import make_optimizer
 from repro.serve import BatchedServer
 from repro.train import TrainConfig, make_train_step, train
 

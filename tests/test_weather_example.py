@@ -1,0 +1,45 @@
+"""Smoke test: the IR-driven weather simulation example on a small grid.
+
+The example re-execs itself with fake host devices, so it runs as a
+subprocess (multidev tier, like tests/test_dist.py)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run_example(*extra: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("XLA_FLAGS", None)  # the script sets its own fake-device count
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "examples" / "weather_simulation.py"), *extra],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+@pytest.mark.multidev
+def test_weather_example_smoke_small_grid():
+    out = _run_example("--steps", "3", "--devices", "2", "--depth", "4", "--size", "24")
+    assert "IR program: hdiff radius=2" in out
+    assert "distributed result matches single-device reference" in out
+
+
+@pytest.mark.multidev
+def test_weather_example_smoke_pallas_inner():
+    out = _run_example(
+        "--steps", "2", "--devices", "4", "--depth", "4", "--size", "32",
+        "--inner", "pallas",
+    )
+    assert "distributed result matches single-device reference" in out
