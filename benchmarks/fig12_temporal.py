@@ -1,0 +1,83 @@
+"""Fig. 12 (repo extension): temporal blocking — traffic and time vs k.
+
+SPARTA's §1 insight is that spatial dataflow pipelines *timesteps*, not just
+stages; the IR makes that a transform (``repeat(p, k)``), and this benchmark
+measures what it buys: for hdiff and the five §3.5 elementary stencils,
+``lower_pallas(repeat(p, k))`` applies k sweeps per VMEM residency, so
+
+  * compulsory HBM bytes per SIMULATED step divide by k
+    (``fused_bytes_per_step``, the graph-derived model), and
+  * wall-clock per simulated step amortises the tile load/store round-trip
+    (interpret mode on CPU here, so the wall-clock column is a
+    correctness-path datapoint, not hardware speedup).
+
+Each row also verifies the fused k-sweep against k composed single-step
+reference applications. The wire-side amortisation (one depth-k*r halo
+exchange per k sweeps) is measured for real in fig10_scaling.py.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import COLS, ROWS, emit, time_fn
+from repro.ir import (
+    ELEMENTARY_PROGRAMS,
+    hdiff_program,
+    lower_pallas,
+    lower_reference,
+    repeat,
+)
+
+KS = (1, 2, 4)
+NAMES_2D = ["jacobi2d_3pt", "laplacian", "jacobi2d_5pt", "jacobi2d_9pt", "seidel2d"]
+
+
+def _parity(got, want, k) -> str:
+    """Max |fused k-sweep - k composed reference sweeps|; hard-fails the
+    benchmark run past the 1e-6 acceptance bound (like fig10's assert)."""
+    err = float(jnp.max(jnp.abs(got - want)))
+    if err > 1e-6:
+        raise AssertionError(f"k={k} fused sweep diverges from composed "
+                             f"reference: max|d|={err:.1e}")
+    return f"parity=ok(max|d|={err:.1e})"
+
+
+def run(fast: bool = False) -> None:
+    depth = 2 if fast else 8  # interpret-mode Pallas: keep planes modest
+    rng = np.random.default_rng(0)
+    x2 = jnp.asarray(rng.standard_normal((depth, ROWS, COLS)).astype(np.float32))
+    x1 = jnp.asarray(
+        rng.standard_normal((8 if fast else 64, COLS)).astype(np.float32)
+    )
+
+    programs = [("hdiff", hdiff_program())]
+    programs += [(n, ELEMENTARY_PROGRAMS[n]()) for n in ["jacobi1d"] + NAMES_2D]
+
+    for name, prog in programs:
+        x = x1 if prog.ndim == 1 else x2
+        points = x.size
+        base_us = None
+        # The composed-reference oracle accumulates across k (1, 2, 4 sweeps
+        # share prefixes) and the parity call doubles as time_fn's warmup.
+        ref = lower_reference(prog)
+        want, sweeps_done = x, 0
+        for k in KS:
+            prog_k = repeat(prog, k)
+            fn = lower_pallas(prog_k, interpret=True)
+            while sweeps_done < k:
+                want, sweeps_done = ref(want), sweeps_done + 1
+            parity = _parity(fn(x), want, k)  # also compiles fn's jit cache
+            us = time_fn(fn, x, warmup=0, iters=3)
+            us_per_step = us / k
+            if base_us is None:
+                base_us = us_per_step
+            emit(
+                f"fig12/{name}_k{k}",
+                us_per_step,
+                f"hbm_bytes_per_step={prog_k.fused_bytes_per_step(points):.0f} "
+                f"(/{k} of one residency) "
+                f"per_step_speedup={base_us / us_per_step:.2f}x "
+                f"radius={prog_k.radius} {parity}",
+            )

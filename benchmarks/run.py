@@ -23,6 +23,7 @@ def main() -> None:
         fig9_designs,
         fig10_scaling,
         fig11_elementary,
+        fig12_temporal,
         table2_comparison,
         wkv6_chunking,
     )
@@ -32,6 +33,7 @@ def main() -> None:
         "fig9": fig9_designs.run,
         "fig10": fig10_scaling.run,
         "fig11": fig11_elementary.run,
+        "fig12": fig12_temporal.run,
         "table2": table2_comparison.run,
         "analytic": analytical_vs_compiled.run,
         "wkv6": wkv6_chunking.run,

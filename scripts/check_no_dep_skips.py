@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""CI gate: fail when any test was SKIPPED for a missing dev dependency.
+
+``pytest.importorskip("hypothesis")`` makes property-test modules vanish
+silently when the dev extras aren't installed — a green run that quietly
+dropped coverage. CI installs ``.[dev]``, so any import-skip there means the
+extras list (pyproject ``[project.optional-dependencies].dev``) and the
+tests have drifted apart; this script turns that into a hard failure.
+
+Usage: run pytest with ``--junitxml=report.xml``, then
+``python scripts/check_no_dep_skips.py report.xml``.
+"""
+
+from __future__ import annotations
+
+import sys
+import xml.etree.ElementTree as ET
+
+# Messages produced by pytest.importorskip / ImportError-driven skips.
+DEP_SKIP_PATTERNS = ("could not import", "no module named")
+
+
+def find_dependency_skips(junit_xml_path: str) -> list[str]:
+    tree = ET.parse(junit_xml_path)
+    bad = []
+    for case in tree.iter("testcase"):
+        for skip in case.iter("skipped"):
+            msg = f"{skip.get('message') or ''} {skip.text or ''}".lower()
+            if any(pat in msg for pat in DEP_SKIP_PATTERNS):
+                bad.append(
+                    f"{case.get('classname') or case.get('file')}::"
+                    f"{case.get('name')}: {skip.get('message')}"
+                )
+    return bad
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 2:
+        print(f"usage: {argv[0]} <junit-report.xml>", file=sys.stderr)
+        return 2
+    bad = find_dependency_skips(argv[1])
+    if bad:
+        print("tests skipped for missing dev dependencies (install '.[dev]'):")
+        for line in bad:
+            print(f"  - {line}")
+        return 1
+    print("no dependency-driven skips found")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

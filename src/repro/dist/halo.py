@@ -40,7 +40,20 @@ def exchange_row_halos(block: jax.Array, row_axis: str, n_shards: int, halo: int
     neighbour via two ``ppermute`` pushes. Edge shards receive zeros on
     their outward side (ppermute's fill for uncovered targets); callers
     must not emit output rows computed from them (see absolute-row mask).
-    Returns (..., R_loc + 2*halo, C)."""
+    Returns (..., R_loc + 2*halo, C).
+
+    Requires ``R_loc >= halo``: each push sources from the IMMEDIATE row
+    neighbour only, so a shard owning fewer than ``halo`` rows cannot
+    provide a full halo band — on such a fine mesh the slices silently
+    shorten and interiors compute from the wrong rows, so this raises
+    instead (regression-tested in tests/multidev/_ir_check.py)."""
+    r_loc = block.shape[-2]
+    if r_loc < halo:
+        raise ValueError(
+            f"rows/shard {r_loc} < halo {halo}: the single-neighbour "
+            f"ppermute exchange cannot deliver a depth-{halo} halo band; "
+            f"use fewer row shards (or a smaller halo / fewer fused steps)"
+        )
     down = [(j, j + 1) for j in range(n_shards - 1)]   # my bottom rows -> next shard's top halo
     up = [(j + 1, j) for j in range(n_shards - 1)]     # my top rows -> prev shard's bottom halo
     top_halo = jax.lax.ppermute(block[..., -halo:, :], row_axis, down)
@@ -62,14 +75,21 @@ def halo_exchange_bytes(
     row_shards: int,
     itemsize: int = 4,
     halo: int = HALO,
+    steps: int = 1,
 ) -> int:
-    """Total bytes on the wire per sweep for the row halo exchange, summed
-    over the whole mesh: every internal shard boundary moves ``halo`` rows
+    """Total bytes on the wire for ONE halo-exchange round, summed over the
+    whole mesh: every internal shard boundary moves ``halo * steps`` rows
     in each direction. Independent of depth sharding (depth planes are
-    disjoint; the per-device blocks are smaller but more numerous)."""
+    disjoint; the per-device blocks are smaller but more numerous).
+
+    ``steps`` models temporal blocking (``repeat(p, steps)`` lowered via
+    ``lower_sharded``): the exchanged band deepens to ``steps * halo`` rows
+    but one round serves ``steps`` fused sweeps, so exchange ROUNDS — the
+    latency term — per simulated step drop ``steps``-fold while bytes per
+    simulated step stay constant. Divide by ``steps`` for per-step bytes."""
     if row_shards <= 1:
         return 0
-    return 2 * (row_shards - 1) * depth * halo * cols * itemsize
+    return 2 * (row_shards - 1) * depth * halo * steps * cols * itemsize
 
 
 def make_sharded_hdiff(

@@ -8,6 +8,11 @@ One program, three backends (see README "The IR subsystem"):
         --> lower_sharded     (shard_map + inferred-radius halo exchange,
                                Pallas kernel composed inside the shard)
 
+Temporal blocking rides the same pipeline: ``repeat(p, k)`` /
+``StencilProgram.compose`` fuse k sweeps into one program whose chain every
+backend executes per-sweep (absolute-row ring passthrough), amortising HBM
+and wire round-trips k-fold per simulated step.
+
 This package is self-contained (no imports from other ``repro`` modules at
 import time), so ``repro.core`` and ``repro.kernels`` derive their specs and
 tile plans from it without cycles.
@@ -20,10 +25,12 @@ from repro.ir.graph import (
     Read,
     StencilOp,
     StencilProgram,
+    repeat,
 )
 from repro.ir.ops import affine, flux, scaled_residual
 from repro.ir.programs import (
     ELEMENTARY_PROGRAMS,
+    hdiff_multistep_program,
     hdiff_program,
     jacobi1d_program,
     jacobi2d_3pt_program,
@@ -38,6 +45,8 @@ from repro.ir.evaluate import (
     interior_eval,
     interior_region,
     ring_crop,
+    slab_step,
+    slab_sweep,
 )
 from repro.ir.plan import (
     DEFAULT_VMEM_TILE_BUDGET,

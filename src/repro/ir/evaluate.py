@@ -13,6 +13,7 @@ from __future__ import annotations
 from typing import Mapping
 
 import jax
+import jax.numpy as jnp
 
 from repro.ir.graph import StencilProgram
 
@@ -93,12 +94,68 @@ def ring_crop(program: StencilProgram, interior: Array) -> Array:
     return interior[(Ellipsis,) + tuple(idx)]
 
 
+def slab_step(
+    program: StencilProgram, slab: Array, row_ids: Array, rows_total
+) -> Array:
+    """One full-width sweep of a (single-sweep) program over a row slab —
+    the per-step body of every temporal-blocked lowering.
+
+    ``slab`` is ``(..., n, C)`` real data; ``row_ids`` gives the GLOBAL row
+    index of each of the ``n - 2r`` rows produced, shaped ``(n - 2r,)`` or
+    ``(n - 2r, 1)``. Rows whose global index falls in the radius-``r``
+    boundary ring keep the slab's current value (the per-sweep passthrough
+    that makes k fused sweeps bit-match k full-shape applications), as does
+    the radius-``r`` column ring (columns are never decomposed, so their
+    ring is global). Returns ``(..., n - 2r, C)`` — the slab shrinks by
+    ``r`` rows per side.
+    """
+    r = program.radius
+    vals = ring_crop(program, interior_eval(program, {program.inputs[0]: slab}))
+    if r == 0:
+        return vals.astype(slab.dtype)
+    cols = slab.shape[-1]
+    out = slab[..., r:-r, :]
+    out = out.at[..., :, r : cols - r].set(vals.astype(slab.dtype))
+    keep = (row_ids < r) | (row_ids >= rows_total - r)
+    if keep.ndim == 1:
+        keep = keep[:, None]
+    return jnp.where(keep, slab[..., r:-r, :], out)
+
+
+def slab_sweep(
+    program: StencilProgram, slab: Array, row_offset, rows_total
+) -> Array:
+    """Runs ``program``'s whole chain over ``slab`` via :func:`slab_step`.
+
+    ``row_offset`` is the global row index of ``slab``'s first row (may be a
+    traced scalar, e.g. derived from ``axis_index`` inside a shard). The
+    slab must carry the full chain halo: output has ``2 * program.radius``
+    fewer rows than the input.
+    """
+    base = row_offset
+    for prog in program.chain:
+        r = prog.radius
+        n = slab.shape[-2]
+        # 2-D iota: 1-D iota is unsupported by the TPU Mosaic lowering.
+        ids = base + r + jax.lax.broadcasted_iota(jnp.int32, (n - 2 * r, 1), 0)
+        slab = slab_step(prog, slab, ids, rows_total)
+        base = base + r
+    return slab
+
+
 def apply_program(
     program: StencilProgram, x: Array | Mapping[str, Array]
 ) -> Array:
     """Full-shape application: interior computed, boundary ring passed
     through from the ``passthrough`` source field (matches the hand-written
-    kernels' contract)."""
+    kernels' contract). A composed program applies its chain sweep by sweep,
+    re-applying the ring passthrough between sweeps — the oracle semantics
+    of ``repeat(p, k)``."""
+    if program.steps > 1:
+        arr = x[program.inputs[0]] if isinstance(x, Mapping) else x
+        for p in program.chain:
+            arr = apply_program(p, arr)
+        return arr
     if isinstance(x, Mapping):
         arrays = dict(x)
     else:

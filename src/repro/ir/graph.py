@@ -15,6 +15,13 @@ is derived from the graph:
     is consumed at the 5 star offsets, hence "5 Laplacians x 5 MACs" in
     Eq. 5), and ``reads`` is the size of the program's composed access
     footprint on its source fields.
+  * **temporal blocking** — :meth:`StencilProgram.compose` / :func:`repeat`
+    fuse k sequential sweeps into one program (the §1 "pipelining different
+    timesteps" insight): the merged DAG drives the analysis (radii add, so
+    ``repeat(p, k).radius == k * p.radius``), while :attr:`chain` records the
+    per-sweep decomposition the lowerings execute with the boundary-ring
+    passthrough applied between sweeps. HBM / wire traffic per *simulated*
+    step then divides by k (:meth:`fused_bytes_per_step`).
 
 The package is self-contained: nothing under ``repro.ir`` imports other
 ``repro`` modules, so ``repro.core`` / ``repro.kernels`` can derive their
@@ -192,6 +199,69 @@ class StencilProgram:
         lo, hi = self.halo()
         return max(max(lo, default=0), max(hi, default=0))
 
+    # -- temporal composition -------------------------------------------------
+
+    @property
+    def chain(self) -> tuple["StencilProgram", ...]:
+        """The sequential-sweep decomposition of this program.
+
+        A directly-constructed program is its own 1-chain. A program built by
+        :meth:`compose` / :func:`repeat` chains the single-sweep programs that
+        are applied in order, with the boundary-ring passthrough applied
+        *between* sweeps (the convention of every full-shape lowering). The
+        merged DAG this object holds is the analysis view — exact on points
+        at least :attr:`radius` from the boundary; near the boundary the
+        lowerings follow the chain, not the DAG.
+        """
+        return getattr(self, "_chain", (self,))
+
+    @property
+    def steps(self) -> int:
+        """Number of simulated timesteps one application performs."""
+        return len(self.chain)
+
+    def compose(self, other: "StencilProgram", *, name: str | None = None) -> "StencilProgram":
+        """Sequential composition: apply ``self``, then feed its output to
+        ``other`` (both single-input, same ndim).
+
+        The returned program's DAG inlines ``other`` after ``self`` with
+        ``other``'s input bound to ``self``'s output (fields renamed to stay
+        unique), so offsets compose by Minkowski sum and the inferred radii
+        ADD. Its :attr:`chain` concatenates both chains — the lowerings use
+        it to apply the per-sweep boundary passthrough.
+        """
+        if self.ndim != other.ndim:
+            raise ValueError(f"ndim mismatch: {self.ndim} vs {other.ndim}")
+        if len(self.inputs) != 1 or len(other.inputs) != 1:
+            raise ValueError(
+                "compose needs single-input programs, got "
+                f"{self.inputs} and {other.inputs}"
+            )
+        taken = {self.inputs[0], *(op.name for op in self.ops)}
+        tag = self.steps
+        while any(f"{op.name}@{tag}" in taken for op in other.ops):
+            tag += 1
+        rename = {other.inputs[0]: self.output}
+        rename.update({op.name: f"{op.name}@{tag}" for op in other.ops})
+        appended = tuple(
+            StencilOp(
+                name=rename[op.name],
+                reads=tuple(Read(rename[r.field], r.offset) for r in op.reads),
+                compute=op.compute,
+                cost=op.cost,
+            )
+            for op in other.ops
+        )
+        prog = StencilProgram(
+            name if name is not None else f"{self.name}>>{other.name}",
+            self.inputs,
+            self.ops + appended,
+            ndim=self.ndim,
+            passthrough=self.passthrough,
+        )
+        prog._chain = self.chain + other.chain
+        return prog
+
     # -- derived accounting ---------------------------------------------------
 
     def spec(self) -> ProgramSpec:
@@ -216,11 +286,40 @@ class StencilProgram:
 
     def fused_bytes(self, points: int, itemsize: int = 4) -> int:
         """Compulsory traffic under fusion: each source in once, output once
-        (the VMEM-residency / B-block broadcast analogue)."""
+        (the VMEM-residency / B-block broadcast analogue). For a composed
+        program this is the traffic of one fused k-sweep application."""
         return (len(self.inputs) + 1) * points * itemsize
+
+    def fused_bytes_per_step(self, points: int, itemsize: int = 4) -> float:
+        """Compulsory HBM traffic per *simulated* timestep under the fused
+        k-sweep lowering — :meth:`fused_bytes` amortised over the chain, the
+        ~k-fold cut temporal blocking buys."""
+        return self.fused_bytes(points, itemsize) / self.steps
 
     def __repr__(self) -> str:
         return (
             f"StencilProgram({self.name!r}, inputs={self.inputs}, "
-            f"ops={[op.name for op in self.ops]}, radius={self.radius})"
+            f"ops={[op.name for op in self.ops]}, radius={self.radius}, "
+            f"steps={self.steps})"
         )
+
+
+def repeat(program: StencilProgram, k: int) -> StencilProgram:
+    """``k`` fused sequential sweeps of ``program`` (temporal blocking).
+
+    ``repeat(p, k)`` composes ``p`` with itself ``k`` times: the merged DAG
+    gives the analysis (``repeat(p, k).radius == k * p.radius``) and the
+    chain gives the lowerings their per-sweep structure — one HBM / wire
+    round-trip then serves ``k`` simulated timesteps. ``k == 1`` returns
+    ``program`` unchanged.
+    """
+    if not isinstance(k, int) or isinstance(k, bool) or k < 1:
+        raise ValueError(f"k must be a positive int, got {k!r}")
+    if len(program.inputs) != 1:
+        raise ValueError(
+            f"repeat needs a single-input program, got inputs {program.inputs}"
+        )
+    out = program
+    for i in range(2, k + 1):
+        out = out.compose(program, name=f"{program.name}_x{i}")
+    return out

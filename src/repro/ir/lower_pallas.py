@@ -2,11 +2,24 @@
 
 Generalises the hand-fused hdiff kernel (``repro.kernels.hdiff.kernel``) to
 any single-input program: one program instance owns one row-tile of one
-plane; the inferred row halo is provided by the same three-slab trick (the
-input passed with block index maps ``i-1 / i / i+1``, clamped at the edges),
-and the whole DAG is evaluated in VMEM by ``interior_eval`` — intermediates
-never touch HBM, the paper's accumulator-residency discipline. Block shape
-comes from the shared VMEM budget planner (``repro.ir.plan``).
+plane; the row halo (the program's full chain radius) is provided by the
+same three-slab trick (the input passed with block index maps ``i-1 / i /
+i+1``, clamped at the edges), and the whole DAG is evaluated in VMEM by
+``interior_eval`` — intermediates never touch HBM, the paper's
+accumulator-residency discipline. Block shape comes from the shared VMEM
+budget planner (``repro.ir.plan``).
+
+Temporal blocking is first-class: a composed program (``repeat(p, k)``)
+loads its tile ONCE with a depth-``k*r`` halo and applies the chain's k
+sweeps while the data stays VMEM-resident, re-applying the global boundary
+ring between sweeps with ABSOLUTE row indices (``slab_sweep``) so the k-step
+kernel bit-matches k full-shape applications. Compulsory HBM traffic per
+simulated step drops ~k-fold — the generalisation of the hard-coded
+two-step trick that ``kernels/hdiff/multistep.py`` now wraps.
+
+The absolute row indexing takes a traced ``(row_offset, rows_global)`` pair
+through SMEM, so the same kernel runs standalone (offset 0) and inside a
+``shard_map`` shard (offset from ``axis_index``; see ``lower_sharded``).
 
 1-D programs (jacobi1d) lower to a row-per-program kernel with the column
 halo handled in-tile, mirroring ``kernels.stencil2d.jacobi1d_pallas``.
@@ -20,8 +33,9 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.ir.evaluate import interior_eval, ring_crop
+from repro.ir.evaluate import interior_eval, ring_crop, slab_sweep
 from repro.ir.graph import StencilProgram
 from repro.ir.plan import pick_block_rows
 
@@ -41,49 +55,40 @@ def _embed_cols(cur: Array, interior: Array, r: int) -> Array:
 
 
 def _generic_kernel(
-    prev_ref, cur_ref, next_ref, out_ref, *, program, block_rows, rows, r
+    prev_ref, cur_ref, next_ref, meta_ref, out_ref, *, program, block_rows, halo
 ):
     """Kernel body: blocks are (1, block_rows, C); grid is (depth, row_tiles).
 
-    ``r`` is the inferred program radius: the three-slab halo is ``r`` rows
-    from each neighbour block, and the square radius-``r`` ring of the
-    global grid passes through.
+    ``halo`` is the program's full chain radius: the three-slab halo is
+    ``halo`` rows from each neighbour block, and each of the chain's sweeps
+    shrinks the slab by its own radius while re-applying the global
+    radius-r ring at ABSOLUTE row indices (``meta_ref`` holds the traced
+    ``(row_offset, rows_global)`` pair — 0 / rows standalone, the shard's
+    global placement under ``lower_sharded``).
     """
     i = pl.program_id(1)
     cur = cur_ref[0].astype(jnp.float32)
-    if r:
+    if halo:
         x = jnp.concatenate(
             [
-                prev_ref[0, -r:, :].astype(jnp.float32),
+                prev_ref[0, -halo:, :].astype(jnp.float32),
                 cur,
-                next_ref[0, :r, :].astype(jnp.float32),
+                next_ref[0, :halo, :].astype(jnp.float32),
             ],
             axis=0,
-        )  # (block_rows + 2r, C)
+        )  # (block_rows + 2*halo, C)
     else:
         x = cur
-
-    # Evaluate the whole DAG in VMEM; crop the exact-margin interior to the
-    # ring region of the padded tile: rows [r, r+block_rows), cols [r, C-r).
-    vals = ring_crop(program, interior_eval(program, {program.inputs[0]: x}))
-    out = _embed_cols(cur, vals, r)
-
-    if r:
-        # Row passthrough: global boundary rows keep the input (the clamped
-        # edge slabs feed garbage only into rows this mask overwrites).
-        gl_row = i * block_rows + jax.lax.broadcasted_iota(
-            jnp.int32, (block_rows, 1), 0
-        )
-        keep = (gl_row < r) | (gl_row >= rows - r)
-        out = jnp.where(keep, cur, out)
-    out_ref[0] = out.astype(out_ref.dtype)
+    base = meta_ref[0, 0] + i * block_rows - halo  # global id of x's first row
+    out_ref[0] = slab_sweep(program, x, base, meta_ref[0, 1]).astype(out_ref.dtype)
 
 
-def _kernel_1d(x_ref, out_ref, *, program, r):
+def _kernel_1d(x_ref, out_ref, *, program):
     x = x_ref[0].astype(jnp.float32)
-    vals = ring_crop(program, interior_eval(program, {program.inputs[0]: x}))
-    out = _embed_cols(x, vals, r)
-    out_ref[0] = out.astype(out_ref.dtype)
+    for prog in program.chain:
+        vals = ring_crop(prog, interior_eval(prog, {prog.inputs[0]: x}))
+        x = _embed_cols(x, vals, prog.radius)
+    out_ref[0] = x.astype(out_ref.dtype)
 
 
 def lower_pallas(
@@ -95,12 +100,19 @@ def lower_pallas(
 ) -> Callable[[Array], Array]:
     """Builds ``x -> program(x)`` as a fused Pallas kernel.
 
+    For a composed program (``program.steps > 1``) the kernel applies all k
+    sweeps per VMEM residency — one HBM round-trip per k simulated steps.
+
     Args:
       program: a single-input IR program (scalars baked into the graph).
       block_rows: VMEM row-tile override; default picks the largest divisor
-        of rows fitting the shared VMEM budget (>= the inferred halo).
+        of rows fitting the shared VMEM budget (>= the inferred chain halo).
       vmem_budget: per-block byte budget for the planner (arg > env > 4 MiB).
       interpret: force interpreter mode; default = interpret iff not on TPU.
+
+    The returned function also accepts keyword-only ``row_offset`` /
+    ``rows_global`` (possibly traced) so ``lower_sharded`` can run the same
+    kernel on a halo-padded shard block with true global row indices.
     """
     if len(program.inputs) != 1:
         raise ValueError(
@@ -111,19 +123,21 @@ def lower_pallas(
     if program.ndim != 2:
         raise ValueError(f"unsupported ndim {program.ndim}")
 
-    r = program.radius
-    min_block = max(r, 1)
+    halo = program.radius  # full chain radius: k*r for repeat(p, k)
+    min_block = max(halo, 1)
 
     @functools.partial(jax.jit, static_argnames=("br", "interp"))
-    def _call(x, br, interp):
+    def _call(x, row_offset, rows_global, br, interp):
         depth, rows, cols = x.shape
         row_tiles = rows // br
+        meta = jnp.stack(
+            [jnp.asarray(row_offset, jnp.int32), jnp.asarray(rows_global, jnp.int32)]
+        ).reshape(1, 2)
         kernel = functools.partial(
             _generic_kernel,
             program=program,
             block_rows=br,
-            rows=rows,
-            r=r,
+            halo=halo,
         )
         spec = lambda fn: pl.BlockSpec((1, br, cols), fn)  # noqa: E731
         return pl.pallas_call(
@@ -133,22 +147,24 @@ def lower_pallas(
                 spec(lambda d, i: (d, jnp.maximum(i - 1, 0), 0)),
                 spec(lambda d, i: (d, i, 0)),
                 spec(lambda d, i: (d, jnp.minimum(i + 1, row_tiles - 1), 0)),
+                pl.BlockSpec(
+                    (1, 2), lambda d, i: (0, 0), memory_space=pltpu.MemorySpace.SMEM
+                ),
             ],
             out_specs=spec(lambda d, i: (d, i, 0)),
             out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
             interpret=interp,
-        )(x, x, x)
+        )(x, x, x, meta)
 
-    def fn(x: Array) -> Array:
+    def fn(x: Array, *, row_offset=0, rows_global=None) -> Array:
         if x.ndim != 3:
             raise ValueError(f"expected (depth, rows, cols), got shape {x.shape}")
         _, rows, cols = x.shape
         br = block_rows
         if br is None:
             br = pick_block_rows(
-                rows, cols, budget_bytes=vmem_budget, min_rows=min_block
+                rows, cols, budget_bytes=vmem_budget, min_rows=min(min_block, rows)
             )
-        br = min(br, rows)
         if rows % br:
             raise ValueError(f"rows={rows} not divisible by block_rows={br}")
         if br < min_block:
@@ -157,7 +173,9 @@ def lower_pallas(
                 f"program {program.name!r}"
             )
         interp = interpret if interpret is not None else not _on_tpu()
-        return _call(x, br, interp)
+        if rows_global is None:
+            rows_global = rows
+        return _call(x, row_offset, rows_global, br, interp)
 
     return fn
 
@@ -166,7 +184,7 @@ def _lower_pallas_1d(program, *, interpret):
     @functools.partial(jax.jit, static_argnames=("interp",))
     def _call(x, interp):
         batch, n = x.shape
-        kernel = functools.partial(_kernel_1d, program=program, r=program.radius)
+        kernel = functools.partial(_kernel_1d, program=program)
         return pl.pallas_call(
             kernel,
             grid=(batch,),

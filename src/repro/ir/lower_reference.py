@@ -25,9 +25,20 @@ def lower_reference(
     program: StencilProgram, *, mode: str = "fused"
 ) -> Callable[[Array | Mapping[str, Array]], Array]:
     if mode == "fused":
+        # apply_program is chain-aware: a composed program applies its
+        # sweeps in sequence with the ring passthrough between them.
         return jax.jit(lambda x: apply_program(program, x))
     if mode == "staged":
-        return _lower_staged(program)
+        if program.steps == 1:
+            return _lower_staged(program)
+        runs = [_lower_staged(p) for p in program.chain]
+
+        def run_chain(x):
+            for run in runs:
+                x = run(x)
+            return x
+
+        return run_chain
     raise ValueError(f"unknown mode {mode!r} (want 'fused' or 'staged')")
 
 

@@ -2,16 +2,24 @@
 
 The B-block scale-out of §3.4, driven entirely by the graph analysis: the
 row halo each shard pushes to its neighbours is the program's *inferred*
-radius (``dist.halo.exchange_row_halos`` with ``halo=r``), not a hard-coded
-constant, and the per-shard compute composes either the reference evaluator
-or the fused Pallas kernel inside the shard — the ROADMAP's
+chain radius (``dist.halo.exchange_row_halos`` with ``halo=r`` — k*r for a
+temporally-blocked ``repeat(p, k)``), not a hard-coded constant, and the
+per-shard compute composes either the reference evaluator or the fused
+Pallas kernel inside the shard — the ROADMAP's
 "Pallas-kernel-inside-shard_map" item: VMEM-fused B-block residency *and*
 domain decomposition in one step function.
 
+Temporal blocking amortises the wire: a composed program exchanges its
+depth-``k*r`` halo ONCE per k fused sweeps, so halo-exchange *rounds* (the
+latency term) per simulated step drop k-fold while the exchanged bytes per
+round match ``halo_exchange_bytes(..., steps=k)`` exactly.
+
 Global-boundary correctness uses absolute row indexing exactly like
-``repro.dist.halo.make_sharded_hdiff``: the program's (lo, hi) row margins
-define the global passthrough ring, and the zero halos ppermute delivers at
-the grid edges are never read into an owned output row.
+``repro.dist.halo.make_sharded_hdiff``, applied PER SWEEP: every sweep of
+the chain re-applies the global boundary ring at true global row indices
+(``slab_sweep`` with the shard's row offset), so the zero halos ppermute
+delivers at the grid edges are never read into an owned output row and the
+k-sweep result bit-matches k single-device applications.
 
 ``repro.dist`` is imported lazily (it depends on ``repro.core``, which
 derives its constants from this package).
@@ -22,10 +30,9 @@ from __future__ import annotations
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.ir.evaluate import interior_eval, ring_crop
+from repro.ir.evaluate import slab_sweep
 from repro.ir.graph import StencilProgram
 from repro.ir.lower_pallas import lower_pallas
 from repro.ir.lower_reference import lower_reference
@@ -44,14 +51,16 @@ def lower_sharded(
     vmem_budget: int | None = None,
 ) -> Callable[[Array], Array]:
     """Builds a jitted ``x (D, R, C) -> x'`` matching the single-device
-    program application while domain-decomposed over ``mesh``.
+    program application (all ``program.steps`` sweeps of it) while
+    domain-decomposed over ``mesh``.
 
     Args:
-      program: single-input 2-D IR program.
+      program: single-input 2-D IR program; a composed program fuses its k
+        sweeps behind one depth-``k*r`` halo exchange.
       mesh: device mesh; axes named by ``depth_axis`` / ``row_axis``.
       depth_axis: mesh axis sharding dim 0 (planes, zero collectives), or None.
       row_axis: mesh axis sharding dim 1 (rows, halo exchange at the
-        program's inferred radius), or None for pure depth parallelism.
+        program's inferred chain radius), or None for pure depth parallelism.
       inner: per-shard compute — "pallas" (fused VMEM kernel inside the
         shard) or "reference" (jnp evaluator).
       interpret / vmem_budget: forwarded to the Pallas lowering.
@@ -73,7 +82,7 @@ def lower_sharded(
     n_row = sizes[row_axis] if row_axis is not None else 1
     n_depth = sizes[depth_axis] if depth_axis is not None else 1
 
-    halo = program.radius  # square ring convention, same as the lowerings
+    halo = program.radius  # full chain radius; exchanged once per k sweeps
 
     if inner == "pallas":
         apply_full = lower_pallas(program, interpret=interpret, vmem_budget=vmem_budget)
@@ -89,28 +98,22 @@ def lower_sharded(
             return apply_full(block)
         r_loc = block.shape[-2]
         r_glob = r_loc * n_row
-        cols = block.shape[-1]
         padded = exchange_row_halos(block, row_axis, n_row, halo=halo)
+        # Global row index of the padded block's first row: the per-sweep
+        # ring passthrough runs at TRUE global indices, so ring rows owned
+        # by this shard hold exactly what k stepped applications leave
+        # there, and the zero halos at the grid edges are never read into
+        # an owned row. No post-hoc ownership mask is needed.
+        off = jax.lax.axis_index(row_axis) * r_loc - halo
 
         if inner == "pallas":
-            # Fused kernel on the padded block; its own boundary rows fall in
-            # the discarded halo, so the owned slice is fully interior (and
-            # its column ring handling is the global one — cols aren't split).
-            vals = apply_full(padded)[..., halo : halo + r_loc, :]
+            # Fused k-sweep kernel on the padded block with global row ids;
+            # the owned rows are the exact interior of the padded result.
+            vals = apply_full(padded, row_offset=off, rows_global=r_glob)
+            vals = vals[..., halo : halo + r_loc, :]
         else:
-            # Evaluate on the padded block; the ring crop of the padded grid
-            # yields exactly the owned rows and the global column interior.
-            inner_vals = ring_crop(
-                program, interior_eval(program, {program.inputs[0]: padded})
-            )  # (..., r_loc, C - 2*halo)
-            vals = block.at[..., :, halo : cols - halo].set(
-                inner_vals.astype(block.dtype)
-            )
-
-        # Absolute-row mask: the program's global boundary ring passes through.
-        g = jax.lax.axis_index(row_axis) * r_loc + jnp.arange(r_loc)
-        own = (g >= halo) & (g < r_glob - halo)
-        return jnp.where(own[:, None], vals.astype(block.dtype), block)
+            vals = slab_sweep(program, padded, off, r_glob)  # (..., r_loc, C)
+        return vals.astype(block.dtype)
 
     mapped = jax.shard_map(
         local_step, mesh=mesh, in_specs=(spec,), out_specs=spec, check_vma=False
@@ -128,7 +131,9 @@ def lower_sharded(
                 raise ValueError(f"rows {r} not divisible by {n_row} {row_axis!r} shards")
             if r // n_row < halo:
                 raise ValueError(
-                    f"rows/shard {r // n_row} < inferred halo {halo}: too many row shards"
+                    f"rows/shard {r // n_row} < inferred halo {halo} (chain "
+                    f"radius of {program.name!r}): too many row shards for "
+                    f"the single-neighbour halo exchange"
                 )
         return mapped(x)
 

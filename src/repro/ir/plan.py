@@ -16,18 +16,28 @@ VMEM_BUDGET_ENV = "REPRO_VMEM_BUDGET"
 
 
 def vmem_tile_budget(budget_bytes: int | None = None) -> int:
-    """Resolves the per-block VMEM budget: explicit arg > env var > 4 MiB."""
+    """Resolves the per-block VMEM budget: explicit arg > env var > 4 MiB.
+
+    A non-positive budget is a configuration error, not a request for
+    1-row tiles — it raises instead of silently degrading every kernel."""
     if budget_bytes is not None:
-        return int(budget_bytes)
-    env = os.environ.get(VMEM_BUDGET_ENV)
-    if env:
+        budget, source = int(budget_bytes), "budget_bytes"
+    else:
+        env = os.environ.get(VMEM_BUDGET_ENV)
+        if not env:
+            return DEFAULT_VMEM_TILE_BUDGET
         try:
-            return int(env)
+            budget = int(env)
         except ValueError as e:
             raise ValueError(
                 f"{VMEM_BUDGET_ENV} must be an integer byte count, got {env!r}"
             ) from e
-    return DEFAULT_VMEM_TILE_BUDGET
+        source = VMEM_BUDGET_ENV
+    if budget <= 0:
+        raise ValueError(
+            f"{source} must be a positive byte count, got {budget}"
+        )
+    return budget
 
 
 def pick_block_rows(
@@ -43,8 +53,16 @@ def pick_block_rows(
     ``min_rows`` is the kernel's structural floor (e.g. the three-slab halo
     trick needs ``block_rows >= halo``). If no divisor fits the budget, the
     smallest divisor >= ``min_rows`` is returned (correctness over budget).
+    If ``min_rows`` exceeds every divisor of ``rows`` (i.e. ``rows``
+    itself), no tiling can satisfy the kernel's floor — that raises rather
+    than silently handing back an undersized tile.
     """
     budget = vmem_tile_budget(budget_bytes)
+    if min_rows > rows:
+        raise ValueError(
+            f"min_rows={min_rows} exceeds every divisor of rows={rows}: the "
+            f"grid is too shallow for this kernel's structural floor (halo)"
+        )
     fallback = rows
     for cand in range(rows, 0, -1):
         if rows % cand or cand < min_rows:

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 from typing import Callable
 
-from repro.ir.graph import StencilProgram
+from repro.ir.graph import StencilProgram, repeat
 from repro.ir.ops import affine, flux, scaled_residual
 
 # Tap orders deliberately mirror the hand-written kernels' evaluation order
@@ -41,6 +41,18 @@ def hdiff_program(coeff: float = 0.025, *, limit: bool = True) -> StencilProgram
         ),
     ]
     return StencilProgram("hdiff" if limit else "hdiff_simple", ["psi"], ops)
+
+
+def hdiff_multistep_program(
+    k: int, coeff: float = 0.025, *, limit: bool = True
+) -> StencilProgram:
+    """``k`` temporally-blocked hdiff sweeps: ``repeat(hdiff_program(), k)``.
+
+    One fused application simulates ``k`` timesteps per HBM (and, sharded,
+    per wire) round-trip; radius is ``2 * k``. The k=2 instance is what
+    ``kernels.hdiff.multistep.hdiff_twostep`` wraps.
+    """
+    return repeat(hdiff_program(coeff, limit=limit), k)
 
 
 def jacobi1d_program(coeff: float = 1.0 / 3.0) -> StencilProgram:

@@ -1,17 +1,24 @@
-"""Temporal-blocked hdiff: TWO timesteps per HBM round-trip.
+"""Temporal-blocked hdiff: TWO timesteps per HBM round-trip (thin wrapper).
 
 The paper's §1 insight — "their dataflow design provides an intuitive way to
 take advantage of both spatial and temporal locality in iterative stencil
-processing by pipelining different timesteps" — as a TPU kernel: the tile
-(with a radius-4 row halo) is loaded into VMEM once, hdiff is applied twice
-while the data stays resident, and only the final result returns to HBM.
-Compulsory traffic per simulated step halves (the kernel-side analogue of
-chaining two tri-AIE pipelines back-to-back).
-
-Boundary semantics match two applications of the boundary-passthrough hdiff
-exactly: each internal step applies the global passthrough ring using
-absolute row indices, so ``hdiff_twostep(x) == hdiff(hdiff(x))`` bit-tight —
+processing by pipelining different timesteps" — originally lived here as a
+hand-coded two-step Pallas kernel. Temporal blocking is now a first-class IR
+transform (``repro.ir.repeat`` + the chain-aware ``lower_pallas``), so this
+module is a thin wrapper: ``hdiff_twostep`` builds ``repeat(hdiff, 2)`` and
+hands it to the generic k-step fused kernel — the tile (with a radius-4 row
+halo) is loaded into VMEM once, hdiff is applied twice with the global
+boundary ring re-applied at absolute row indices between the sweeps, and
+only the final result returns to HBM. Compulsory traffic per simulated step
+halves, and ``hdiff_twostep(x) == hdiff(hdiff(x))`` stays bit-tight —
 verified against the composed oracle in tests/test_kernels_hdiff_multistep.py.
+
+``block_rows`` resolves exactly like the other kernel entry points
+(``hdiff_fused`` / ``hdiff_fixed``): explicit argument, else the shared VMEM
+tile planner with the two-step structural floor, honouring ``vmem_budget`` /
+``REPRO_VMEM_BUDGET``. An explicit ``block_rows`` is validated as given —
+never silently clamped to ``rows`` first — so a call that passes cannot
+flip to an error when ``rows`` changes.
 """
 
 from __future__ import annotations
@@ -19,91 +26,79 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.hdiff.kernel import HALO, _hdiff_tile_math
+from repro.ir import hdiff_multistep_program, lower_pallas
+from repro.ir.plan import pick_block_rows
+from repro.kernels.hdiff.kernel import HALO
 
 Array = jax.Array
 
-
-def _apply_step(x: Array, coeff, rows_global: Array, rows_total: int, limit: bool) -> Array:
-    """One hdiff step on a (n, C) tile with absolute row ids ``rows_global``
-    for the n-4 interior rows produced; returns (n-4, C) incl. passthrough."""
-    interior = _hdiff_tile_math(x, coeff, limit=limit)       # (n-4, C-4)
-    out = x[HALO:-HALO, :]
-    out = out.at[:, HALO:-HALO].set(interior.astype(out.dtype))
-    keep = (rows_global < HALO) | (rows_global >= rows_total - HALO)
-    return jnp.where(keep[:, None], x[HALO:-HALO, :], out)
+# Two fused sweeps need a 2*HALO halo from EACH neighbouring block plus the
+# block's own rows — the documented structural floor of the original
+# hand-written kernel, kept as this wrapper's contract.
+MIN_TWOSTEP_BLOCK_ROWS = 4 * HALO
 
 
-def _twostep_kernel(prev_ref, cur_ref, next_ref, coeff_ref, out_ref, *,
-                    block_rows: int, rows: int, limit: bool):
-    i = pl.program_id(1)
-    cur = cur_ref[0].astype(jnp.float32)
-    top = prev_ref[0, -2 * HALO:, :].astype(jnp.float32)
-    bot = next_ref[0, :2 * HALO, :].astype(jnp.float32)
-    x = jnp.concatenate([top, cur, bot], axis=0)             # (block+8, C)
-    coeff = coeff_ref[0, 0]
-
-    base = i * block_rows
-    rows1 = base - HALO + jax.lax.broadcasted_iota(jnp.int32, (block_rows + 2 * HALO,), 0)
-    x1 = _apply_step(x, coeff, rows1, rows, limit)           # (block+4, C)
-    rows2 = base + jax.lax.broadcasted_iota(jnp.int32, (block_rows,), 0)
-    x2 = _apply_step(x1, coeff, rows2, rows, limit)          # (block, C)
-    out_ref[0] = x2.astype(out_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("block_rows", "limit", "interpret"))
 def hdiff_twostep_pallas(
     psi: Array,
-    coeff: float | Array = 0.025,
+    coeff: float = 0.025,
     *,
-    block_rows: int = 128,
+    block_rows: int | None = None,
     limit: bool = True,
     interpret: bool = False,
+    vmem_budget: int | None = None,
 ) -> Array:
     """Two fused hdiff timesteps over ``(depth, rows, cols)``.
 
-    Requires block_rows >= 2*HALO*2 = 8 (the two-step halo must fit inside a
-    neighbouring block) and rows % block_rows == 0.
+    Requires ``block_rows >= 4*HALO = 8`` (the two-step halo must fit inside
+    a neighbouring block) and ``rows % block_rows == 0``; ``block_rows=None``
+    resolves via the shared VMEM tile planner (``vmem_budget`` arg >
+    ``REPRO_VMEM_BUDGET`` env > 4 MiB).
+
+    ``coeff`` must be a CONCRETE scalar: the IR path bakes it into the
+    program graph (one compiled kernel per coefficient, cached). The old
+    hand-written kernel threaded a traced coeff through SMEM; runtime
+    scalars in IR programs would restore that and are future work.
     """
-    depth, rows, cols = psi.shape
-    block_rows = min(block_rows, rows)
+    if psi.ndim != 3:
+        raise ValueError(f"expected (depth, rows, cols), got shape {psi.shape}")
+    try:
+        coeff = float(coeff)
+    except TypeError as e:
+        raise ValueError(
+            "coeff must be a concrete Python/NumPy scalar — the IR-based "
+            "kernel bakes it into the program graph; don't pass a traced "
+            "value (call hdiff_twostep outside jit, or close over a "
+            "constant)"
+        ) from e
+    _, rows, cols = psi.shape
+    if block_rows is None:
+        block_rows = pick_block_rows(
+            rows, cols, budget_bytes=vmem_budget, min_rows=MIN_TWOSTEP_BLOCK_ROWS
+        )
     if rows % block_rows:
         raise ValueError(f"rows={rows} not divisible by block_rows={block_rows}")
-    if block_rows < 4 * HALO:
-        raise ValueError(f"block_rows must be >= {4 * HALO} for two-step halos")
-    row_tiles = rows // block_rows
-    coeff_arr = jnp.full((1, 1), coeff, jnp.float32)
-
-    spec = lambda fn: pl.BlockSpec((1, block_rows, cols), fn)  # noqa: E731
-    kernel = functools.partial(_twostep_kernel, block_rows=block_rows, rows=rows,
-                               limit=limit)
-    return pl.pallas_call(
-        kernel,
-        grid=(depth, row_tiles),
-        in_specs=[
-            spec(lambda d, i: (d, jnp.maximum(i - 1, 0), 0)),
-            spec(lambda d, i: (d, i, 0)),
-            spec(lambda d, i: (d, jnp.minimum(i + 1, row_tiles - 1), 0)),
-            pl.BlockSpec((1, 1), lambda d, i: (0, 0), memory_space=pltpu.MemorySpace.SMEM),
-        ],
-        out_specs=spec(lambda d, i: (d, i, 0)),
-        out_shape=jax.ShapeDtypeStruct(psi.shape, psi.dtype),
-        interpret=interpret,
-    )(psi, psi, psi, coeff_arr)
+    if block_rows < MIN_TWOSTEP_BLOCK_ROWS:
+        raise ValueError(
+            f"block_rows must be >= {MIN_TWOSTEP_BLOCK_ROWS} for two-step halos"
+        )
+    return _lowered_twostep(coeff, limit, block_rows, interpret)(psi)
 
 
-def hdiff_twostep(psi: Array, coeff: float | Array = 0.025, *,
+@functools.lru_cache(maxsize=64)
+def _lowered_twostep(coeff: float, limit: bool, block_rows: int, interpret: bool):
+    """Caches the lowered kernel so repeat calls reuse the jitted closure
+    (lower_pallas returns a fresh jax.jit wrapper per lowering — without
+    this, every call would retrace and recompile)."""
+    prog = hdiff_multistep_program(2, coeff, limit=limit)
+    return lower_pallas(prog, block_rows=block_rows, interpret=interpret)
+
+
+def hdiff_twostep(psi: Array, coeff: float = 0.025, *,
                   block_rows: int | None = None, limit: bool = True,
-                  interpret: bool | None = None) -> Array:
+                  interpret: bool | None = None,
+                  vmem_budget: int | None = None) -> Array:
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    if block_rows is None:
-        from repro.kernels.hdiff.ops import _pick_block_rows
-
-        block_rows = max(_pick_block_rows(psi.shape), 4 * HALO)
     return hdiff_twostep_pallas(psi, coeff, block_rows=block_rows, limit=limit,
-                                interpret=interpret)
+                                interpret=interpret, vmem_budget=vmem_budget)

@@ -18,11 +18,13 @@ import jax.numpy as jnp
 
 from repro.core import hdiff, hdiff_simple
 from repro.core.stencils import jacobi2d_9pt
+from repro.dist.halo import exchange_row_halos, make_sharded_hdiff
 from repro.ir import (
     hdiff_program,
     jacobi2d_9pt_program,
     lower_reference,
     lower_sharded,
+    repeat,
 )
 from repro.launch.mesh import make_mesh
 
@@ -67,7 +69,57 @@ np.testing.assert_allclose(
 )
 print("jacobi2d_9pt (halo=1) ok")
 
-# Acceptance: the paper grid (64 x 256 x 256) on the full 8-device mesh.
+# Temporal blocking: the k-step sharded lowering exchanges a depth-k*r halo
+# ONCE per k fused sweeps and must bit-match k composed applications.
+mesh = make_mesh((2, 4), ("data", "model"))
+for k in (1, 2, 3):
+    pk = repeat(prog, k)
+    assert pk.radius == k * prog.radius
+    want_k = psi
+    for _ in range(k):
+        want_k = hdiff(want_k, 0.025)
+    want_k = np.asarray(want_k)
+    for inner in ("reference", "pallas"):
+        fn = lower_sharded(pk, mesh, depth_axis="data", row_axis="model", inner=inner)
+        np.testing.assert_allclose(
+            np.asarray(fn(psi)), want_k, rtol=1e-6, atol=1e-6,
+            err_msg=f"k={k} inner={inner}",
+        )
+    print(f"temporal k={k} ok")
+
+# Fine-mesh regression: rows/shard < halo must raise, never compute wrong
+# interiors. 32 rows / 8 shards = 4 local rows < 6 (k=3 chain halo).
+mesh18 = make_mesh((1, 8), ("data", "model"))
+fine = lower_sharded(repeat(prog, 3), mesh18, depth_axis=None, row_axis="model")
+try:
+    fine(psi)
+    raise SystemExit("fine-mesh k-step lower_sharded did not raise")
+except ValueError as e:
+    assert "halo" in str(e), e
+# Same guard on make_sharded_hdiff: 8 rows / 8 shards = 1 local row < HALO=2.
+psi8 = jnp.asarray(rng.standard_normal((2, 8, 16)).astype(np.float32))
+try:
+    make_sharded_hdiff(mesh18, depth_axis=None, row_axis="model")(psi8)
+    raise SystemExit("fine-mesh make_sharded_hdiff did not raise")
+except ValueError as e:
+    assert "halo" in str(e), e
+# And on exchange_row_halos itself (the defence the callers rely on): a
+# 4-row shard cannot source a 6-row band from one neighbour.
+try:
+    jax.shard_map(
+        lambda b: exchange_row_halos(b, "model", 8, halo=6),
+        mesh=mesh18,
+        in_specs=(jax.sharding.PartitionSpec(None, "model", None),),
+        out_specs=jax.sharding.PartitionSpec(None, "model", None),
+        check_vma=False,
+    )(psi)
+    raise SystemExit("fine-mesh exchange_row_halos did not raise")
+except ValueError as e:
+    assert "ppermute" in str(e) or "halo" in str(e), e
+print("fine-mesh raise ok")
+
+# Acceptance: the paper grid (64 x 256 x 256) on the full 8-device mesh,
+# single-step and k=2 temporal-blocked.
 paper = jnp.asarray(rng.standard_normal((64, 256, 256)).astype(np.float32))
 mesh = make_mesh((4, 2), ("data", "model"))
 fn = lower_sharded(prog, mesh, depth_axis="data", row_axis="model", inner="reference")
@@ -75,5 +127,15 @@ np.testing.assert_allclose(
     np.asarray(fn(paper)), np.asarray(hdiff(paper, 0.025)), rtol=1e-6, atol=1e-6
 )
 print("paper-grid sharded ok")
+fn2 = lower_sharded(
+    repeat(prog, 2), mesh, depth_axis="data", row_axis="model", inner="reference"
+)
+np.testing.assert_allclose(
+    np.asarray(fn2(paper)),
+    np.asarray(hdiff(hdiff(paper, 0.025), 0.025)),
+    rtol=1e-6,
+    atol=1e-6,
+)
+print("paper-grid temporal k=2 ok")
 
 print("ALL_OK")

@@ -59,6 +59,30 @@ def test_halo_exchange_bytes_model():
     assert halo_exchange_bytes(1, 16, 8, row_shards=2, itemsize=2) == 2 * 1 * HALO * 8 * 2
 
 
+def test_halo_exchange_bytes_temporal_steps():
+    """One k-step exchange round moves a k-times-deeper band; bytes per
+    SIMULATED step are flat while exchange rounds (latency) divide by k."""
+    one = halo_exchange_bytes(64, 256, 256, row_shards=4)
+    for k in (2, 3, 4):
+        per_round = halo_exchange_bytes(64, 256, 256, row_shards=4, steps=k)
+        assert per_round == k * one
+        assert per_round / k == one
+    assert halo_exchange_bytes(64, 256, 256, row_shards=1, steps=4) == 0
+
+
+def test_exchange_row_halos_rejects_fine_mesh():
+    """rows/shard < halo used to silently deliver a short halo band (the
+    slice clamps); it must raise instead — the single-neighbour ppermute
+    cannot source a deeper band. Shape check is static: no mesh needed."""
+    block = jnp.zeros((2, 1, 8))  # 1 local row
+    with pytest.raises(ValueError, match="rows/shard 1 < halo"):
+        exchange_row_halos(block, "row", 256)
+    with pytest.raises(ValueError, match="halo"):
+        exchange_row_halos(jnp.zeros((2, 3, 8)), "row", 4, halo=4)
+    # boundary case rows/shard == halo is legal (shape check only here;
+    # the collective itself needs a real mesh, covered in tests/multidev).
+
+
 # --- halo padding semantics on the 1-device mesh ------------------------------
 
 

@@ -32,3 +32,7 @@ def test_ir_sharded_multidevice():
     out = _run_subprocess("_ir_check.py")
     assert "ALL_OK" in out
     assert "paper-grid sharded ok" in out
+    for k in (1, 2, 3):
+        assert f"temporal k={k} ok" in out
+    assert "fine-mesh raise ok" in out
+    assert "paper-grid temporal k=2 ok" in out

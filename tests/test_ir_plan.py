@@ -27,6 +27,33 @@ def test_budget_resolution_order(monkeypatch):
         vmem_tile_budget()
 
 
+def test_budget_rejects_non_positive(monkeypatch):
+    """REPRO_VMEM_BUDGET=0 (or negative) used to degrade every kernel to
+    1-row tiles; it is a configuration error and must raise."""
+    monkeypatch.delenv(VMEM_BUDGET_ENV, raising=False)
+    with pytest.raises(ValueError, match="positive"):
+        vmem_tile_budget(0)
+    with pytest.raises(ValueError, match="positive"):
+        vmem_tile_budget(-4096)
+    monkeypatch.setenv(VMEM_BUDGET_ENV, "0")
+    with pytest.raises(ValueError, match=VMEM_BUDGET_ENV):
+        vmem_tile_budget()
+    monkeypatch.setenv(VMEM_BUDGET_ENV, "-1")
+    with pytest.raises(ValueError, match=VMEM_BUDGET_ENV):
+        vmem_tile_budget()
+    with pytest.raises(ValueError):
+        pick_block_rows(256, 256, budget_bytes=0)
+
+
+def test_pick_block_rows_rejects_unsatisfiable_floor():
+    """min_rows above every divisor of rows (rows itself) must raise, not
+    silently fall back to an undersized tile."""
+    with pytest.raises(ValueError, match="min_rows"):
+        pick_block_rows(4, 128, min_rows=8)
+    # rows == min_rows stays legal
+    assert pick_block_rows(8, 128, min_rows=8) == 8
+
+
 def test_pick_block_rows_budget_and_floor():
     # 256x256 f32 tile is 256 KiB: fits the 4 MiB default whole.
     assert pick_block_rows(256, 256) == 256

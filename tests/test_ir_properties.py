@@ -18,7 +18,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.ir import StencilProgram, affine, lower_reference  # noqa: E402
+from repro.ir import StencilProgram, affine, lower_reference, repeat  # noqa: E402
 
 
 def _star_taps(radius, weight=1.0):
@@ -57,6 +57,18 @@ def test_composed_radius_is_sum_deep(radii):
     for r in radii:
         bound *= len(_star_taps(r))
     assert 1 <= len(fp["x"]) <= bound
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 3), st.integers(1, 5))
+def test_repeat_radius_scales_linearly(r, k):
+    """Temporal blocking invariant: repeat(p, k).radius == k * p.radius
+    (footprints compose by Minkowski sum, so radii add per sweep)."""
+    prog = _chain([r])
+    pk = repeat(prog, k)
+    assert pk.radius == k * prog.radius
+    assert pk.steps == k
+    assert pk.spec().radius == k * r
 
 
 @settings(max_examples=25, deadline=None)

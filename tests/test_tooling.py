@@ -1,0 +1,52 @@
+"""Unit tests for scripts/check_no_dep_skips.py (the CI skip gate)."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SCRIPT = REPO / "scripts" / "check_no_dep_skips.py"
+
+CLEAN = """<?xml version="1.0" encoding="utf-8"?>
+<testsuites><testsuite name="pytest" tests="2" skipped="1">
+  <testcase classname="tests.test_a" name="test_ok" time="0.01"/>
+  <testcase classname="tests.test_a" name="test_platform" time="0.0">
+    <skipped type="pytest.skip" message="needs a TPU backend"/>
+  </testcase>
+</testsuite></testsuites>
+"""
+
+DEP_SKIP = """<?xml version="1.0" encoding="utf-8"?>
+<testsuites><testsuite name="pytest" tests="1" skipped="1">
+  <testcase classname="tests.test_properties" name="test_prop" time="0.0">
+    <skipped type="pytest.skip"
+             message="could not import 'hypothesis': No module named 'hypothesis'"/>
+  </testcase>
+</testsuite></testsuites>
+"""
+
+
+def _run(xml: str, tmp_path):
+    report = tmp_path / "report.xml"
+    report.write_text(xml)
+    return subprocess.run(
+        [sys.executable, str(SCRIPT), str(report)], capture_output=True, text=True
+    )
+
+
+def test_passes_on_non_dependency_skips(tmp_path):
+    proc = _run(CLEAN, tmp_path)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_fails_on_missing_dependency_skip(tmp_path):
+    proc = _run(DEP_SKIP, tmp_path)
+    assert proc.returncode == 1
+    assert "hypothesis" in proc.stdout
+
+
+def test_usage_error_without_report():
+    proc = subprocess.run(
+        [sys.executable, str(SCRIPT)], capture_output=True, text=True
+    )
+    assert proc.returncode == 2
