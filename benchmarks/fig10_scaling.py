@@ -69,6 +69,37 @@ per_chip_model2 = 2 * (depth // dshards) * k * HALO * cols * 4
 print(f"RESULT2 measured={{measured2:.0f}} per_chip_model={{per_chip_model2:.0f}} "
       f"mesh_total_model={{halo_exchange_bytes(depth, rows, cols, rshards, steps=k):.0f}} "
       f"permutes={{coll2['counts'].get('collective-permute', 0)}}")
+
+# 2-D rows x cols decomposition (ISSUE 4): row bands + col bands + diagonal
+# corners, measured per-chip against the 2-axis model — and overlap=True
+# must BIT-match overlap=False at identical wire bytes.
+from repro.dist import halo_exchange_bytes_per_shard
+from repro.ir import plan_partition
+prog = hdiff_program()
+plan = plan_partition(prog, depth, rows, cols, 8)
+R, C = plan.mesh_shape
+fn2d = lower_sharded(prog, mesh_shape=(R, C), inner="reference")
+got2d = np.asarray(fn2d(psi))
+np.testing.assert_allclose(got2d, np.asarray(hdiff(psi, 0.025)), rtol=1e-6, atol=1e-6)
+coll2d = parse_collective_bytes(jax.jit(fn2d).lower(psi).compile().as_text())
+measured2d = coll2d["bytes"].get("collective-permute", 0.0)
+model2d = halo_exchange_bytes_per_shard(
+    depth, rows // R, cols // C, halo=HALO, row_sharded=R > 1, col_sharded=C > 1)
+row_m = 2 * depth * HALO * (cols // C) * 4 if R > 1 else 0
+col_m = 2 * depth * (rows // R) * HALO * 4 if C > 1 else 0
+corner_m = 4 * depth * HALO * HALO * 4 if (R > 1 and C > 1) else 0
+assert row_m + col_m + corner_m == model2d, (row_m, col_m, corner_m, model2d)
+fo2d = lower_sharded(prog, mesh_shape=(R, C), inner="reference", overlap=True)
+ov = np.asarray(fo2d(psi))
+bit_match = bool((ov == got2d).all())
+collov = parse_collective_bytes(jax.jit(fo2d).lower(psi).compile().as_text())
+measured_ov = collov["bytes"].get("collective-permute", 0.0)
+assert measured_ov == measured2d, (measured_ov, measured2d)  # overlap moves the same bytes
+print(f"RESULT2D mesh={{R}}x{{C}} measured={{measured2d:.0f}} per_chip_model={{model2d:.0f}} "
+      f"row_model={{row_m}} col_model={{col_m}} corner_model={{corner_m}} "
+      f"mesh_total_model={{halo_exchange_bytes(depth, rows, cols, R, col_shards=C):.0f}} "
+      f"permutes={{coll2d['counts'].get('collective-permute', 0)}} "
+      f"overlap_bitmatch={{bit_match}} overlap_measured={{measured_ov:.0f}}")
 """
 
 
@@ -101,6 +132,31 @@ def run(fast: bool = False) -> None:
             f"kind={plan.kind} rows/shard={ROWS//plan.row_shards} "
             f"ici_s={plan.ici_s:.2e} (halo exchange appears)",
         )
+
+    # 2-D rows x cols factorization: wire bytes per exchange round for every
+    # factorization of 8 devices, and the planner's pick (the balanced split
+    # minimizes boundary surface — the paper's workload-balance point).
+    from repro.dist import halo_exchange_bytes
+    from repro.ir import hdiff_program, plan_partition as plan_2d
+
+    prog = hdiff_program()
+    for r_sh, c_sh in [(8, 1), (4, 2), (2, 4), (1, 8)]:
+        wire = halo_exchange_bytes(
+            DEPTH, ROWS, COLS, r_sh, halo=prog.radius, col_shards=c_sh
+        )
+        emit(
+            f"fig10/wire_2d_{r_sh}x{c_sh}",
+            wire,
+            "mesh-total halo bytes/round, 2-axis model (bands + corners)",
+        )
+    pick = plan_2d(prog, DEPTH, ROWS, COLS, 8)
+    emit(
+        "fig10/wire_2d_planned",
+        pick.wire_bytes,
+        f"plan_partition pick {pick.row_shards}x{pick.col_shards} "
+        f"(<= 1-D row baseline "
+        f"{halo_exchange_bytes(DEPTH, ROWS, COLS, 8, halo=prog.radius)})",
+    )
 
     # REAL 8-fake-device run: correctness + measured halo bytes vs model.
     depth = 8 if fast else DEPTH
@@ -146,3 +202,28 @@ def real_halo_check(depth: int, rows: int, cols: int) -> None:
         f"permutes={fields2['permutes']} (exchange ROUNDS per simulated step "
         f"halve; repeat(hdiff,2)==hdiff∘hdiff verified)",
     )
+    line3 = next(l for l in proc.stdout.splitlines() if l.startswith("RESULT2D "))
+    fields3 = dict(kv.split("=") for kv in line3.split()[1:])
+    measured3, model3 = float(fields3["measured"]), float(fields3["per_chip_model"])
+    emit(
+        "fig10/real_8dev_2d_halo_bytes",
+        measured3,
+        f"per-chip permute bytes on the planner-chosen {fields3['mesh']} "
+        f"rows x cols mesh; model={model3:.0f} "
+        f"ratio={measured3 / model3 if model3 else float('nan'):.3f} "
+        f"(row_bands={fields3['row_model']} col_bands={fields3['col_model']} "
+        f"corners={fields3['corner_model']}) "
+        f"mesh_total_model={fields3['mesh_total_model']} "
+        f"permutes={fields3['permutes']} (2-D decomposition verified vs "
+        f"single-device)",
+    )
+    emit(
+        "fig10/real_8dev_2d_overlap",
+        1.0 if fields3["overlap_bitmatch"] == "True" else 0.0,
+        f"overlap=True bit-matches overlap=False on the {fields3['mesh']} mesh "
+        f"(interior compute issued concurrently with the edge exchange); "
+        f"overlap wire bytes {fields3['overlap_measured']} == "
+        f"{measured3:.0f} non-overlap",
+    )
+    if fields3["overlap_bitmatch"] != "True":
+        raise RuntimeError("overlap=True did not bit-match overlap=False")

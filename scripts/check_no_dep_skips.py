@@ -1,5 +1,7 @@
 #!/usr/bin/env python
-"""CI gate: fail when any test was SKIPPED for a missing dev dependency.
+"""CI gate: fail when any test was SKIPPED for a missing dev dependency —
+and, with ``--fail-on-mesh-skips``, when any multi-device mesh shape was
+skipped.
 
 ``pytest.importorskip("hypothesis")`` makes property-test modules vanish
 silently when the dev extras aren't installed — a green run that quietly
@@ -7,8 +9,14 @@ dropped coverage. CI installs ``.[dev]``, so any import-skip there means the
 extras list (pyproject ``[project.optional-dependencies].dev``) and the
 tests have drifted apart; this script turns that into a hard failure.
 
+The conformance matrix (tests/test_conformance_matrix.py) skips a mesh cell
+with a "mesh RxC unavailable" message when the fake-device subprocess cannot
+back it. In the tier-1 job that is legitimate (it runs 1-device); in the
+multidev-2d job — whose whole point is those meshes — it would be silent
+coverage loss, so that job passes ``--fail-on-mesh-skips``.
+
 Usage: run pytest with ``--junitxml=report.xml``, then
-``python scripts/check_no_dep_skips.py report.xml``.
+``python scripts/check_no_dep_skips.py report.xml [--fail-on-mesh-skips]``.
 """
 
 from __future__ import annotations
@@ -18,34 +26,71 @@ import xml.etree.ElementTree as ET
 
 # Messages produced by pytest.importorskip / ImportError-driven skips.
 DEP_SKIP_PATTERNS = ("could not import", "no module named")
+# Messages produced when a conformance mesh shape cannot be provided
+# (test_conformance_mesh skips with "mesh RxC unavailable: ..."). ALL
+# patterns must match, so an unrelated skip that merely mentions a mesh
+# does not trip the gate.
+MESH_SKIP_PATTERNS = ("mesh", "unavailable")
 
 
-def find_dependency_skips(junit_xml_path: str) -> list[str]:
+def _iter_skips(junit_xml_path: str):
     tree = ET.parse(junit_xml_path)
-    bad = []
     for case in tree.iter("testcase"):
         for skip in case.iter("skipped"):
             msg = f"{skip.get('message') or ''} {skip.text or ''}".lower()
-            if any(pat in msg for pat in DEP_SKIP_PATTERNS):
-                bad.append(
-                    f"{case.get('classname') or case.get('file')}::"
-                    f"{case.get('name')}: {skip.get('message')}"
-                )
-    return bad
+            yield case, skip, msg
+
+
+def find_dependency_skips(junit_xml_path: str) -> list[str]:
+    return [
+        f"{case.get('classname') or case.get('file')}::"
+        f"{case.get('name')}: {skip.get('message')}"
+        for case, skip, msg in _iter_skips(junit_xml_path)
+        if any(pat in msg for pat in DEP_SKIP_PATTERNS)
+    ]
+
+
+def find_mesh_skips(junit_xml_path: str) -> list[str]:
+    return [
+        f"{case.get('classname') or case.get('file')}::"
+        f"{case.get('name')}: {skip.get('message')}"
+        for case, skip, msg in _iter_skips(junit_xml_path)
+        if all(pat in msg for pat in MESH_SKIP_PATTERNS)
+    ]
 
 
 def main(argv: list[str]) -> int:
-    if len(argv) != 2:
-        print(f"usage: {argv[0]} <junit-report.xml>", file=sys.stderr)
+    args = list(argv[1:])
+    fail_on_mesh = "--fail-on-mesh-skips" in args
+    if fail_on_mesh:
+        args.remove("--fail-on-mesh-skips")
+    if len(args) != 1:
+        print(
+            f"usage: {argv[0]} <junit-report.xml> [--fail-on-mesh-skips]",
+            file=sys.stderr,
+        )
         return 2
-    bad = find_dependency_skips(argv[1])
+    report = args[0]
+    rc = 0
+    bad = find_dependency_skips(report)
     if bad:
         print("tests skipped for missing dev dependencies (install '.[dev]'):")
         for line in bad:
             print(f"  - {line}")
-        return 1
-    print("no dependency-driven skips found")
-    return 0
+        rc = 1
+    if fail_on_mesh:
+        mesh_bad = find_mesh_skips(report)
+        if mesh_bad:
+            print("mesh shapes skipped (multi-device coverage silently dropped):")
+            for line in mesh_bad:
+                print(f"  - {line}")
+            rc = 1
+    if rc == 0:
+        print(
+            "no dependency-driven skips found"
+            + (" (mesh skips also checked)" if fail_on_mesh else "")
+        )
+    return rc
 
 
 if __name__ == "__main__":

@@ -7,14 +7,19 @@ Three pieces (see ROADMAP / §3.4 of the paper):
     mesh, and in-graph ``constrain`` annotations.
   * :mod:`repro.dist.halo` — ``make_sharded_hdiff``: shard_map domain
     decomposition of the COSMO hdiff (depth-parallel planes + radius-2
-    row halo exchange), matching the single-device kernels exactly.
+    row halo exchange), matching the single-device kernels exactly; plus
+    ``exchange_halos_2d``, the rows x cols band + diagonal-corner exchange
+    behind ``repro.ir.lower_sharded``'s 2-D decomposition, and the 2-axis
+    ``halo_exchange_bytes`` wire model.
   * :mod:`repro.dist.reduce` — ``reduce_gradients``: cross-shard
     all-reduce with a bf16-compressed wire path.
 """
 
 from repro.dist.halo import (
+    exchange_halos_2d,
     exchange_row_halos,
     halo_exchange_bytes,
+    halo_exchange_bytes_per_shard,
     make_sharded_hdiff,
     owned_rows_mask,
 )
@@ -31,8 +36,10 @@ __all__ = [
     "constrain",
     "compress_bf16",
     "decompress_bf16",
+    "exchange_halos_2d",
     "exchange_row_halos",
     "halo_exchange_bytes",
+    "halo_exchange_bytes_per_shard",
     "make_sharded_hdiff",
     "owned_rows_mask",
     "reduce_gradients",

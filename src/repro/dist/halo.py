@@ -16,8 +16,13 @@ Global-boundary correctness uses ABSOLUTE row indexing: a shard knows its
 row offset from ``axis_index``, so the radius-2 passthrough ring of the
 global grid is preserved exactly, even when it falls entirely inside the
 first/last shard — the zero halos ppermute delivers at the grid edges are
-never read into an owned output row. Columns are not decomposed (they are
-the contiguous/vectorised dim), so the column ring is handled locally.
+never read into an owned output row.
+
+Columns decompose too (:func:`exchange_halos_2d`): the 2-D rows x cols
+exchange adds a column band ppermute pair and four single-hop *diagonal*
+corner ppermutes over the flattened ``(row_axis, col_axis)`` mesh pair —
+the paper's 2-D AIE-array neighbour pattern. An axis with a single shard
+skips its permutes entirely (zero pad, zero wire bytes).
 
 Per-step wire traffic matches :func:`halo_exchange_bytes`, the analytical
 model benchmarked by ``benchmarks/fig10_scaling.py``.
@@ -35,30 +40,143 @@ from repro.core.hdiff import HALO, _hdiff_interior, hdiff, hdiff_simple
 from repro.dist.sharding import _mesh_sizes
 
 
+def _check_band(extent: int, halo: int, what: str) -> None:
+    """The single-neighbour ppermute sources each halo band from the
+    IMMEDIATE neighbour only: a shard owning fewer than ``halo`` rows/cols
+    cannot provide a full band — the slices would silently shorten and
+    interiors would compute from the wrong data, so raise instead."""
+    if extent < halo:
+        raise ValueError(
+            f"{what}/shard {extent} < halo {halo}: the single-neighbour "
+            f"ppermute exchange cannot deliver a depth-{halo} halo band; "
+            f"use fewer {what} shards, shard the other grid axis instead, "
+            f"or use a smaller halo / fewer fused steps"
+        )
+
+
+def _band_halos(block: jax.Array, axis_name, n_shards: int, halo: int, dim: int):
+    """(lo_halo, hi_halo) bands of width ``halo`` along ``dim`` (-2 rows or
+    -1 cols), fetched from the two axis neighbours. With a single shard the
+    permutes are SKIPPED entirely — both halos are explicit ``halo``-wide
+    zero pads (the axis has no neighbours to source from, so even an extent
+    thinner than ``halo`` is fine), matching the zeros ``ppermute`` delivers
+    at uncovered grid edges but costing zero collective bytes
+    (regression-tested via ``parse_collective_bytes``)."""
+    if n_shards == 1:
+        shape = list(block.shape)
+        shape[dim] = halo
+        z = jnp.zeros(tuple(shape), block.dtype)
+        return z, z
+    _check_band(block.shape[dim], halo, "rows" if dim == -2 else "cols")
+    lo_src = block[..., -halo:, :] if dim == -2 else block[..., :, -halo:]
+    hi_src = block[..., :halo, :] if dim == -2 else block[..., :, :halo]
+    fwd = [(j, j + 1) for j in range(n_shards - 1)]  # my hi band -> next's lo halo
+    bwd = [(j + 1, j) for j in range(n_shards - 1)]  # my lo band -> prev's hi halo
+    return (
+        jax.lax.ppermute(lo_src, axis_name, fwd),
+        jax.lax.ppermute(hi_src, axis_name, bwd),
+    )
+
+
 def exchange_row_halos(block: jax.Array, row_axis: str, n_shards: int, halo: int = HALO):
     """Pads ``block`` (..., R_loc, C) with ``halo`` rows from each row
     neighbour via two ``ppermute`` pushes. Edge shards receive zeros on
     their outward side (ppermute's fill for uncovered targets); callers
     must not emit output rows computed from them (see absolute-row mask).
-    Returns (..., R_loc + 2*halo, C).
+    With a single row shard the permutes are skipped (pure zero padding,
+    zero collective bytes). Returns (..., R_loc + 2*halo, C).
 
-    Requires ``R_loc >= halo``: each push sources from the IMMEDIATE row
-    neighbour only, so a shard owning fewer than ``halo`` rows cannot
-    provide a full halo band — on such a fine mesh the slices silently
-    shorten and interiors compute from the wrong rows, so this raises
-    instead (regression-tested in tests/multidev/_ir_check.py)."""
-    r_loc = block.shape[-2]
-    if r_loc < halo:
-        raise ValueError(
-            f"rows/shard {r_loc} < halo {halo}: the single-neighbour "
-            f"ppermute exchange cannot deliver a depth-{halo} halo band; "
-            f"use fewer row shards (or a smaller halo / fewer fused steps)"
-        )
-    down = [(j, j + 1) for j in range(n_shards - 1)]   # my bottom rows -> next shard's top halo
-    up = [(j + 1, j) for j in range(n_shards - 1)]     # my top rows -> prev shard's bottom halo
-    top_halo = jax.lax.ppermute(block[..., -halo:, :], row_axis, down)
-    bot_halo = jax.lax.ppermute(block[..., :halo, :], row_axis, up)
+    Sharded axes require ``R_loc >= halo`` (see :func:`_check_band`;
+    regression-tested in tests/multidev/_ir_check.py)."""
+    top_halo, bot_halo = _band_halos(block, row_axis, n_shards, halo, dim=-2)
     return jnp.concatenate([top_halo, block, bot_halo], axis=-2)
+
+
+def exchange_halos_2d(
+    block: jax.Array,
+    row_axis,
+    col_axis,
+    n_row: int,
+    n_col: int,
+    halo: int = HALO,
+    *,
+    mesh_axis_names=None,
+):
+    """2-D halo exchange: pads ``block`` (..., R_loc, C_loc) with ``halo``
+    rows, cols, AND corners from its 8 mesh neighbours. Returns
+    (..., R_loc + 2*halo, C_loc + 2*halo).
+
+    Three permute families, each skipped when its axis has 1 shard (a
+    1-shard axis gets explicit zero pads and may even be thinner than the
+    halo — only SHARDED axes must satisfy the extent >= halo band-sourcing
+    floor, matching ``plan_partition``'s feasibility rule):
+
+      * row bands  — 2 ppermutes along ``row_axis`` (halo x C_loc each);
+      * col bands  — 2 ppermutes along ``col_axis`` (R_loc x halo each);
+      * corners    — 4 ppermutes of halo x halo patches routed DIAGONALLY in
+        one hop over the flattened (row_axis, col_axis) axis pair
+        (source/target pairs enumerate internal mesh vertices only), so the
+        wire model stays symmetric under (rows, cols) transpose and grid-edge
+        shards send nothing. ``jax.lax.ppermute`` numbers the flattened pair
+        indices in the MESH's axis declaration order (not the tuple order
+        passed), so ``mesh_axis_names`` — the full ordered axis-name tuple of
+        the enclosing mesh — is REQUIRED whenever both axes are sharded; a
+        wrong assumption here silently corrupts the corner points.
+
+    Edge shards receive zeros on outward sides (ppermute's fill), exactly as
+    in the 1-D exchange; the absolute row/col ring passthrough guarantees
+    they are never read into an owned output point.
+    """
+    top, bot = _band_halos(block, row_axis, n_row, halo, dim=-2)
+    left, right = _band_halos(block, col_axis, n_col, halo, dim=-1)
+
+    h = halo
+    if n_row > 1 and n_col > 1:
+        if mesh_axis_names is None:
+            raise ValueError(
+                "exchange_halos_2d needs mesh_axis_names (the mesh's ordered "
+                "axis-name tuple) when both grid axes are sharded: the "
+                "diagonal corner ppermute numbers shards in mesh declaration "
+                "order, and guessing it wrong corrupts corners silently"
+            )
+        order = [a for a in mesh_axis_names if a in (row_axis, col_axis)]
+        if order != [row_axis, col_axis] and order != [col_axis, row_axis]:
+            raise ValueError(
+                f"mesh axes {tuple(mesh_axis_names)} do not contain exactly "
+                f"{row_axis!r} and {col_axis!r}"
+            )
+        row_major = order[0] == row_axis
+        # Flatten (row i, col j) the way ppermute numbers the axis pair:
+        # leading declared axis varies slowest.
+        axes = (row_axis, col_axis) if row_major else (col_axis, row_axis)
+        if row_major:
+            flat = lambda i, j: i * n_col + j  # noqa: E731
+        else:
+            flat = lambda i, j: j * n_row + i  # noqa: E731
+
+        def corner(src, pairs):
+            return jax.lax.ppermute(src, axes, pairs)
+
+        rng_i, rng_j = range(n_row - 1), range(n_col - 1)
+        # My top-left halo corner = (i-1, j-1)'s bottom-right block corner, etc.
+        tl = corner(block[..., -h:, -h:],
+                    [(flat(i, j), flat(i + 1, j + 1)) for i in rng_i for j in rng_j])
+        tr = corner(block[..., -h:, :h],
+                    [(flat(i, j + 1), flat(i + 1, j)) for i in rng_i for j in rng_j])
+        bl = corner(block[..., :h, -h:],
+                    [(flat(i + 1, j), flat(i, j + 1)) for i in rng_i for j in rng_j])
+        br = corner(block[..., :h, :h],
+                    [(flat(i + 1, j + 1), flat(i, j)) for i in rng_i for j in rng_j])
+    else:
+        # A 1-shard axis has no diagonal neighbours: corners are grid-edge
+        # pads on at least one side, i.e. zeros — no wire bytes.
+        zc = jnp.zeros(block.shape[:-2] + (h, h), block.dtype)
+        tl = tr = bl = br = zc
+
+    left_col = jnp.concatenate([tl, left, bl], axis=-2)
+    right_col = jnp.concatenate([tr, right, br], axis=-2)
+    mid = jnp.concatenate([top, block, bot], axis=-2)
+    return jnp.concatenate([left_col, mid, right_col], axis=-1)
 
 
 def owned_rows_mask(shard_index, rows_local: int, rows_global: int, halo: int = HALO):
@@ -76,20 +194,68 @@ def halo_exchange_bytes(
     itemsize: int = 4,
     halo: int = HALO,
     steps: int = 1,
+    col_shards: int = 1,
 ) -> int:
     """Total bytes on the wire for ONE halo-exchange round, summed over the
-    whole mesh: every internal shard boundary moves ``halo * steps`` rows
-    in each direction. Independent of depth sharding (depth planes are
-    disjoint; the per-device blocks are smaller but more numerous).
+    whole mesh. Independent of depth sharding (depth planes are disjoint;
+    the per-device blocks are smaller but more numerous).
+
+    2-axis model (matches :func:`exchange_halos_2d` exactly; ``h`` is the
+    exchanged band depth ``halo * steps``):
+
+      * row bands:  every internal row boundary moves ``h`` full-width rows
+        each direction — ``2 (R-1) * depth * h * cols`` elements (the
+        per-strip width is ``cols / C`` but there are ``C`` strips);
+      * col bands:  symmetrically ``2 (C-1) * depth * h * rows``;
+      * corners:    4 diagonal ``h x h`` patches across each of the
+        ``(R-1)(C-1)`` internal mesh vertices — ``4 (R-1)(C-1) * depth *
+        h^2``. Quadratic in ``h``: deep temporal-blocked halos pay a
+        growing (but tiny) corner tax.
+
+    The model is symmetric under (rows, R) <-> (cols, C) transpose, and
+    ``col_shards=1`` reduces exactly to the 1-D row formula.
 
     ``steps`` models temporal blocking (``repeat(p, steps)`` lowered via
-    ``lower_sharded``): the exchanged band deepens to ``steps * halo`` rows
-    but one round serves ``steps`` fused sweeps, so exchange ROUNDS — the
-    latency term — per simulated step drop ``steps``-fold while bytes per
-    simulated step stay constant. Divide by ``steps`` for per-step bytes."""
-    if row_shards <= 1:
-        return 0
-    return 2 * (row_shards - 1) * depth * halo * steps * cols * itemsize
+    ``lower_sharded``): the exchanged band deepens to ``steps * halo`` but
+    one round serves ``steps`` fused sweeps, so exchange ROUNDS — the
+    latency term — per simulated step drop ``steps``-fold. Divide by
+    ``steps`` for per-step bytes."""
+    h = halo * steps
+    total = 0
+    if row_shards > 1:
+        total += 2 * (row_shards - 1) * depth * h * cols
+    if col_shards > 1:
+        total += 2 * (col_shards - 1) * depth * h * rows
+    if row_shards > 1 and col_shards > 1:
+        total += 4 * (row_shards - 1) * (col_shards - 1) * depth * h * h
+    return total * itemsize
+
+
+def halo_exchange_bytes_per_shard(
+    local_depth: int,
+    local_rows: int,
+    local_cols: int,
+    itemsize: int = 4,
+    halo: int = HALO,
+    steps: int = 1,
+    row_sharded: bool = True,
+    col_sharded: bool = False,
+) -> int:
+    """Per-chip collective-permute RESULT bytes for one exchange round — what
+    ``parse_collective_bytes`` measures on the compiled SPMD program (every
+    chip executes the same permutes; an interior chip receives them all).
+
+    Row bands 2 x (D_loc, h, C_loc), col bands 2 x (D_loc, R_loc, h), and
+    4 diagonal corners (D_loc, h, h) when both axes are sharded."""
+    h = halo * steps
+    total = 0
+    if row_sharded:
+        total += 2 * local_depth * h * local_cols
+    if col_sharded:
+        total += 2 * local_depth * local_rows * h
+    if row_sharded and col_sharded:
+        total += 4 * local_depth * h * h
+    return total * itemsize
 
 
 def make_sharded_hdiff(

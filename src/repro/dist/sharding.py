@@ -18,6 +18,12 @@ Rules (``mode`` is "train" or "decode"):
                pod, where ICI is fastest).
   kv_seq    -> ``"model"`` in decode (the cache, not the heads, is the big
                tensor there); replicated in train.
+  depth, rows, cols
+            -> the SAME-named mesh axis, when present (the stencil grid
+               dims of the 2-D domain decomposition: ``lower_sharded``'s
+               ``mesh_shape=(R, C)`` meshes name their axes "rows"/"cols",
+               so ``spec_for(("depth", "rows", "cols"), ...)`` shards a
+               (D, R, C) field the way the halo exchange expects).
   seq, embed, head_dim, None -> replicated.
 
 Two invariants, enforced uniformly:
@@ -50,6 +56,11 @@ _MODEL_LOGICAL = ("heads", "kv_heads", "mlp", "experts", "vocab", "blocks")
 
 # Logical axes that are always replicated.
 _REPLICATED = ("seq", "embed", "head_dim")
+
+# Stencil-grid logical axes: shard over the mesh axis of the SAME name
+# (2-D domain decomposition meshes are built with axes ("rows", "cols"),
+# optionally ("depth", ...) for plane parallelism).
+_GRID_LOGICAL = ("depth", "rows", "cols")
 
 
 # --- ambient mesh -------------------------------------------------------------
@@ -160,6 +171,13 @@ def _assign(name, dim: int, sizes: dict[str, int], used: set[str], mode: str):
         if ax:
             used.add(ax)
         return ax
+    if name in _GRID_LOGICAL:
+        # Divisibility-aware like every other rule: an indivisible grid dim
+        # replicates rather than pads.
+        if name in sizes and name not in used and dim % sizes[name] == 0:
+            used.add(name)
+            return name
+        return None
     # Unknown logical name: replicate (permissive — new layers can name
     # axes before rules exist for them).
     return None

@@ -51,7 +51,9 @@ from repro.ir.evaluate import (
 from repro.ir.plan import (
     DEFAULT_VMEM_TILE_BUDGET,
     VMEM_BUDGET_ENV,
+    Partition2D,
     pick_block_rows,
+    plan_partition,
     vmem_tile_budget,
 )
 from repro.ir.lower_reference import lower_reference

@@ -95,51 +95,87 @@ def ring_crop(program: StencilProgram, interior: Array) -> Array:
 
 
 def slab_step(
-    program: StencilProgram, slab: Array, row_ids: Array, rows_total
+    program: StencilProgram,
+    slab: Array,
+    row_ids: Array,
+    rows_total,
+    col_ids: Array | None = None,
+    cols_total=None,
 ) -> Array:
-    """One full-width sweep of a (single-sweep) program over a row slab —
-    the per-step body of every temporal-blocked lowering.
+    """One sweep of a (single-sweep) program over a slab — the per-step body
+    of every temporal-blocked lowering.
 
-    ``slab`` is ``(..., n, C)`` real data; ``row_ids`` gives the GLOBAL row
+    ``slab`` is ``(..., n, m)`` real data; ``row_ids`` gives the GLOBAL row
     index of each of the ``n - 2r`` rows produced, shaped ``(n - 2r,)`` or
     ``(n - 2r, 1)``. Rows whose global index falls in the radius-``r``
     boundary ring keep the slab's current value (the per-sweep passthrough
-    that makes k fused sweeps bit-match k full-shape applications), as does
-    the radius-``r`` column ring (columns are never decomposed, so their
-    ring is global). Returns ``(..., n - 2r, C)`` — the slab shrinks by
-    ``r`` rows per side.
+    that makes k fused sweeps bit-match k full-shape applications).
+
+    Columns come in two modes, mirroring how the caller decomposed them:
+
+      * ``col_ids is None`` — full-width mode: the slab carries the whole
+        global column extent, so the radius-``r`` column ring is local
+        (first/last ``r`` columns kept in place). Returns
+        ``(..., n - 2r, m)`` — only rows shrink.
+      * ``col_ids`` given (``(m - 2r,)`` or ``(1, m - 2r)``, with
+        ``cols_total``) — column-slab mode for 2-D domain decomposition:
+        the slab carries a column halo too, the slab shrinks by ``r`` in
+        BOTH dims, and the global column ring is applied by absolute column
+        index exactly like rows. Returns ``(..., n - 2r, m - 2r)``.
     """
     r = program.radius
     vals = ring_crop(program, interior_eval(program, {program.inputs[0]: slab}))
     if r == 0:
         return vals.astype(slab.dtype)
-    cols = slab.shape[-1]
-    out = slab[..., r:-r, :]
-    out = out.at[..., :, r : cols - r].set(vals.astype(slab.dtype))
-    keep = (row_ids < r) | (row_ids >= rows_total - r)
-    if keep.ndim == 1:
-        keep = keep[:, None]
-    return jnp.where(keep, slab[..., r:-r, :], out)
+    keep_r = (row_ids < r) | (row_ids >= rows_total - r)
+    if keep_r.ndim == 1:
+        keep_r = keep_r[:, None]
+    if col_ids is None:
+        cols = slab.shape[-1]
+        out = slab[..., r:-r, :]
+        out = out.at[..., :, r : cols - r].set(vals.astype(slab.dtype))
+        return jnp.where(keep_r, slab[..., r:-r, :], out)
+    keep_c = (col_ids < r) | (col_ids >= cols_total - r)
+    if keep_c.ndim == 1:
+        keep_c = keep_c[None, :]
+    cur = slab[..., r:-r, r:-r]
+    return jnp.where(keep_r | keep_c, cur, vals.astype(slab.dtype))
 
 
 def slab_sweep(
-    program: StencilProgram, slab: Array, row_offset, rows_total
+    program: StencilProgram,
+    slab: Array,
+    row_offset,
+    rows_total,
+    col_offset=None,
+    cols_total=None,
 ) -> Array:
     """Runs ``program``'s whole chain over ``slab`` via :func:`slab_step`.
 
     ``row_offset`` is the global row index of ``slab``'s first row (may be a
     traced scalar, e.g. derived from ``axis_index`` inside a shard). The
     slab must carry the full chain halo: output has ``2 * program.radius``
-    fewer rows than the input.
+    fewer rows than the input. With ``col_offset`` / ``cols_total`` given
+    the slab is column-decomposed too (2-D domain decomposition): columns
+    shrink and ring-pass-through by ABSOLUTE index exactly like rows.
     """
-    base = row_offset
+    base_r = row_offset
+    base_c = col_offset
     for prog in program.chain:
         r = prog.radius
         n = slab.shape[-2]
         # 2-D iota: 1-D iota is unsupported by the TPU Mosaic lowering.
-        ids = base + r + jax.lax.broadcasted_iota(jnp.int32, (n - 2 * r, 1), 0)
-        slab = slab_step(prog, slab, ids, rows_total)
-        base = base + r
+        ids = base_r + r + jax.lax.broadcasted_iota(jnp.int32, (n - 2 * r, 1), 0)
+        if col_offset is None:
+            slab = slab_step(prog, slab, ids, rows_total)
+        else:
+            m = slab.shape[-1]
+            cids = base_c + r + jax.lax.broadcasted_iota(
+                jnp.int32, (1, m - 2 * r), 1
+            )
+            slab = slab_step(prog, slab, ids, rows_total, cids, cols_total)
+            base_c = base_c + r
+        base_r = base_r + r
     return slab
 
 

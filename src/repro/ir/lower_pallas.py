@@ -17,9 +17,12 @@ kernel bit-matches k full-shape applications. Compulsory HBM traffic per
 simulated step drops ~k-fold — the generalisation of the hard-coded
 two-step trick that ``kernels/hdiff/multistep.py`` now wraps.
 
-The absolute row indexing takes a traced ``(row_offset, rows_global)`` pair
-through SMEM, so the same kernel runs standalone (offset 0) and inside a
-``shard_map`` shard (offset from ``axis_index``; see ``lower_sharded``).
+The absolute indexing takes a traced ``(row_offset, rows_global,
+col_offset, cols_global)`` tuple through SMEM, so the same kernel runs
+standalone (offsets 0) and inside a ``shard_map`` shard (offsets from
+``axis_index``; see ``lower_sharded``) — including column slabs of a 2-D
+rows x cols domain decomposition, where the global column ring is applied
+by absolute index exactly like rows.
 
 1-D programs (jacobi1d) lower to a row-per-program kernel with the column
 halo handled in-tile, mirroring ``kernels.stencil2d.jacobi1d_pallas``.
@@ -55,7 +58,8 @@ def _embed_cols(cur: Array, interior: Array, r: int) -> Array:
 
 
 def _generic_kernel(
-    prev_ref, cur_ref, next_ref, meta_ref, out_ref, *, program, block_rows, halo
+    prev_ref, cur_ref, next_ref, meta_ref, out_ref, *, program, block_rows, halo,
+    col_sharded,
 ):
     """Kernel body: blocks are (1, block_rows, C); grid is (depth, row_tiles).
 
@@ -63,8 +67,17 @@ def _generic_kernel(
     ``halo`` rows from each neighbour block, and each of the chain's sweeps
     shrinks the slab by its own radius while re-applying the global
     radius-r ring at ABSOLUTE row indices (``meta_ref`` holds the traced
-    ``(row_offset, rows_global)`` pair — 0 / rows standalone, the shard's
-    global placement under ``lower_sharded``).
+    ``(row_offset, rows_global, col_offset, cols_global)`` tuple —
+    ``(0, rows, 0, cols)`` standalone, the shard's global placement under
+    ``lower_sharded``).
+
+    ``col_sharded`` (static) selects the column mode: False keeps the
+    full-width sweep (columns never tiled — the array carries the whole
+    global column extent, local column ring); True runs the column-slab
+    sweep for 2-D domain decomposition — the array's outer ``halo`` columns
+    are the shard's column halo, the sweep shrinks them away, and the
+    result is re-embedded so the output block keeps the input width (the
+    caller slices the stale halo columns off).
     """
     i = pl.program_id(1)
     cur = cur_ref[0].astype(jnp.float32)
@@ -80,7 +93,14 @@ def _generic_kernel(
     else:
         x = cur
     base = meta_ref[0, 0] + i * block_rows - halo  # global id of x's first row
-    out_ref[0] = slab_sweep(program, x, base, meta_ref[0, 1]).astype(out_ref.dtype)
+    if not col_sharded or halo == 0:
+        out_ref[0] = slab_sweep(program, x, base, meta_ref[0, 1]).astype(out_ref.dtype)
+        return
+    vals = slab_sweep(
+        program, x, base, meta_ref[0, 1], meta_ref[0, 2], meta_ref[0, 3]
+    )  # (block_rows, C - 2*halo)
+    width = cur.shape[-1]
+    out_ref[0] = cur.at[:, halo : width - halo].set(vals).astype(out_ref.dtype)
 
 
 def _kernel_1d(x_ref, out_ref, *, program):
@@ -112,7 +132,11 @@ def lower_pallas(
 
     The returned function also accepts keyword-only ``row_offset`` /
     ``rows_global`` (possibly traced) so ``lower_sharded`` can run the same
-    kernel on a halo-padded shard block with true global row indices.
+    kernel on a halo-padded shard block with true global row indices, and
+    ``col_offset`` / ``cols_global`` for 2-D (rows x cols) decomposition:
+    passing ``cols_global`` marks the array as a column slab whose outer
+    chain-radius columns are halo (the sweep consumes them and the global
+    column ring is applied by absolute index, mirroring rows).
     """
     if len(program.inputs) != 1:
         raise ValueError(
@@ -126,18 +150,25 @@ def lower_pallas(
     halo = program.radius  # full chain radius: k*r for repeat(p, k)
     min_block = max(halo, 1)
 
-    @functools.partial(jax.jit, static_argnames=("br", "interp"))
-    def _call(x, row_offset, rows_global, br, interp):
+    @functools.partial(jax.jit, static_argnames=("br", "interp", "col_sharded"))
+    def _call(x, row_offset, rows_global, col_offset, cols_global, br, interp,
+              col_sharded):
         depth, rows, cols = x.shape
         row_tiles = rows // br
         meta = jnp.stack(
-            [jnp.asarray(row_offset, jnp.int32), jnp.asarray(rows_global, jnp.int32)]
-        ).reshape(1, 2)
+            [
+                jnp.asarray(row_offset, jnp.int32),
+                jnp.asarray(rows_global, jnp.int32),
+                jnp.asarray(col_offset, jnp.int32),
+                jnp.asarray(cols_global, jnp.int32),
+            ]
+        ).reshape(1, 4)
         kernel = functools.partial(
             _generic_kernel,
             program=program,
             block_rows=br,
             halo=halo,
+            col_sharded=col_sharded,
         )
         spec = lambda fn: pl.BlockSpec((1, br, cols), fn)  # noqa: E731
         return pl.pallas_call(
@@ -148,7 +179,7 @@ def lower_pallas(
                 spec(lambda d, i: (d, i, 0)),
                 spec(lambda d, i: (d, jnp.minimum(i + 1, row_tiles - 1), 0)),
                 pl.BlockSpec(
-                    (1, 2), lambda d, i: (0, 0), memory_space=pltpu.MemorySpace.SMEM
+                    (1, 4), lambda d, i: (0, 0), memory_space=pltpu.MemorySpace.SMEM
                 ),
             ],
             out_specs=spec(lambda d, i: (d, i, 0)),
@@ -156,7 +187,8 @@ def lower_pallas(
             interpret=interp,
         )(x, x, x, meta)
 
-    def fn(x: Array, *, row_offset=0, rows_global=None) -> Array:
+    def fn(x: Array, *, row_offset=0, rows_global=None, col_offset=0,
+           cols_global=None) -> Array:
         if x.ndim != 3:
             raise ValueError(f"expected (depth, rows, cols), got shape {x.shape}")
         _, rows, cols = x.shape
@@ -175,7 +207,15 @@ def lower_pallas(
         interp = interpret if interpret is not None else not _on_tpu()
         if rows_global is None:
             rows_global = rows
-        return _call(x, row_offset, rows_global, br, interp)
+        # cols_global given => the array is a column slab of a wider grid
+        # (2-D domain decomposition): static mode switch for the kernel.
+        col_sharded = cols_global is not None
+        if cols_global is None:
+            cols_global = cols
+        return _call(
+            x, row_offset, rows_global, col_offset, cols_global, br, interp,
+            col_sharded,
+        )
 
     return fn
 

@@ -1,25 +1,42 @@
 """Sharded lowering: shard_map + inferred-radius halo exchange per program.
 
 The B-block scale-out of §3.4, driven entirely by the graph analysis: the
-row halo each shard pushes to its neighbours is the program's *inferred*
-chain radius (``dist.halo.exchange_row_halos`` with ``halo=r`` — k*r for a
-temporally-blocked ``repeat(p, k)``), not a hard-coded constant, and the
-per-shard compute composes either the reference evaluator or the fused
-Pallas kernel inside the shard — the ROADMAP's
+halo each shard pushes to its neighbours is the program's *inferred* chain
+radius (k*r for a temporally-blocked ``repeat(p, k)``), not a hard-coded
+constant, and the per-shard compute composes either the reference evaluator
+or the fused Pallas kernel inside the shard — the ROADMAP's
 "Pallas-kernel-inside-shard_map" item: VMEM-fused B-block residency *and*
 domain decomposition in one step function.
+
+Domain decomposition is 2-D (rows x cols), like the paper's 2-D AIE array:
+``row_axis`` and/or ``col_axis`` name mesh axes (or pass ``mesh_shape=(R,
+C)`` to build a ("rows", "cols") mesh over the default devices), and
+``dist.halo.exchange_halos_2d`` moves the row/col bands plus the four
+diagonal corners. A grid too fine for row sharding (rows/shard < halo) can
+therefore shard columns instead — the remedy the 1-D fine-mesh error now
+points at.
+
+``overlap=True`` splits every shard's work into interior compute — which
+needs NO halo and is issued concurrently with the edge exchange, so XLA's
+latency-hiding scheduler can run the ppermutes behind it — and the
+radius-halo edge bands computed from the padded block afterwards. Both
+pieces run the same ``slab_sweep`` slices over the same values (the edge
+bands upcast to float32 when the inner is Pallas, mirroring the kernel),
+so ``overlap=True`` bit-matches ``overlap=False`` — verified exactly on
+the CPU/interpret test paths; on real TPU hardware the Mosaic-compiled
+kernel and the XLA-fused edge bands may differ at the last ulp.
 
 Temporal blocking amortises the wire: a composed program exchanges its
 depth-``k*r`` halo ONCE per k fused sweeps, so halo-exchange *rounds* (the
 latency term) per simulated step drop k-fold while the exchanged bytes per
 round match ``halo_exchange_bytes(..., steps=k)`` exactly.
 
-Global-boundary correctness uses absolute row indexing exactly like
-``repro.dist.halo.make_sharded_hdiff``, applied PER SWEEP: every sweep of
-the chain re-applies the global boundary ring at true global row indices
-(``slab_sweep`` with the shard's row offset), so the zero halos ppermute
-delivers at the grid edges are never read into an owned output row and the
-k-sweep result bit-matches k single-device applications.
+Global-boundary correctness uses absolute row AND column indexing, applied
+PER SWEEP: every sweep of the chain re-applies the global boundary ring at
+true global indices (``slab_sweep`` with the shard's row/col offsets), so
+the zero halos ppermute delivers at the grid edges are never read into an
+owned output point and the k-sweep result bit-matches k single-device
+applications.
 
 ``repro.dist`` is imported lazily (it depends on ``repro.core``, which
 derives its constants from this package).
@@ -30,6 +47,7 @@ from __future__ import annotations
 from typing import Callable
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.ir.evaluate import slab_sweep
@@ -39,13 +57,20 @@ from repro.ir.lower_reference import lower_reference
 
 Array = jax.Array
 
+# Sentinel: distinguishes "caller did not pass depth_axis" (defaults to
+# "data", or to None when mesh_shape builds the mesh) from an explicit one.
+_DEPTH_DEFAULT = "__default_depth_axis__"
+
 
 def lower_sharded(
     program: StencilProgram,
-    mesh,
+    mesh=None,
     *,
-    depth_axis: str | None = "data",
+    depth_axis: str | None = _DEPTH_DEFAULT,
     row_axis: str | None = None,
+    col_axis: str | None = None,
+    mesh_shape: tuple[int, int] | None = None,
+    overlap: bool = False,
     inner: str = "pallas",
     interpret: bool | None = None,
     vmem_budget: int | None = None,
@@ -57,15 +82,31 @@ def lower_sharded(
     Args:
       program: single-input 2-D IR program; a composed program fuses its k
         sweeps behind one depth-``k*r`` halo exchange.
-      mesh: device mesh; axes named by ``depth_axis`` / ``row_axis``.
+      mesh: device mesh; axes named by ``depth_axis`` / ``row_axis`` /
+        ``col_axis``. Mutually exclusive with ``mesh_shape``.
       depth_axis: mesh axis sharding dim 0 (planes, zero collectives), or None.
       row_axis: mesh axis sharding dim 1 (rows, halo exchange at the
-        program's inferred chain radius), or None for pure depth parallelism.
+        program's inferred chain radius), or None.
+      col_axis: mesh axis sharding dim 2 (cols, symmetric halo exchange +
+        diagonal corner traffic when rows are sharded too), or None.
+      mesh_shape: ``(R, C)`` — build a rows x cols mesh over the first
+        ``R * C`` default devices (axes named "rows"/"cols", no depth
+        sharding) instead of passing ``mesh``; the factorization
+        :func:`repro.ir.plan.plan_partition` picks.
+      overlap: issue interior compute (halo-free) concurrently with the
+        edge exchange, then fill the radius-halo edge bands — async
+        halo/compute overlap. Bit-matches ``overlap=False``. The split
+        activates only when the shard interior is non-empty (rows/shard >
+        2*halo, and cols/shard > 2*halo when columns are sharded); thinner
+        shards fall back to the serialized exchange-then-compute path
+        (identical results, nothing left to overlap).
       inner: per-shard compute — "pallas" (fused VMEM kernel inside the
-        shard) or "reference" (jnp evaluator).
+        shard) or "reference" (jnp evaluator). Under ``overlap=True`` the
+        inner backend computes the interior; the thin edge bands always use
+        the jnp evaluator.
       interpret / vmem_budget: forwarded to the Pallas lowering.
     """
-    from repro.dist.halo import exchange_row_halos
+    from repro.dist.halo import exchange_halos_2d, exchange_row_halos
     from repro.dist.sharding import _mesh_sizes
 
     if program.ndim != 2 or len(program.inputs) != 1:
@@ -73,13 +114,37 @@ def lower_sharded(
     if inner not in ("pallas", "reference"):
         raise ValueError(f"unknown inner backend {inner!r}")
 
+    if mesh_shape is not None:
+        if mesh is not None:
+            raise ValueError("pass either mesh or mesh_shape, not both")
+        if depth_axis != _DEPTH_DEFAULT or row_axis is not None or col_axis is not None:
+            raise ValueError(
+                "mesh_shape fixes the mesh axes to (rows, cols) with no depth "
+                "sharding; don't pass depth_axis/row_axis/col_axis with it — "
+                "build the mesh yourself to name axes"
+            )
+        from repro.launch.mesh import make_mesh
+
+        r_sh, c_sh = mesh_shape
+        mesh = make_mesh((int(r_sh), int(c_sh)), ("rows", "cols"))
+        depth_axis, row_axis, col_axis = None, "rows", "cols"
+    else:
+        if mesh is None:
+            raise ValueError("lower_sharded needs a mesh (or mesh_shape=(R, C))")
+        if depth_axis == _DEPTH_DEFAULT:
+            depth_axis = "data"
+
     sizes = _mesh_sizes(mesh)
-    for ax in (depth_axis, row_axis):
+    axis_names = tuple(sizes)  # mesh declaration order (corner pair numbering)
+    axes = {"depth_axis": depth_axis, "row_axis": row_axis, "col_axis": col_axis}
+    for role, ax in axes.items():
         if ax is not None and ax not in sizes:
-            raise ValueError(f"mesh {tuple(sizes)} has no axis {ax!r}")
-    if depth_axis is not None and depth_axis == row_axis:
-        raise ValueError("depth_axis and row_axis must be distinct mesh axes")
+            raise ValueError(f"mesh {tuple(sizes)} has no axis {ax!r} ({role})")
+    named = [ax for ax in axes.values() if ax is not None]
+    if len(set(named)) != len(named):
+        raise ValueError("depth_axis, row_axis and col_axis must be distinct mesh axes")
     n_row = sizes[row_axis] if row_axis is not None else 1
+    n_col = sizes[col_axis] if col_axis is not None else 1
     n_depth = sizes[depth_axis] if depth_axis is not None else 1
 
     halo = program.radius  # full chain radius; exchanged once per k sweeps
@@ -89,30 +154,115 @@ def lower_sharded(
     else:
         apply_full = lower_reference(program, mode="fused")
 
-    spec = P(depth_axis, row_axis if n_row > 1 else None, None)
+    spec = P(
+        depth_axis,
+        row_axis if n_row > 1 else None,
+        col_axis if n_col > 1 else None,
+    )
+
+    def _offsets(block: Array):
+        """Global index of the shard block's first row/col (pre-padding)."""
+        r_loc, c_loc = block.shape[-2], block.shape[-1]
+        off_r = jax.lax.axis_index(row_axis) * r_loc if n_row > 1 else 0
+        off_c = jax.lax.axis_index(col_axis) * c_loc if n_col > 1 else 0
+        return off_r, off_c, r_loc * n_row, c_loc * n_col
+
+    def _inner_padded(padded: Array, off_r, off_c, r_glob, c_glob, r_loc, c_loc):
+        """Whole-shard compute on the halo-padded block -> (r_loc, c_loc)."""
+        if inner == "pallas":
+            if n_col > 1:
+                vals = apply_full(
+                    padded,
+                    row_offset=off_r - halo, rows_global=r_glob,
+                    col_offset=off_c - halo, cols_global=c_glob,
+                )
+                return vals[..., halo : halo + r_loc, halo : halo + c_loc]
+            vals = apply_full(padded, row_offset=off_r - halo, rows_global=r_glob)
+            return vals[..., halo : halo + r_loc, :]
+        if n_col > 1:
+            return slab_sweep(program, padded, off_r - halo, r_glob,
+                              off_c - halo, c_glob)
+        return slab_sweep(program, padded, off_r - halo, r_glob)
+
+    def _inner_interior(block: Array, off_r, off_c, r_glob, c_glob):
+        """Halo-free interior compute on the UNPADDED block: output rows
+        [halo, r_loc-halo) (and cols likewise when columns are sharded) —
+        no data dependency on the exchange, so it can overlap it."""
+        r_loc, c_loc = block.shape[-2], block.shape[-1]
+        if inner == "pallas":
+            if n_col > 1:
+                vals = apply_full(
+                    block,
+                    row_offset=off_r, rows_global=r_glob,
+                    col_offset=off_c, cols_global=c_glob,
+                )
+                return vals[..., halo : r_loc - halo, halo : c_loc - halo]
+            vals = apply_full(block, row_offset=off_r, rows_global=r_glob)
+            return vals[..., halo : r_loc - halo, :]
+        if n_col > 1:
+            return slab_sweep(program, block, off_r, r_glob, off_c, c_glob)
+        return slab_sweep(program, block, off_r, r_glob)
+
+    def _edge_bands(padded: Array, off_r, off_c, r_glob, c_glob, r_loc, c_loc):
+        """The four radius-``halo`` edge bands of the shard's output, each a
+        ``slab_sweep`` over a static slice of the padded block (top/bottom
+        span all owned cols; left/right cover the remaining interior rows)."""
+        h = halo
+
+        def sweep(slab, row0, col0):
+            if inner == "pallas":
+                # The Pallas kernel upcasts to float32 and casts back on
+                # store; the edge bands must compute the same way or the
+                # overlap bit-match contract breaks for non-f32 inputs.
+                slab = slab.astype(jnp.float32)
+            if n_col > 1:
+                return slab_sweep(program, slab, row0, r_glob, col0, c_glob)
+            return slab_sweep(program, slab, row0, r_glob)
+
+        top = sweep(padded[..., : 3 * h, :], off_r - h, off_c - h)
+        bottom = sweep(padded[..., -3 * h :, :], off_r + r_loc - 2 * h, off_c - h)
+        if n_col == 1:
+            return top, bottom, None, None
+        left = sweep(padded[..., h : h + r_loc, : 3 * h], off_r, off_c - h)
+        right = sweep(
+            padded[..., h : h + r_loc, -3 * h :], off_r, off_c + c_loc - 2 * h
+        )
+        return top, bottom, left, right
 
     def local_step(block: Array) -> Array:
-        if row_axis is None or n_row == 1 or halo == 0:
-            # Full rows present locally (or no row coupling at all): the
+        if (n_row == 1 and n_col == 1) or halo == 0:
+            # Full grid present locally (or no spatial coupling at all): the
             # single-device lowering's boundary handling is already correct.
             return apply_full(block)
-        r_loc = block.shape[-2]
-        r_glob = r_loc * n_row
-        padded = exchange_row_halos(block, row_axis, n_row, halo=halo)
-        # Global row index of the padded block's first row: the per-sweep
-        # ring passthrough runs at TRUE global indices, so ring rows owned
-        # by this shard hold exactly what k stepped applications leave
-        # there, and the zero halos at the grid edges are never read into
-        # an owned row. No post-hoc ownership mask is needed.
-        off = jax.lax.axis_index(row_axis) * r_loc - halo
+        r_loc, c_loc = block.shape[-2], block.shape[-1]
+        off_r, off_c, r_glob, c_glob = _offsets(block)
 
-        if inner == "pallas":
-            # Fused k-sweep kernel on the padded block with global row ids;
-            # the owned rows are the exact interior of the padded result.
-            vals = apply_full(padded, row_offset=off, rows_global=r_glob)
-            vals = vals[..., halo : halo + r_loc, :]
+        # overlap needs a non-empty interior after shaving the halo bands.
+        can_overlap = overlap and r_loc > 2 * halo and (n_col == 1 or c_loc > 2 * halo)
+        if can_overlap:
+            # Interior first in program order: it reads only the unpadded
+            # block, so the exchange's ppermutes have no consumers before it
+            # and the latency-hiding scheduler is free to run them behind it.
+            interior = _inner_interior(block, off_r, off_c, r_glob, c_glob)
+
+        if n_col > 1:
+            padded = exchange_halos_2d(
+                block, row_axis, col_axis, n_row, n_col, halo,
+                mesh_axis_names=axis_names,
+            )
         else:
-            vals = slab_sweep(program, padded, off, r_glob)  # (..., r_loc, C)
+            padded = exchange_row_halos(block, row_axis, n_row, halo=halo)
+
+        if not can_overlap:
+            vals = _inner_padded(padded, off_r, off_c, r_glob, c_glob, r_loc, c_loc)
+            return vals.astype(block.dtype)
+
+        top, bottom, left, right = _edge_bands(
+            padded, off_r, off_c, r_glob, c_glob, r_loc, c_loc
+        )
+        if n_col > 1:
+            interior = jnp.concatenate([left, interior, right], axis=-1)
+        vals = jnp.concatenate([top, interior, bottom], axis=-2)
         return vals.astype(block.dtype)
 
     mapped = jax.shard_map(
@@ -123,18 +273,25 @@ def lower_sharded(
     def step(x: Array) -> Array:
         if x.ndim != 3:
             raise ValueError(f"expected (depth, rows, cols), got shape {x.shape}")
-        d, r, _ = x.shape
+        d, r, c = x.shape
         if n_depth > 1 and d % n_depth:
             raise ValueError(f"depth {d} not divisible by {n_depth} {depth_axis!r} shards")
-        if n_row > 1:
-            if r % n_row:
-                raise ValueError(f"rows {r} not divisible by {n_row} {row_axis!r} shards")
-            if r // n_row < halo:
-                raise ValueError(
-                    f"rows/shard {r // n_row} < inferred halo {halo} (chain "
-                    f"radius of {program.name!r}): too many row shards for "
-                    f"the single-neighbour halo exchange"
-                )
+        for extent, n_sh, ax, what, remedy in (
+            (r, n_row, row_axis, "rows", "columns (col_axis=...)"),
+            (c, n_col, col_axis, "cols", "rows (row_axis=...)"),
+        ):
+            if n_sh > 1:
+                if extent % n_sh:
+                    raise ValueError(
+                        f"{what} {extent} not divisible by {n_sh} {ax!r} shards"
+                    )
+                if extent // n_sh < halo:
+                    raise ValueError(
+                        f"{what}/shard {extent // n_sh} < inferred halo {halo} "
+                        f"(chain radius of {program.name!r}): too many {what} "
+                        f"shards for the single-neighbour halo exchange — use "
+                        f"fewer, or shard {remedy} instead"
+                    )
         return mapped(x)
 
     return step

@@ -1,14 +1,23 @@
-"""VMEM tile planning shared by the hand-written kernels and the IR lowerer.
+"""VMEM tile planning shared by the hand-written kernels and the IR lowerer,
+plus the 2-D mesh-factorization planner for ``lower_sharded``.
 
 The Pallas grid pipeline keeps ~3 input blocks + 1 output block live and
 double-buffers them (the shimDMA ping-pong of §3.2.1), so the per-block
 budget sits well under VMEM/8. The budget defaults to 4 MiB and is
 configurable per call (``budget_bytes``) or process-wide via the
 ``REPRO_VMEM_BUDGET`` environment variable (bytes).
+
+:func:`plan_partition` is the SPARTA §3.4 placement question for the 2-D
+decomposition: given a device count, which rows x cols factorization
+balances the workload at the least wire traffic? It enumerates the feasible
+factorizations and minimizes the exact 2-axis ``halo_exchange_bytes`` model
+(the one ``benchmarks/fig10_scaling.py`` verifies against measured HLO
+collective bytes).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import os
 
 DEFAULT_VMEM_TILE_BUDGET = 4 * 1024 * 1024
@@ -71,3 +80,92 @@ def pick_block_rows(
         if cand * cols * itemsize <= budget:
             return cand
     return fallback
+
+
+# ---------------------------------------------------------------------------
+# 2-D (rows x cols) mesh factorization for lower_sharded.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition2D:
+    """A rows x cols shard factorization chosen by :func:`plan_partition`.
+
+    ``wire_bytes`` is the whole-mesh traffic of ONE halo-exchange round
+    under the exact 2-axis model (row bands + col bands + diagonal
+    corners); ``halo`` is the exchanged band depth (the program's full
+    chain radius — k*r for ``repeat(p, k)``, one round per k sweeps)."""
+
+    row_shards: int
+    col_shards: int
+    halo: int
+    wire_bytes: int
+
+    @property
+    def mesh_shape(self) -> tuple[int, int]:
+        """Directly usable as ``lower_sharded(..., mesh_shape=...)``."""
+        return (self.row_shards, self.col_shards)
+
+
+def plan_partition(
+    program,
+    depth: int,
+    rows: int,
+    cols: int,
+    n_devices: int,
+    *,
+    itemsize: int = 4,
+) -> Partition2D:
+    """Picks the rows x cols factorization of ``n_devices`` that minimizes
+    the modeled wire bytes per exchange round for ``program`` on a
+    (depth, rows, cols) grid.
+
+    A factorization (R, C) is feasible when both grid dims divide evenly
+    and each shard keeps at least the program's chain radius of rows/cols
+    (the single-neighbour exchange floor ``lower_sharded`` enforces). Ties
+    break toward fewer column shards (rows are the paper's native lane
+    decomposition; columns are the contiguous/vectorised dim). The result
+    never models more traffic than the 1-D row baseline (R=n, C=1) when
+    that baseline is feasible — and covers meshes the 1-D baseline cannot
+    reach at all (rows/n < halo), the remedy for the fine-mesh error.
+
+    Distinct from ``repro.core.compound.plan_partition`` (depth x rows via
+    the three-term roofline): this is the pure wire-traffic question for
+    the 2-D spatial decomposition, answered with the byte model that
+    ``fig10`` measures exactly.
+    """
+    # Lazy: repro.dist imports repro.core, which derives constants from
+    # this package — importing it at module scope would be a cycle.
+    from repro.dist.halo import halo_exchange_bytes
+
+    halo = program.radius
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    best: Partition2D | None = None
+    for r_sh in range(1, n_devices + 1):
+        if n_devices % r_sh:
+            continue
+        c_sh = n_devices // r_sh
+        if rows % r_sh or cols % c_sh:
+            continue
+        if halo > 0 and (
+            (r_sh > 1 and rows // r_sh < halo) or (c_sh > 1 and cols // c_sh < halo)
+        ):
+            continue
+        wire = halo_exchange_bytes(
+            depth, rows, cols, r_sh, itemsize=itemsize, halo=halo, col_shards=c_sh
+        )
+        cand = Partition2D(r_sh, c_sh, halo, wire)
+        if (
+            best is None
+            or cand.wire_bytes < best.wire_bytes
+            or (cand.wire_bytes == best.wire_bytes and c_sh < best.col_shards)
+        ):
+            best = cand
+    if best is None:
+        raise ValueError(
+            f"no rows x cols factorization of {n_devices} devices fits grid "
+            f"({rows}, {cols}) with halo {halo} (program {program.name!r}): "
+            f"every split leaves a shard thinner than the halo band"
+        )
+    return best

@@ -1,0 +1,134 @@
+"""Cross-backend conformance matrix: the single source of parity truth.
+
+One place defines the grid, tolerance, seed, program set, backend set, k
+(temporal-blocking) set and mesh set; every parity test — tier-1 single
+device and the 8-fake-device multidev jobs — draws its cells from here
+instead of re-declaring its own grid/tolerance (what test_ir_lowering.py,
+test_ir_temporal.py and tests/multidev/_ir_check.py each used to do).
+
+The oracle for every cell is ``lower_reference`` of the k-step composed
+program; the oracle itself is anchored against the hand-written kernels by
+``test_conformance_matrix.py::test_oracle_matches_handwritten``.
+
+Cells:
+  program  in {hdiff, hdiff_simple} + the five elementary 2-D stencils
+  backend  in {reference, staged, pallas, sharded-reference, sharded-pallas}
+  k        in {1, 2, 3}
+  mesh     in {1x1, 8x1, 2x4, 1x8}   (rows x cols shards; non-sharded
+                                      backends are mesh-independent and run
+                                      at 1x1 only)
+
+GRID is sized so every cell is feasible: 48 rows / 8 shards = 6 rows per
+shard == the deepest chain halo in the matrix (hdiff radius 2, k = 3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.ir import (
+    hdiff_program,
+    jacobi2d_3pt_program,
+    jacobi2d_5pt_program,
+    jacobi2d_9pt_program,
+    laplacian_program,
+    lower_pallas,
+    lower_reference,
+    lower_sharded,
+    repeat,
+    seidel2d_program,
+)
+
+GRID = (2, 48, 48)
+TOL = 1e-6
+SEED = 2024
+
+PROGRAMS = {
+    "hdiff": lambda: hdiff_program(),
+    "hdiff_simple": lambda: hdiff_program(limit=False),
+    "jacobi2d_3pt": jacobi2d_3pt_program,
+    "laplacian": laplacian_program,
+    "jacobi2d_5pt": jacobi2d_5pt_program,
+    "jacobi2d_9pt": jacobi2d_9pt_program,
+    "seidel2d": seidel2d_program,
+}
+
+BACKENDS = ("reference", "staged", "pallas", "sharded-reference", "sharded-pallas")
+SHARDED_BACKENDS = tuple(b for b in BACKENDS if b.startswith("sharded-"))
+KS = (1, 2, 3)
+MESHES = ((1, 1), (8, 1), (2, 4), (1, 8))
+
+
+def mesh_id(mesh_shape: tuple[int, int]) -> str:
+    return f"{mesh_shape[0]}x{mesh_shape[1]}"
+
+
+def devices_needed(backend: str, mesh_shape: tuple[int, int]) -> int:
+    if backend in SHARDED_BACKENDS:
+        return mesh_shape[0] * mesh_shape[1]
+    return 1
+
+
+def make_input(grid: tuple[int, ...] = GRID, seed: int = SEED):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(grid).astype(np.float32))
+
+
+def iter_cases(mesh_shapes=MESHES):
+    """All (program, backend, k, mesh) cells for the given mesh subset.
+    Non-sharded backends are mesh-independent: they appear once, at 1x1."""
+    for name in PROGRAMS:
+        for backend in BACKENDS:
+            for k in KS:
+                for mesh_shape in mesh_shapes:
+                    if backend not in SHARDED_BACKENDS and mesh_shape != (1, 1):
+                        continue
+                    yield name, backend, k, mesh_shape
+
+
+def build(program, backend: str, mesh_shape: tuple[int, int], *, overlap=False):
+    """The lowered ``x -> program(x)`` callable for one matrix cell."""
+    if backend == "reference":
+        return lower_reference(program)
+    if backend == "staged":
+        return lower_reference(program, mode="staged")
+    if backend == "pallas":
+        return lower_pallas(program, interpret=True)
+    if backend in SHARDED_BACKENDS:
+        return lower_sharded(
+            program,
+            mesh_shape=mesh_shape,
+            inner=backend.removeprefix("sharded-"),
+            overlap=overlap,
+        )
+    raise ValueError(f"unknown conformance backend {backend!r}")
+
+
+@functools.lru_cache(maxsize=None)
+def oracle(name: str, k: int) -> np.ndarray:
+    """lower_reference of the k-step composed program on the shared input."""
+    prog = repeat(PROGRAMS[name](), k)
+    return np.asarray(lower_reference(prog)(make_input()))
+
+
+def run_case(name: str, backend: str, k: int, mesh_shape, *, overlap=False):
+    """(got, want) for one cell; caller asserts (pytest or subprocess)."""
+    prog = repeat(PROGRAMS[name](), k)
+    got = np.asarray(build(prog, backend, mesh_shape, overlap=overlap)(make_input()))
+    return got, oracle(name, k)
+
+
+def assert_case(name: str, backend: str, k: int, mesh_shape, *, overlap=False):
+    got, want = run_case(name, backend, k, mesh_shape, overlap=overlap)
+    np.testing.assert_allclose(
+        got,
+        want,
+        rtol=TOL,
+        atol=TOL,
+        err_msg=f"{name}/{backend}/k={k}/mesh={mesh_id(mesh_shape)}"
+        + ("/overlap" if overlap else ""),
+    )
+    return got

@@ -1,0 +1,76 @@
+"""Subprocess body: the sharded slice of the conformance matrix on ONE
+multi-device mesh (rows x cols fake devices; run by
+tests/test_conformance_matrix.py with XLA_FLAGS forcing the device count).
+
+Also asserts the async-overlap contract on every mesh: ``overlap=True``
+must BIT-match ``overlap=False`` (all k for the reference inner; k=2 for
+the Pallas inner to bound compile time).
+
+Prints DEVICES_UNAVAILABLE (exit 3) when the device count cannot back the
+mesh — the caller converts that into a pytest skip, which the CI
+multidev-2d job's skip gate turns into a failure.
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax  # noqa: E402
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--mesh", required=True, help="RxC, e.g. 2x4")
+args = ap.parse_args()
+R, C = (int(s) for s in args.mesh.split("x"))
+
+if len(jax.devices()) < R * C:
+    print(f"DEVICES_UNAVAILABLE mesh {args.mesh} needs {R * C} devices, "
+          f"have {len(jax.devices())}")
+    sys.exit(3)
+
+import numpy as np  # noqa: E402
+
+from conformance import (  # noqa: E402
+    KS,
+    SHARDED_BACKENDS,
+    assert_case,
+    iter_cases,
+    run_case,
+)
+
+OVERLAP_KS = {"sharded-reference": set(KS), "sharded-pallas": {2}}
+
+# Non-f32 overlap contract: the Pallas inner upcasts to f32 in-kernel, and
+# the overlap edge bands must mirror that — regression for the bf16 case.
+import jax.numpy as jnp  # noqa: E402
+
+from conformance import make_input  # noqa: E402
+from repro.ir import hdiff_program, lower_sharded  # noqa: E402
+
+xb = make_input().astype(jnp.bfloat16)
+for inner in ("pallas", "reference"):
+    base = lower_sharded(hdiff_program(), mesh_shape=(R, C), inner=inner)
+    over = lower_sharded(hdiff_program(), mesh_shape=(R, C), inner=inner, overlap=True)
+    np.testing.assert_array_equal(
+        np.asarray(over(xb)).astype(np.float32),
+        np.asarray(base(xb)).astype(np.float32),
+        err_msg=f"bf16 overlap!=no-overlap inner={inner} mesh={args.mesh}",
+    )
+print(f"bf16 overlap bit-match ok mesh={args.mesh}")
+
+n_cells = 0
+for name, backend, k, mesh_shape in iter_cases(((R, C),)):
+    if backend not in SHARDED_BACKENDS:
+        continue
+    got = assert_case(name, backend, k, mesh_shape)
+    if k in OVERLAP_KS[backend]:
+        got_overlap, _ = run_case(name, backend, k, mesh_shape, overlap=True)
+        np.testing.assert_array_equal(
+            got_overlap, got,
+            err_msg=f"overlap!=no-overlap: {name}/{backend}/k={k}/{args.mesh}",
+        )
+    n_cells += 1
+    print(f"{name} {backend} k={k} mesh={args.mesh} ok")
+
+print(f"ALL_OK {n_cells} cells")

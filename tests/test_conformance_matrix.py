@@ -1,0 +1,97 @@
+"""The cross-backend conformance matrix (see tests/conformance.py).
+
+Three layers:
+
+  * ``test_oracle_matches_handwritten`` anchors the matrix oracle
+    (``lower_reference`` of the composed program) against k composed
+    applications of the hand-written ``repro.core`` kernels.
+  * ``test_conformance_1x1`` runs every (program, backend, k) cell on the
+    1x1 mesh in-process — the tier-1 parity sweep.
+  * ``test_conformance_mesh`` runs the sharded cells of one multi-device
+    mesh in an 8-fake-device subprocess (the main pytest process must keep
+    seeing 1 device — the dry-run contract), including overlap=True
+    bit-match checks. If the subprocess cannot provide the mesh it SKIPS
+    with a "mesh ... unavailable" message, which
+    ``scripts/check_no_dep_skips.py --fail-on-mesh-skips`` turns into a
+    hard failure in the CI multidev-2d job.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from conformance import (
+    KS,
+    MESHES,
+    PROGRAMS,
+    assert_case,
+    iter_cases,
+    make_input,
+    mesh_id,
+    oracle,
+)
+from repro.core import ELEMENTARY_FNS, hdiff, hdiff_simple
+
+REPO = Path(__file__).resolve().parent.parent
+
+HANDWRITTEN = dict(ELEMENTARY_FNS)
+HANDWRITTEN.update(
+    {"hdiff": lambda x: hdiff(x, 0.025), "hdiff_simple": lambda x: hdiff_simple(x, 0.025)}
+)
+
+
+@pytest.mark.parametrize("name", sorted(PROGRAMS))
+def test_oracle_matches_handwritten(name):
+    x = make_input()
+    for k in KS:
+        want = x
+        for _ in range(k):
+            want = HANDWRITTEN[name](want)
+        np.testing.assert_allclose(
+            oracle(name, k), np.asarray(want), rtol=1e-6, atol=1e-6,
+            err_msg=f"{name} k={k}",
+        )
+
+
+CASES_1X1 = [
+    pytest.param(name, backend, k, id=f"{name}-{backend}-k{k}")
+    for name, backend, k, _mesh in iter_cases(((1, 1),))
+]
+
+
+@pytest.mark.parametrize("name,backend,k", CASES_1X1)
+def test_conformance_1x1(name, backend, k):
+    assert_case(name, backend, k, (1, 1))
+
+
+MULTIDEV_MESHES = [m for m in MESHES if m != (1, 1)]
+
+
+@pytest.mark.multidev
+@pytest.mark.parametrize("mesh", [pytest.param(m, id=mesh_id(m)) for m in MULTIDEV_MESHES])
+def test_conformance_mesh(mesh):
+    n_dev = mesh[0] * mesh[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [
+            sys.executable,
+            str(REPO / "tests" / "multidev" / "_conformance_check.py"),
+            "--mesh",
+            mesh_id(mesh),
+        ],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    if "DEVICES_UNAVAILABLE" in proc.stdout:
+        pytest.skip(f"mesh {mesh_id(mesh)} unavailable: {proc.stdout.strip()}")
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL_OK" in proc.stdout

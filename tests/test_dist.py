@@ -92,6 +92,29 @@ def test_spec_decode_kv_seq():
     assert spec == P("data", None, "model", None)
 
 
+def test_spec_grid_axes_map_to_same_named_mesh_axes():
+    """The stencil-grid logical axes (depth, rows, cols) shard over the
+    mesh axis of the SAME name — the rule lower_sharded's mesh_shape
+    meshes rely on — with the usual divisibility fallback."""
+    mesh = FakeMesh((2, 4), ("rows", "cols"))
+    assert spec_for(("depth", "rows", "cols"), mesh, (64, 256, 256)) == P(
+        None, "rows", "cols"
+    )
+    # Indivisible dims replicate, never pad.
+    assert spec_for(("depth", "rows", "cols"), mesh, (64, 255, 256)) == P(
+        None, None, "cols"
+    )
+    mesh3 = FakeMesh((2, 2, 2), ("depth", "rows", "cols"))
+    assert spec_for(("depth", "rows", "cols"), mesh3, (8, 16, 16)) == P(
+        "depth", "rows", "cols"
+    )
+    # No same-named axis present -> replicated (e.g. the data/model mesh).
+    mesh_dm = FakeMesh((2, 4), ("data", "model"))
+    assert spec_for(("depth", "rows", "cols"), mesh_dm, (8, 16, 16)) == P(
+        None, None, None
+    )
+
+
 def test_spec_fsdp_partial_divisibility():
     mesh = FakeMesh((2, 16, 16), ("pod", "data", "model"))
     # dim 32 divides 32 (pod*data) -> both axes; dim 16 only divides data.

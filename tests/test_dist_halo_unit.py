@@ -17,12 +17,15 @@ from repro.core import HALO, hdiff, hdiff_simple
 from repro.dist import (
     compress_bf16,
     decompress_bf16,
+    exchange_halos_2d,
     exchange_row_halos,
     halo_exchange_bytes,
+    halo_exchange_bytes_per_shard,
     make_sharded_hdiff,
     owned_rows_mask,
     reduce_gradients,
 )
+from repro.launch.dryrun import parse_collective_bytes
 from repro.launch.mesh import make_mesh
 
 BF16_REL = 2.0 ** -8  # half-ulp of bfloat16's 7-bit mantissa
@@ -68,6 +71,85 @@ def test_halo_exchange_bytes_temporal_steps():
         assert per_round == k * one
         assert per_round / k == one
     assert halo_exchange_bytes(64, 256, 256, row_shards=1, steps=4) == 0
+
+
+def test_halo_exchange_bytes_2d_model():
+    """Row bands + col bands + 4 diagonal corners; 1-shard axes free."""
+    # col-only is the row formula transposed
+    assert halo_exchange_bytes(64, 256, 128, 1, col_shards=4) == 2 * 3 * 64 * HALO * 256 * 4
+    # full 2-D: rows + cols + corners
+    got = halo_exchange_bytes(8, 64, 32, 2, halo=3, col_shards=4)
+    want = (2 * 1 * 8 * 3 * 32 + 2 * 3 * 8 * 3 * 64 + 4 * 1 * 3 * 8 * 3 * 3) * 4
+    assert got == want
+    assert halo_exchange_bytes(8, 64, 32, 1, halo=3, col_shards=1) == 0
+
+
+def test_halo_exchange_bytes_per_shard_model():
+    """Per-chip permute result bytes: what parse_collective_bytes sees."""
+    assert halo_exchange_bytes_per_shard(4, 16, 8, halo=2) == 2 * 4 * 2 * 8 * 4
+    both = halo_exchange_bytes_per_shard(4, 16, 8, halo=2, col_sharded=True)
+    assert both == (2 * 4 * 2 * 8 + 2 * 4 * 16 * 2 + 4 * 4 * 2 * 2) * 4
+    assert halo_exchange_bytes_per_shard(
+        4, 16, 8, row_sharded=False, col_sharded=False
+    ) == 0
+
+
+def test_single_shard_axes_emit_zero_collective_bytes():
+    """An axis with 1 shard must SKIP its ppermutes (zero pad) instead of
+    sending zero-filled halos to itself: the compiled HLO of a 1x1 mesh
+    contains no collectives at all (regression for the ppermute-to-self
+    fast path)."""
+    mesh = make_mesh((1, 1), ("rows", "cols"))
+    x = jnp.arange(2 * 6 * 6, dtype=jnp.float32).reshape(2, 6, 6)
+
+    def exch_1d(b):
+        return exchange_row_halos(b, "rows", 1)
+
+    def exch_2d(b):
+        return exchange_halos_2d(b, "rows", "cols", 1, 1)
+
+    for fn in (exch_1d, exch_2d):
+        mapped = jax.jit(
+            jax.shard_map(
+                fn,
+                mesh=mesh,
+                in_specs=(P(None, "rows", "cols"),),
+                out_specs=P(None, "rows", "cols"),
+                check_vma=False,
+            )
+        )
+        coll = parse_collective_bytes(mapped.lower(x).compile().as_text())
+        assert coll["bytes"]["total"] == 0, coll
+        assert not coll["counts"], coll
+    # The padded result itself is the zero-rimmed block.
+    out = np.asarray(
+        jax.shard_map(
+            exch_2d,
+            mesh=mesh,
+            in_specs=(P(None, "rows", "cols"),),
+            out_specs=P(None, "rows", "cols"),
+            check_vma=False,
+        )(x)
+    )
+    assert out.shape == (2, 6 + 2 * HALO, 6 + 2 * HALO)
+    np.testing.assert_array_equal(out[:, HALO:-HALO, HALO:-HALO], np.asarray(x))
+    rim = np.ones(out.shape[1:], bool)
+    rim[HALO:-HALO, HALO:-HALO] = False
+    np.testing.assert_array_equal(out[:, rim], 0.0)
+
+
+def test_unsharded_axes_allow_extents_thinner_than_halo():
+    """A 1-shard axis sources no neighbour band — its zero pads are built at
+    full halo width even when the axis extent is thinner than the halo, so
+    configurations plan_partition reports feasible (e.g. 4 rows, halo 6,
+    1 row shard x N col shards) lower cleanly. Only SHARDED axes enforce
+    the extent >= halo band-sourcing floor."""
+    out = exchange_halos_2d(jnp.ones((2, 2, 3)), None, None, 1, 1, halo=4)
+    assert out.shape == (2, 2 + 8, 3 + 8)
+    np.testing.assert_array_equal(np.asarray(out[:, :4]), 0.0)
+    np.testing.assert_array_equal(np.asarray(out[:, 4:6, 4:7]), 1.0)
+    thin = exchange_row_halos(jnp.ones((2, 1, 8)), None, 1, halo=2)
+    assert thin.shape == (2, 5, 8)
 
 
 def test_exchange_row_halos_rejects_fine_mesh():

@@ -1,0 +1,115 @@
+"""Property-based tests (hypothesis) for the 2-axis halo wire model and the
+2-D partition planner.
+
+Invariants:
+  * ``halo_exchange_bytes`` is symmetric under (rows, R) <-> (cols, C)
+    transpose of grid + mesh;
+  * it is linear in grid depth and itemsize, and linear in ``steps`` when
+    only ONE axis is sharded (row-only reduces exactly to the PR 1
+    formula); with BOTH axes sharded the diagonal corner patches are
+    (halo * steps)^2, so the steps-superlinearity is exactly the closed
+    corner term — deep temporal-blocked halos pay a quadratic (but tiny)
+    corner tax;
+  * ``plan_partition`` never models more wire traffic than the 1-D row
+    baseline (R = n_devices, C = 1) whenever that baseline is feasible,
+    and always returns a true factorization of the device count.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.dist import halo_exchange_bytes  # noqa: E402
+from repro.ir import StencilProgram, affine, plan_partition  # noqa: E402
+
+meshes = st.tuples(st.integers(1, 8), st.integers(1, 8))
+dims = st.tuples(st.integers(1, 64), st.integers(8, 512), st.integers(8, 512))
+halos = st.integers(1, 4)
+steps = st.integers(1, 4)
+
+
+@settings(max_examples=100, deadline=None)
+@given(dims, meshes, halos, steps, st.sampled_from([2, 4, 8]))
+def test_wire_model_transpose_symmetric(dim, mesh, halo, k, itemsize):
+    depth, rows, cols = dim
+    r_sh, c_sh = mesh
+    fwd = halo_exchange_bytes(
+        depth, rows, cols, r_sh, itemsize=itemsize, halo=halo, steps=k, col_shards=c_sh
+    )
+    swapped = halo_exchange_bytes(
+        depth, cols, rows, c_sh, itemsize=itemsize, halo=halo, steps=k, col_shards=r_sh
+    )
+    assert fwd == swapped
+
+
+@settings(max_examples=100, deadline=None)
+@given(dims, meshes, halos, steps, st.integers(2, 5))
+def test_wire_model_linear_in_depth_and_itemsize(dim, mesh, halo, k, m):
+    depth, rows, cols = dim
+    r_sh, c_sh = mesh
+    one = halo_exchange_bytes(depth, rows, cols, r_sh, halo=halo, steps=k, col_shards=c_sh)
+    assert halo_exchange_bytes(
+        m * depth, rows, cols, r_sh, halo=halo, steps=k, col_shards=c_sh
+    ) == m * one
+    assert halo_exchange_bytes(
+        depth, rows, cols, r_sh, itemsize=4 * m, halo=halo, steps=k, col_shards=c_sh
+    ) == m * one
+
+
+@settings(max_examples=100, deadline=None)
+@given(dims, st.integers(2, 8), halos, steps)
+def test_wire_model_single_axis_linear_in_steps_and_reduces_to_1d(dim, n, halo, k):
+    """With one sharded axis there are no corners: bytes are k-linear and
+    the row-only form IS the PR 1 formula (col-only is its transpose)."""
+    depth, rows, cols = dim
+    row_only = halo_exchange_bytes(depth, rows, cols, n, halo=halo, steps=k)
+    assert row_only == 2 * (n - 1) * depth * halo * k * cols * 4
+    assert row_only == k * halo_exchange_bytes(depth, rows, cols, n, halo=halo)
+    col_only = halo_exchange_bytes(depth, rows, cols, 1, halo=halo, steps=k, col_shards=n)
+    assert col_only == 2 * (n - 1) * depth * halo * k * rows * 4
+    assert col_only == k * halo_exchange_bytes(
+        depth, rows, cols, 1, halo=halo, col_shards=n
+    )
+
+
+@settings(max_examples=100, deadline=None)
+@given(dims, st.tuples(st.integers(2, 8), st.integers(2, 8)), halos, steps)
+def test_wire_model_steps_superlinearity_is_exactly_the_corners(dim, mesh, halo, k):
+    depth, rows, cols = dim
+    r_sh, c_sh = mesh
+    per_k = halo_exchange_bytes(depth, rows, cols, r_sh, halo=halo, steps=k, col_shards=c_sh)
+    per_1 = halo_exchange_bytes(depth, rows, cols, r_sh, halo=halo, col_shards=c_sh)
+    corner_excess = 4 * (r_sh - 1) * (c_sh - 1) * depth * (k * k - k) * halo * halo * 4
+    assert per_k - k * per_1 == corner_excess
+
+
+def _radius_r_program(r: int) -> StencilProgram:
+    taps = {(0, 0): 1.0}
+    for d in range(1, r + 1):
+        taps.update({(d, 0): 1.0, (-d, 0): 1.0, (0, d): 1.0, (0, -d): 1.0})
+    return StencilProgram("star", ["x"], [affine("out", "x", taps)])
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.integers(1, 3),                      # program radius
+    st.sampled_from([2, 4, 8, 16]),         # n_devices
+    st.integers(1, 8),                      # rows per shard, scaled to >= halo
+    st.integers(1, 64),                     # depth
+    st.integers(1, 16),                     # cols scale
+)
+def test_plan_partition_never_beaten_by_1d_baseline(r, n, rows_scale, depth, cols_scale):
+    prog = _radius_r_program(r)
+    halo = prog.radius
+    rows = n * max(rows_scale, halo)        # (n, 1) baseline is feasible
+    cols = cols_scale * halo
+    plan = plan_partition(prog, depth, rows, cols, n)
+    assert plan.row_shards * plan.col_shards == n
+    baseline = halo_exchange_bytes(depth, rows, cols, n, halo=halo)
+    assert plan.wire_bytes <= baseline
+    # The planner's choice is feasible by its own floor rules.
+    if plan.row_shards > 1:
+        assert rows // plan.row_shards >= halo
+    if plan.col_shards > 1:
+        assert cols // plan.col_shards >= halo

@@ -32,7 +32,11 @@ def test_ir_sharded_multidevice():
     out = _run_subprocess("_ir_check.py")
     assert "ALL_OK" in out
     assert "paper-grid sharded ok" in out
-    for k in (1, 2, 3):
-        assert f"temporal k={k} ok" in out
+    for k in (2, 3):
+        assert f"temporal depth-x-rows k={k} ok" in out
     assert "fine-mesh raise ok" in out
-    assert "paper-grid temporal k=2 ok" in out
+    assert "fine-mesh remedy (shard cols) ok" in out
+    # ISSUE 4 acceptance: paper grid on the 2x4 rows x cols mesh, k in
+    # {1, 2, 3}, both inners, overlap bit-match.
+    for k in (1, 2, 3):
+        assert f"paper-grid 2x4 k={k} ok (both inners, overlap bit-match)" in out

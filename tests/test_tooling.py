@@ -25,12 +25,23 @@ DEP_SKIP = """<?xml version="1.0" encoding="utf-8"?>
 </testsuite></testsuites>
 """
 
+MESH_SKIP = """<?xml version="1.0" encoding="utf-8"?>
+<testsuites><testsuite name="pytest" tests="2" skipped="1">
+  <testcase classname="tests.test_conformance_matrix" name="test_conformance_mesh[2x4]" time="0.0">
+    <skipped type="pytest.skip" message="mesh 2x4 unavailable: needs 8 devices, have 1"/>
+  </testcase>
+  <testcase classname="tests.test_conformance_matrix" name="test_conformance_mesh[1x8]" time="0.1"/>
+</testsuite></testsuites>
+"""
 
-def _run(xml: str, tmp_path):
+
+def _run(xml: str, tmp_path, *flags):
     report = tmp_path / "report.xml"
     report.write_text(xml)
     return subprocess.run(
-        [sys.executable, str(SCRIPT), str(report)], capture_output=True, text=True
+        [sys.executable, str(SCRIPT), str(report), *flags],
+        capture_output=True,
+        text=True,
     )
 
 
@@ -43,6 +54,21 @@ def test_fails_on_missing_dependency_skip(tmp_path):
     proc = _run(DEP_SKIP, tmp_path)
     assert proc.returncode == 1
     assert "hypothesis" in proc.stdout
+
+
+def test_mesh_skips_pass_by_default_fail_with_flag(tmp_path):
+    """Tier-1 legitimately skips 8-device meshes; the multidev-2d job must
+    not — --fail-on-mesh-skips flips skipped mesh shapes into failures."""
+    proc = _run(MESH_SKIP, tmp_path)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    proc = _run(MESH_SKIP, tmp_path, "--fail-on-mesh-skips")
+    assert proc.returncode == 1
+    assert "2x4" in proc.stdout
+
+
+def test_dep_skips_still_fail_with_mesh_flag(tmp_path):
+    proc = _run(DEP_SKIP, tmp_path, "--fail-on-mesh-skips")
+    assert proc.returncode == 1
 
 
 def test_usage_error_without_report():
