@@ -24,6 +24,7 @@ def main() -> None:
         fig10_scaling,
         fig11_elementary,
         fig12_temporal,
+        fig13_multifield,
         table2_comparison,
         wkv6_chunking,
     )
@@ -34,6 +35,7 @@ def main() -> None:
         "fig10": fig10_scaling.run,
         "fig11": fig11_elementary.run,
         "fig12": fig12_temporal.run,
+        "fig13": fig13_multifield.run,
         "table2": table2_comparison.run,
         "analytic": analytical_vs_compiled.run,
         "wkv6": wkv6_chunking.run,

@@ -1,0 +1,166 @@
+#!/usr/bin/env python
+"""Benchmark smoke runner: reduced-grid fig runs -> machine-readable
+``BENCH_<fig>.json`` records, the perf-trajectory artifacts CI uploads.
+
+Until now the benchmark suite only printed CSV rows to stdout, so the repo
+never accumulated a perf trajectory (``BENCH_*.json`` had never been
+produced). This script runs fig10 / fig11 / fig12 / fig13 on a reduced grid
+(the paper's 64 x 256 x 256 shrinks to ``--depth/--rows/--cols``, patched
+into ``benchmarks.common`` BEFORE the fig modules import it, plus each
+fig's ``fast=True`` mode) and writes one JSON record per fig with:
+
+  * ``rows``          — the raw ``(name, value, derived)`` benchmark rows;
+  * ``parity_ok``     — every in-benchmark parity check held (fig10/12/13
+                        raise on divergence; fig11 marks rows parity=FAIL);
+  * ``wire_ratios``   — every measured-vs-model wire-byte ratio parsed
+                        from the rows (fig10/fig13 emit ``ratio=...`` for
+                        each real 8-fake-device halo measurement);
+  * ``wall_clock_s``  — wall time of the whole fig run;
+  * ``error``         — the exception message when the run blew up.
+
+Exit status is nonzero when any fig failed parity, emitted no rows, or
+produced a wire ratio outside [0.99, 1.01] — so the CI bench-smoke job is a
+real gate, not just an artifact producer.
+
+Usage: PYTHONPATH=src python scripts/bench_smoke.py --out-dir bench
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+# Runnable as `python scripts/bench_smoke.py`: the benchmarks package lives
+# at the repo root, which is not on sys.path in that invocation.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+RATIO_RE = re.compile(r"ratio=([0-9]+(?:\.[0-9]+)?|nan)")
+RATIO_LO, RATIO_HI = 0.99, 1.01
+DEFAULT_FIGS = ("fig10", "fig11", "fig12", "fig13")
+
+
+def extract_wire_ratios(rows) -> list[float]:
+    """Every measured-vs-model ratio stamped into the rows' derived column."""
+    return [
+        float(m)
+        for _name, _value, derived in rows
+        for m in RATIO_RE.findall(derived)
+    ]
+
+
+def rows_parity_ok(rows) -> bool:
+    """fig11-style rows carry parity=ok / parity=FAIL inline (the other figs
+    raise on parity failure, which the caller turns into error != None)."""
+    return not any("parity=FAIL" in derived for _n, _v, derived in rows)
+
+
+def gate_record(record, lo: float = RATIO_LO, hi: float = RATIO_HI) -> list[str]:
+    """The CI gate: returns the reasons this record fails, [] when clean."""
+    problems = []
+    if record.get("error"):
+        problems.append(f"run failed: {record['error']}")
+    if not record.get("parity_ok", False):
+        problems.append("parity failure")
+    if not record.get("rows"):
+        problems.append("no benchmark rows emitted")
+    for ratio in record.get("wire_ratios", ()):
+        if not (lo <= ratio <= hi):
+            problems.append(
+                f"wire-byte measured/model ratio {ratio} outside [{lo}, {hi}]"
+            )
+    return problems
+
+
+def run_figs(figs, depth: int, rows: int, cols: int):
+    """Imports the fig modules against the reduced grid and runs each,
+    yielding one record dict per fig. Import happens HERE so the grid patch
+    lands before the fig modules read ROWS/COLS/DEPTH at import time."""
+    import benchmarks.common as common
+
+    common.DEPTH, common.ROWS, common.COLS = depth, rows, cols
+    from benchmarks import (  # noqa: E402  (grid must be patched first)
+        fig10_scaling,
+        fig11_elementary,
+        fig12_temporal,
+        fig13_multifield,
+    )
+
+    runners = {
+        "fig10": fig10_scaling.run,
+        "fig11": fig11_elementary.run,
+        "fig12": fig12_temporal.run,
+        "fig13": fig13_multifield.run,
+    }
+    unknown = [f for f in figs if f not in runners]
+    if unknown:
+        raise SystemExit(f"unknown fig(s) {unknown}; choose from {sorted(runners)}")
+
+    for fig in figs:
+        start_rows = len(common.all_rows())
+        t0 = time.perf_counter()
+        error = None
+        try:
+            runners[fig](fast=True)
+        except Exception as e:  # parity asserts / subprocess failures land here
+            error = f"{type(e).__name__}: {e}"
+        wall = time.perf_counter() - t0
+        rows_out = common.all_rows()[start_rows:]
+        yield {
+            "fig": fig,
+            "grid": {"depth": depth, "rows": rows, "cols": cols},
+            "wall_clock_s": round(wall, 3),
+            "parity_ok": error is None and rows_parity_ok(rows_out),
+            "wire_ratios": extract_wire_ratios(rows_out),
+            "error": error,
+            "rows": [
+                {"name": n, "value": v, "derived": d} for n, v, d in rows_out
+            ],
+        }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out-dir", default=".", help="where BENCH_<fig>.json land")
+    ap.add_argument(
+        "--figs", default=",".join(DEFAULT_FIGS),
+        help="comma-separated fig subset (default: %(default)s)",
+    )
+    ap.add_argument("--depth", type=int, default=8, help="reduced grid depth")
+    ap.add_argument("--rows", type=int, default=128, help="reduced grid rows")
+    ap.add_argument("--cols", type=int, default=128, help="reduced grid cols")
+    args = ap.parse_args(argv)
+
+    from pathlib import Path
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    figs = [f for f in args.figs.split(",") if f]
+
+    failures = []
+    for record in run_figs(figs, args.depth, args.rows, args.cols):
+        path = out_dir / f"BENCH_{record['fig']}.json"
+        path.write_text(json.dumps(record, indent=2) + "\n")
+        problems = gate_record(record)
+        status = "OK" if not problems else "FAIL"
+        ratios = record["wire_ratios"]
+        print(
+            f"{record['fig']}: {status} rows={len(record['rows'])} "
+            f"wire_ratios={ratios} wall={record['wall_clock_s']}s -> {path}"
+        )
+        for p in problems:
+            print(f"  - {p}")
+        if problems:
+            failures.append(record["fig"])
+    if failures:
+        print(f"bench smoke FAILED for: {', '.join(failures)}", file=sys.stderr)
+        return 1
+    print(f"bench smoke ok: {len(figs)} fig(s) recorded in {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

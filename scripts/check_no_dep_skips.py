@@ -16,7 +16,10 @@ multidev-2d job — whose whole point is those meshes — it would be silent
 coverage loss, so that job passes ``--fail-on-mesh-skips``.
 
 Usage: run pytest with ``--junitxml=report.xml``, then
-``python scripts/check_no_dep_skips.py report.xml [--fail-on-mesh-skips]``.
+``python scripts/check_no_dep_skips.py report.xml [more-reports.xml ...]
+[--fail-on-mesh-skips]``. Several reports can be gated in one call (the
+bench-smoke CI job produces one junitxml per pytest invocation and gates
+them together); the exit code is the OR over all of them.
 """
 
 from __future__ import annotations
@@ -64,30 +67,39 @@ def main(argv: list[str]) -> int:
     fail_on_mesh = "--fail-on-mesh-skips" in args
     if fail_on_mesh:
         args.remove("--fail-on-mesh-skips")
-    if len(args) != 1:
+    unknown = [a for a in args if a.startswith("-")]
+    if unknown or not args:
         print(
-            f"usage: {argv[0]} <junit-report.xml> [--fail-on-mesh-skips]",
+            f"usage: {argv[0]} <junit-report.xml> [more-reports.xml ...] "
+            "[--fail-on-mesh-skips]",
             file=sys.stderr,
         )
         return 2
-    report = args[0]
     rc = 0
-    bad = find_dependency_skips(report)
-    if bad:
-        print("tests skipped for missing dev dependencies (install '.[dev]'):")
-        for line in bad:
-            print(f"  - {line}")
-        rc = 1
-    if fail_on_mesh:
-        mesh_bad = find_mesh_skips(report)
-        if mesh_bad:
-            print("mesh shapes skipped (multi-device coverage silently dropped):")
-            for line in mesh_bad:
+    for report in args:
+        bad = find_dependency_skips(report)
+        if bad:
+            print(
+                f"{report}: tests skipped for missing dev dependencies "
+                "(install '.[dev]'):"
+            )
+            for line in bad:
                 print(f"  - {line}")
             rc = 1
+        if fail_on_mesh:
+            mesh_bad = find_mesh_skips(report)
+            if mesh_bad:
+                print(
+                    f"{report}: mesh shapes skipped (multi-device coverage "
+                    "silently dropped):"
+                )
+                for line in mesh_bad:
+                    print(f"  - {line}")
+                rc = 1
     if rc == 0:
+        reports = f"{len(args)} report(s)" if len(args) > 1 else args[0]
         print(
-            "no dependency-driven skips found"
+            f"no dependency-driven skips found in {reports}"
             + (" (mesh skips also checked)" if fail_on_mesh else "")
         )
     return rc

@@ -91,8 +91,8 @@ class CompoundStencil:
         )
         self._fused = lower_reference(program, mode="fused")
         self._staged = lower_reference(program, mode="staged")
-        # Built lazily: lower_pallas only supports single-input programs, and
-        # the other two policies must keep working for multi-input DAGs.
+        # Built lazily: kernel codegen is the expensive lowering, and many
+        # callers only ever use the reference policies.
         self._pallas: Callable[[Array], Array] | None = None
 
     # -- execution policies ------------------------------------------------

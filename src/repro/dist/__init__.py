@@ -22,6 +22,9 @@ from repro.dist.halo import (
     halo_exchange_bytes_per_shard,
     make_sharded_hdiff,
     owned_rows_mask,
+    program_exchange_radii,
+    program_halo_exchange_bytes,
+    program_halo_exchange_bytes_per_shard,
 )
 from repro.dist.reduce import compress_bf16, decompress_bf16, reduce_gradients
 from repro.dist.sharding import (
@@ -42,6 +45,9 @@ __all__ = [
     "halo_exchange_bytes_per_shard",
     "make_sharded_hdiff",
     "owned_rows_mask",
+    "program_exchange_radii",
+    "program_halo_exchange_bytes",
+    "program_halo_exchange_bytes_per_shard",
     "reduce_gradients",
     "sharding_for",
     "spec_for",

@@ -258,6 +258,70 @@ def halo_exchange_bytes_per_shard(
     return total * itemsize
 
 
+def program_exchange_radii(program) -> dict[str, int]:
+    """Per-field EXCHANGED halo depth: delegates to
+    :meth:`repro.ir.graph.StencilProgram.exchange_radii`, the one home of
+    the rule, so the byte models here, ``lower_sharded``'s exchange and
+    ``lower_pallas``'s in-tile halos can never drift apart."""
+    return program.exchange_radii()
+
+
+def program_halo_exchange_bytes(
+    program,
+    depth: int,
+    rows: int,
+    cols: int,
+    row_shards: int,
+    itemsize: int = 4,
+    col_shards: int = 1,
+) -> int:
+    """Whole-mesh wire bytes for ONE exchange round of a (possibly
+    multi-field, possibly temporally-composed) IR program: the per-field
+    sum of :func:`halo_exchange_bytes`.
+
+    The evolving (:attr:`~repro.ir.graph.StencilProgram.passthrough`) field
+    exchanges the program's full chain radius; every other input exchanges
+    its own composed access radius (``field_radii``), so a radius-0
+    coefficient field contributes ZERO bytes. Temporal blocking is already
+    baked into the composed radii (``repeat(p, k)``'s state radius is k*r),
+    so no ``steps`` factor appears — one round still serves the whole
+    chain. For a single-input program this reduces exactly to
+    ``halo_exchange_bytes(..., halo=program.radius)``.
+
+    Matches what ``repro.ir.lower_sharded`` puts on the wire exactly
+    (measured per-chip in fig10/fig13 via ``parse_collective_bytes``).
+    """
+    return sum(
+        halo_exchange_bytes(
+            depth, rows, cols, row_shards,
+            itemsize=itemsize, halo=r, col_shards=col_shards,
+        )
+        for r in program_exchange_radii(program).values()
+    )
+
+
+def program_halo_exchange_bytes_per_shard(
+    program,
+    local_depth: int,
+    local_rows: int,
+    local_cols: int,
+    itemsize: int = 4,
+    row_sharded: bool = True,
+    col_sharded: bool = False,
+) -> int:
+    """Per-chip collective-permute RESULT bytes for one multi-field exchange
+    round — the per-field sum of :func:`halo_exchange_bytes_per_shard`
+    (what ``parse_collective_bytes`` measures on the compiled program)."""
+    return sum(
+        halo_exchange_bytes_per_shard(
+            local_depth, local_rows, local_cols,
+            itemsize=itemsize, halo=r,
+            row_sharded=row_sharded, col_sharded=col_sharded,
+        )
+        for r in program_exchange_radii(program).values()
+    )
+
+
 def make_sharded_hdiff(
     mesh,
     *,

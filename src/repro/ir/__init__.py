@@ -13,6 +13,13 @@ Temporal blocking rides the same pipeline: ``repeat(p, k)`` /
 backend executes per-sweep (absolute-row ring passthrough), amortising HBM
 and wire round-trips k-fold per simulated step.
 
+Multi-field programs are first-class: declare extra inputs (coefficients,
+velocities) and every backend takes a ``{field: array}`` mapping. Halos,
+reads and wire bytes derive PER FIELD (``field_radii`` / ``reads_by_field``)
+and sum — the Pallas kernel sizes each field's three-slab halo by its own
+radius, and the sharded lowering skips the exchange for radius-0 fields.
+``vadvc_program`` / ``hdiff_coupled_program`` are the shipped workloads.
+
 This package is self-contained (no imports from other ``repro`` modules at
 import time), so ``repro.core`` and ``repro.kernels`` derive their specs and
 tile plans from it without cycles.
@@ -27,9 +34,11 @@ from repro.ir.graph import (
     StencilProgram,
     repeat,
 )
-from repro.ir.ops import affine, flux, scaled_residual
+from repro.ir.ops import affine, flux, product, scaled_residual, weighted_residual
 from repro.ir.programs import (
     ELEMENTARY_PROGRAMS,
+    MULTIFIELD_PROGRAMS,
+    hdiff_coupled_program,
     hdiff_multistep_program,
     hdiff_program,
     jacobi1d_program,
@@ -38,15 +47,19 @@ from repro.ir.programs import (
     jacobi2d_9pt_program,
     laplacian_program,
     seidel2d_program,
+    smagorinsky_coeff,
+    vadvc_program,
 )
 from repro.ir.evaluate import (
     apply_program,
     embed_interior,
     interior_eval,
     interior_region,
+    resolve_field_arrays,
     ring_crop,
     slab_step,
     slab_sweep,
+    thread_chain,
 )
 from repro.ir.plan import (
     DEFAULT_VMEM_TILE_BUDGET,

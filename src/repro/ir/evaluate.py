@@ -10,6 +10,7 @@ full-shape grid with the paper's boundary passthrough.
 
 from __future__ import annotations
 
+import functools
 from typing import Mapping
 
 import jax
@@ -23,6 +24,68 @@ Array = jax.Array
 def _window(arr: Array, starts, sizes) -> Array:
     idx = (Ellipsis,) + tuple(slice(s, s + z) for s, z in zip(starts, sizes))
     return arr[idx]
+
+
+def resolve_field_arrays(program: StencilProgram, x, *, ndim: int | None = None):
+    """Validates a lowering input and returns one array per declared field,
+    in ``program.inputs`` order — the single home of the field-mapping
+    contract every backend shares.
+
+    ``x`` is a bare array (single-input programs only) or a
+    ``{field: array}`` mapping covering every declared input; all arrays
+    must share one grid, and ``ndim`` (when given) pins the expected array
+    rank (e.g. 3 for the ``(depth, rows, cols)`` kernels).
+    """
+    fields = program.inputs
+    if isinstance(x, Mapping):
+        missing = [f for f in fields if f not in x]
+        if missing:
+            raise ValueError(
+                f"program {program.name!r} field mapping is missing "
+                f"input(s) {missing}; declared inputs are {list(fields)}"
+            )
+        arrays = tuple(x[f] for f in fields)
+    else:
+        if len(fields) != 1:
+            raise ValueError(
+                f"program {program.name!r} has inputs {fields}; pass a mapping"
+            )
+        arrays = (x,)
+    for f, a in zip(fields, arrays):
+        if ndim is not None and a.ndim != ndim:
+            raise ValueError(
+                f"expected {'(depth, rows, cols)' if ndim == 3 else f'{ndim}-D'} "
+                f"for field {f!r}, got shape {a.shape}"
+            )
+        if a.shape != arrays[0].shape:
+            raise ValueError(
+                f"all input fields must share one grid; {f!r} has shape "
+                f"{a.shape} vs {fields[0]!r} {arrays[0].shape}"
+            )
+    return arrays
+
+
+def thread_chain(program: StencilProgram, x, steps) -> Array:
+    """Runs a composed program's per-sweep callables with the shared-field
+    threading convention: the ``passthrough`` field evolves sweep-to-sweep,
+    every other input feeds each sweep unchanged. ``steps`` pairs each
+    chain entry with its executor: ``[(sub_program, callable), ...]``.
+
+    The one home of the convention — ``apply_program`` and the staged
+    reference lowering both run through here, so their error behaviour and
+    semantics cannot drift apart.
+    """
+    arrays = resolve_field_arrays(program, x)
+    shared = dict(zip(program.inputs, arrays))
+    arr = shared[program.passthrough] if isinstance(x, Mapping) else arrays[0]
+    for p, step in steps:
+        if len(p.inputs) == 1:
+            arr = step(arr)
+        else:
+            sub = {f: shared[f] for f in p.inputs if f != p.passthrough}
+            sub[p.passthrough] = arr
+            arr = step(sub)
+    return arr
 
 
 def op_views(op, env: Mapping[str, Array], margins, grid: tuple[int, ...], nd: int):
@@ -101,15 +164,24 @@ def slab_step(
     rows_total,
     col_ids: Array | None = None,
     cols_total=None,
+    extras: Mapping[str, Array] | None = None,
 ) -> Array:
     """One sweep of a (single-sweep) program over a slab — the per-step body
     of every temporal-blocked lowering.
 
-    ``slab`` is ``(..., n, m)`` real data; ``row_ids`` gives the GLOBAL row
-    index of each of the ``n - 2r`` rows produced, shaped ``(n - 2r,)`` or
-    ``(n - 2r, 1)``. Rows whose global index falls in the radius-``r``
-    boundary ring keep the slab's current value (the per-sweep passthrough
-    that makes k fused sweeps bit-match k full-shape applications).
+    ``slab`` is ``(..., n, m)`` real data for the program's *evolving*
+    (:attr:`~repro.ir.graph.StencilProgram.passthrough`) field; ``row_ids``
+    gives the GLOBAL row index of each of the ``n - 2r`` rows produced,
+    shaped ``(n - 2r,)`` or ``(n - 2r, 1)``. Rows whose global index falls
+    in the radius-``r`` boundary ring keep the slab's current value (the
+    per-sweep passthrough that makes k fused sweeps bit-match k full-shape
+    applications).
+
+    ``extras`` supplies the program's non-evolving input fields (diffusion
+    coefficients, velocities), each on the SAME grid as ``slab``. They are
+    read, never written: the boundary ring applies to the evolving field
+    only, and extras pass between sweeps unchanged (``slab_sweep`` slices
+    them to follow the shrinking state slab).
 
     Columns come in two modes, mirroring how the caller decomposed them:
 
@@ -124,7 +196,13 @@ def slab_step(
         index exactly like rows. Returns ``(..., n - 2r, m - 2r)``.
     """
     r = program.radius
-    vals = ring_crop(program, interior_eval(program, {program.inputs[0]: slab}))
+    # State LAST, like thread_chain: a chain entry's passthrough name may
+    # collide with a composed program's shared field (compose renames the
+    # merged DAG but the chain keeps original names), and the evolving slab
+    # must win that collision or the sweep runs on the wrong array.
+    arrays = dict(extras) if extras else {}
+    arrays[program.passthrough] = slab
+    vals = ring_crop(program, interior_eval(program, arrays))
     if r == 0:
         return vals.astype(slab.dtype)
     keep_r = (row_ids < r) | (row_ids >= rows_total - r)
@@ -149,6 +227,7 @@ def slab_sweep(
     rows_total,
     col_offset=None,
     cols_total=None,
+    extras: Mapping[str, Array] | None = None,
 ) -> Array:
     """Runs ``program``'s whole chain over ``slab`` via :func:`slab_step`.
 
@@ -158,24 +237,43 @@ def slab_sweep(
     fewer rows than the input. With ``col_offset`` / ``cols_total`` given
     the slab is column-decomposed too (2-D domain decomposition): columns
     shrink and ring-pass-through by ABSOLUTE index exactly like rows.
+
+    ``extras`` maps the program's non-evolving inputs to slabs on the SAME
+    initial grid as ``slab`` (values only needed within each field's
+    composed radius of the kept region — callers zero-pad the rest). They
+    are constant across sweeps; each sweep reads them through a view inset
+    by the state's cumulative shrink so all fields stay grid-aligned.
     """
     base_r = row_offset
     base_c = col_offset
+    n0 = slab.shape[-2]
+    m0 = slab.shape[-1]
+    inset = 0  # cumulative state shrink vs the extras' (initial) grid
     for prog in program.chain:
         r = prog.radius
         n = slab.shape[-2]
+        ex = None
+        if extras:
+            if col_offset is None:
+                ex = {f: a[..., inset : n0 - inset, :] for f, a in extras.items()}
+            else:
+                ex = {
+                    f: a[..., inset : n0 - inset, inset : m0 - inset]
+                    for f, a in extras.items()
+                }
         # 2-D iota: 1-D iota is unsupported by the TPU Mosaic lowering.
         ids = base_r + r + jax.lax.broadcasted_iota(jnp.int32, (n - 2 * r, 1), 0)
         if col_offset is None:
-            slab = slab_step(prog, slab, ids, rows_total)
+            slab = slab_step(prog, slab, ids, rows_total, extras=ex)
         else:
             m = slab.shape[-1]
             cids = base_c + r + jax.lax.broadcasted_iota(
                 jnp.int32, (1, m - 2 * r), 1
             )
-            slab = slab_step(prog, slab, ids, rows_total, cids, cols_total)
+            slab = slab_step(prog, slab, ids, rows_total, cids, cols_total, extras=ex)
             base_c = base_c + r
         base_r = base_r + r
+        inset += r
     return slab
 
 
@@ -186,12 +284,13 @@ def apply_program(
     through from the ``passthrough`` source field (matches the hand-written
     kernels' contract). A composed program applies its chain sweep by sweep,
     re-applying the ring passthrough between sweeps — the oracle semantics
-    of ``repeat(p, k)``."""
+    of ``repeat(p, k)``. For a multi-field chain the ``passthrough`` field
+    evolves while the shared inputs (coefficients, velocities) feed every
+    sweep unchanged."""
     if program.steps > 1:
-        arr = x[program.inputs[0]] if isinstance(x, Mapping) else x
-        for p in program.chain:
-            arr = apply_program(p, arr)
-        return arr
+        return thread_chain(
+            program, x, [(p, functools.partial(apply_program, p)) for p in program.chain]
+        )
     if isinstance(x, Mapping):
         arrays = dict(x)
     else:

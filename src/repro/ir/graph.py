@@ -15,6 +15,11 @@ is derived from the graph:
     is consumed at the 5 star offsets, hence "5 Laplacians x 5 MACs" in
     Eq. 5), and ``reads`` is the size of the program's composed access
     footprint on its source fields.
+  * **per-field analysis** — every input field's composed access radius and
+    footprint size derive separately (:meth:`StencilProgram.field_radii`,
+    :meth:`StencilProgram.reads_by_field`) and SUM to the program totals,
+    so multi-field programs (velocity + scalar advection, coefficient-field
+    diffusion) get per-field halos and per-field wire accounting for free.
   * **temporal blocking** — :meth:`StencilProgram.compose` / :func:`repeat`
     fuse k sequential sweeps into one program (the §1 "pipelining different
     timesteps" insight): the merged DAG drives the analysis (radii add, so
@@ -199,6 +204,53 @@ class StencilProgram:
         lo, hi = self.halo()
         return max(max(lo, default=0), max(hi, default=0))
 
+    # -- analysis: per-field access radii / reads -----------------------------
+
+    def field_radii(self) -> dict[str, int]:
+        """Per-input composed access radius: the max |component| over the
+        field's composed footprint (0 for an input the output never reads).
+
+        This is what sizes each field's halo independently: a coefficient
+        field read only at offset zero needs NO halo exchange even when the
+        state field's radius is 2, and under ``repeat(p, k)`` the per-field
+        radii compose separately (the state grows by r per sweep; a
+        zero-offset auxiliary grows by r per *earlier* sweep, i.e. to
+        ``(k-1) * r``). ``max(field_radii().values()) == radius`` — the
+        program radius is the widest field's reach.
+        """
+        fp = self.footprints()
+        return {
+            f: max((max(abs(c) for c in o) for o in fp[f]), default=0)
+            for f in self.inputs
+        }
+
+    def field_radius(self, field: str) -> int:
+        if field not in self.inputs:
+            raise ValueError(
+                f"{field!r} is not an input of program {self.name!r} "
+                f"(inputs: {self.inputs})"
+            )
+        return self.field_radii()[field]
+
+    def exchange_radii(self) -> dict[str, int]:
+        """Per-field EXCHANGED halo depth — the ONE home of the rule every
+        lowering and wire model shares: the evolving :attr:`passthrough`
+        field moves the program's full chain radius (its ring rows must
+        carry true passthrough values), every other input only its own
+        composed access radius (0 means no exchange at all)."""
+        radii = self.field_radii()
+        radii[self.passthrough] = self.radius
+        return radii
+
+    def reads_by_field(self) -> dict[str, int]:
+        """Per-input composed footprint size — the §3.1 ``reads`` term,
+        split per field. ``sum(reads_by_field().values()) == spec().reads``
+        (the property tests pin this): multi-field op/byte accounting is
+        the per-field sum, and a single-input program degenerates to the
+        scalar accounting exactly."""
+        fp = self.footprints()
+        return {f: len(fp[f]) for f in self.inputs}
+
     # -- temporal composition -------------------------------------------------
 
     @property
@@ -222,31 +274,57 @@ class StencilProgram:
 
     def compose(self, other: "StencilProgram", *, name: str | None = None) -> "StencilProgram":
         """Sequential composition: apply ``self``, then feed its output to
-        ``other`` (both single-input, same ndim).
+        ``other``'s *evolving* field (same ndim).
+
+        The evolving field is ``other``'s :attr:`passthrough` input — the
+        state the sweep updates. Every other input of ``other`` is a SHARED
+        field (a coefficient, a velocity): it must also be an input of
+        ``self`` and is read from the same source array in both sweeps. For
+        single-input programs this degenerates to the classic rule (the
+        sole input is the passthrough, there is nothing to share).
 
         The returned program's DAG inlines ``other`` after ``self`` with
-        ``other``'s input bound to ``self``'s output (fields renamed to stay
-        unique), so offsets compose by Minkowski sum and the inferred radii
-        ADD. Its :attr:`chain` concatenates both chains — the lowerings use
-        it to apply the per-sweep boundary passthrough.
+        the evolving input bound to ``self``'s output (op fields renamed to
+        stay unique), so offsets compose by Minkowski sum and the inferred
+        radii ADD — per field: the state's radii sum, while a shared
+        field's composed radius grows by the *downstream* sweeps' radii
+        (see :meth:`field_radii`). Its :attr:`chain` concatenates both
+        chains — the lowerings use it to apply the per-sweep boundary
+        passthrough to the evolving field only.
         """
         if self.ndim != other.ndim:
             raise ValueError(f"ndim mismatch: {self.ndim} vs {other.ndim}")
-        if len(self.inputs) != 1 or len(other.inputs) != 1:
+        shared = [f for f in other.inputs if f != other.passthrough]
+        missing = [f for f in shared if f not in self.inputs]
+        if missing:
             raise ValueError(
-                "compose needs single-input programs, got "
-                f"{self.inputs} and {other.inputs}"
+                f"compose: {other.name!r} reads shared field(s) {missing} that "
+                f"are not inputs of {self.name!r} (inputs: {self.inputs}); "
+                "shared (non-evolving) fields must be common source inputs"
             )
-        taken = {self.inputs[0], *(op.name for op in self.ops)}
+        if self.passthrough in shared:
+            # The slab lowerings overwrite the evolving field in place
+            # sweep-to-sweep, so a later sweep cannot also read its ORIGINAL
+            # (pre-sweep) values as a shared input — reject rather than let
+            # backends disagree (the full-shape reference could thread it,
+            # the slab/Pallas/sharded paths cannot).
+            raise ValueError(
+                f"compose: {other.name!r} reads the evolving field "
+                f"{self.passthrough!r} as a shared (non-evolving) input; a "
+                "downstream sweep only sees the UPDATED state, never the "
+                "original field — restructure the program so the original "
+                "values flow through a distinct source input"
+            )
+        taken = {*self.inputs, *(op.name for op in self.ops)}
         tag = self.steps
         while any(f"{op.name}@{tag}" in taken for op in other.ops):
             tag += 1
-        rename = {other.inputs[0]: self.output}
+        rename = {other.passthrough: self.output}
         rename.update({op.name: f"{op.name}@{tag}" for op in other.ops})
         appended = tuple(
             StencilOp(
                 name=rename[op.name],
-                reads=tuple(Read(rename[r.field], r.offset) for r in op.reads),
+                reads=tuple(Read(rename.get(r.field, r.field), r.offset) for r in op.reads),
                 compute=op.compute,
                 cost=op.cost,
             )
@@ -312,13 +390,15 @@ def repeat(program: StencilProgram, k: int) -> StencilProgram:
     chain gives the lowerings their per-sweep structure — one HBM / wire
     round-trip then serves ``k`` simulated timesteps. ``k == 1`` returns
     ``program`` unchanged.
+
+    Multi-field programs repeat too: the :attr:`StencilProgram.passthrough`
+    field evolves sweep-to-sweep while the remaining inputs (coefficients,
+    velocities) are shared across sweeps, so e.g. a zero-offset coefficient
+    field's composed radius grows to ``(k-1) * p.radius`` (read through
+    ``k-1`` downstream sweeps) while the state's grows to ``k * p.radius``.
     """
     if not isinstance(k, int) or isinstance(k, bool) or k < 1:
         raise ValueError(f"k must be a positive int, got {k!r}")
-    if len(program.inputs) != 1:
-        raise ValueError(
-            f"repeat needs a single-input program, got inputs {program.inputs}"
-        )
     out = program
     for i in range(2, k + 1):
         out = out.compose(program, name=f"{program.name}_x{i}")

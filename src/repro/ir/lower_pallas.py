@@ -1,13 +1,20 @@
 """Fused-Pallas lowering: generic VMEM-resident tile codegen for IR programs.
 
 Generalises the hand-fused hdiff kernel (``repro.kernels.hdiff.kernel``) to
-any single-input program: one program instance owns one row-tile of one
-plane; the row halo (the program's full chain radius) is provided by the
-same three-slab trick (the input passed with block index maps ``i-1 / i /
-i+1``, clamped at the edges), and the whole DAG is evaluated in VMEM by
-``interior_eval`` — intermediates never touch HBM, the paper's
-accumulator-residency discipline. Block shape comes from the shared VMEM
-budget planner (``repro.ir.plan``).
+any 2-D program: one program instance owns one row-tile of one plane; the
+row halo is provided by the three-slab trick (each input passed with block
+index maps ``i-1 / i / i+1``, clamped at the edges), and the whole DAG is
+evaluated in VMEM by ``interior_eval`` — intermediates never touch HBM, the
+paper's accumulator-residency discipline. Block shape comes from the shared
+VMEM budget planner (``repro.ir.plan``).
+
+Multi-field programs get N input refs, one per declared field, each with a
+three-slab halo sized by THAT field's composed radius (``field_radii``): the
+evolving state carries the full chain radius, a destaggered velocity its own
+smaller reach, and a radius-0 coefficient field streams exactly one block
+per tile with no neighbour fetches at all. Shallower-halo fields are
+zero-padded up to the common state grid inside the kernel — pad rows are
+never read into a kept output point, which is what keeps the padding free.
 
 Temporal blocking is first-class: a composed program (``repeat(p, k)``)
 loads its tile ONCE with a depth-``k*r`` halo and applies the chain's k
@@ -31,16 +38,21 @@ halo handled in-tile, mirroring ``kernels.stencil2d.jacobi1d_pallas``.
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from typing import Callable, Mapping
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.ir.evaluate import interior_eval, ring_crop, slab_sweep
+from repro.ir.evaluate import (
+    interior_eval,
+    resolve_field_arrays,
+    ring_crop,
+    slab_sweep,
+)
 from repro.ir.graph import StencilProgram
-from repro.ir.plan import pick_block_rows
+from repro.ir.plan import pick_block_rows, vmem_tile_budget
 
 Array = jax.Array
 
@@ -58,18 +70,28 @@ def _embed_cols(cur: Array, interior: Array, r: int) -> Array:
 
 
 def _generic_kernel(
-    prev_ref, cur_ref, next_ref, meta_ref, out_ref, *, program, block_rows, halo,
-    col_sharded,
+    *refs, program, block_rows, halo, col_sharded, field_halos,
 ):
     """Kernel body: blocks are (1, block_rows, C); grid is (depth, row_tiles).
 
-    ``halo`` is the program's full chain radius: the three-slab halo is
-    ``halo`` rows from each neighbour block, and each of the chain's sweeps
-    shrinks the slab by its own radius while re-applying the global
-    radius-r ring at ABSOLUTE row indices (``meta_ref`` holds the traced
-    ``(row_offset, rows_global, col_offset, cols_global)`` tuple —
-    ``(0, rows, 0, cols)`` standalone, the shard's global placement under
-    ``lower_sharded``).
+    ``refs`` lays out, per input field in ``program.inputs`` order, a
+    ``(prev, cur, next)`` three-slab triple when that field's halo is
+    nonzero or a lone ``cur`` when it is zero, followed by ``meta_ref`` and
+    ``out_ref``. ``field_halos[f]`` is the field's composed chain radius —
+    the evolving (passthrough) field carries the program's full chain
+    radius ``halo`` (its ring rows must hold true values for the
+    passthrough), every other field only the rows it is actually read at
+    (a radius-0 coefficient fetches ONE block, no neighbours). Fields with
+    a shallower halo are zero-padded up to the common ``halo`` grid — the
+    pad rows are provably never read into a kept output point (reads reach
+    at most the field's composed radius past the kept region).
+
+    Each of the chain's sweeps shrinks the state slab by its own radius
+    while re-applying the global radius-r ring at ABSOLUTE row indices
+    (``meta_ref`` holds the traced ``(row_offset, rows_global, col_offset,
+    cols_global)`` tuple — ``(0, rows, 0, cols)`` standalone, the shard's
+    global placement under ``lower_sharded``); non-evolving fields feed
+    every sweep through grid-aligned views (``slab_sweep`` extras).
 
     ``col_sharded`` (static) selects the column mode: False keeps the
     full-width sweep (columns never tiled — the array carries the whole
@@ -79,28 +101,48 @@ def _generic_kernel(
     result is re-embedded so the output block keeps the input width (the
     caller slices the stale halo columns off).
     """
+    out_ref = refs[-1]
+    meta_ref = refs[-2]
     i = pl.program_id(1)
-    cur = cur_ref[0].astype(jnp.float32)
-    if halo:
-        x = jnp.concatenate(
-            [
-                prev_ref[0, -halo:, :].astype(jnp.float32),
-                cur,
-                next_ref[0, :halo, :].astype(jnp.float32),
-            ],
-            axis=0,
-        )  # (block_rows + 2*halo, C)
-    else:
-        x = cur
-    base = meta_ref[0, 0] + i * block_rows - halo  # global id of x's first row
+    it = iter(refs[:-2])
+    slabs: dict[str, jax.Array] = {}
+    state_cur = None
+    for f in program.inputs:
+        hf = field_halos[f]
+        if hf:
+            prev_ref, cur_ref, next_ref = next(it), next(it), next(it)
+            cur = cur_ref[0].astype(jnp.float32)
+            x = jnp.concatenate(
+                [
+                    prev_ref[0, -hf:, :].astype(jnp.float32),
+                    cur,
+                    next_ref[0, :hf, :].astype(jnp.float32),
+                ],
+                axis=0,
+            )  # (block_rows + 2*hf, C)
+        else:
+            cur = next(it)[0].astype(jnp.float32)
+            x = cur
+        if hf < halo:
+            pad = jnp.zeros((halo - hf, x.shape[-1]), jnp.float32)
+            x = jnp.concatenate([pad, x, pad], axis=0)
+        slabs[f] = x
+        if f == program.passthrough:
+            state_cur = cur
+    state = slabs.pop(program.passthrough)
+    extras = slabs or None
+    base = meta_ref[0, 0] + i * block_rows - halo  # global id of state's first row
     if not col_sharded or halo == 0:
-        out_ref[0] = slab_sweep(program, x, base, meta_ref[0, 1]).astype(out_ref.dtype)
+        out_ref[0] = slab_sweep(
+            program, state, base, meta_ref[0, 1], extras=extras
+        ).astype(out_ref.dtype)
         return
     vals = slab_sweep(
-        program, x, base, meta_ref[0, 1], meta_ref[0, 2], meta_ref[0, 3]
+        program, state, base, meta_ref[0, 1], meta_ref[0, 2], meta_ref[0, 3],
+        extras=extras,
     )  # (block_rows, C - 2*halo)
-    width = cur.shape[-1]
-    out_ref[0] = cur.at[:, halo : width - halo].set(vals).astype(out_ref.dtype)
+    width = state_cur.shape[-1]
+    out_ref[0] = state_cur.at[:, halo : width - halo].set(vals).astype(out_ref.dtype)
 
 
 def _kernel_1d(x_ref, out_ref, *, program):
@@ -117,14 +159,19 @@ def lower_pallas(
     block_rows: int | None = None,
     vmem_budget: int | None = None,
     interpret: bool | None = None,
-) -> Callable[[Array], Array]:
+) -> Callable[[Array | Mapping[str, Array]], Array]:
     """Builds ``x -> program(x)`` as a fused Pallas kernel.
 
     For a composed program (``program.steps > 1``) the kernel applies all k
     sweeps per VMEM residency — one HBM round-trip per k simulated steps.
 
     Args:
-      program: a single-input IR program (scalars baked into the graph).
+      program: a 2-D IR program (scalars baked into the graph). Multi-field
+        programs are first-class: pass a ``{field: array}`` mapping (all
+        arrays the same shape); the kernel takes one input ref per field
+        with a per-field three-slab halo sized by that field's composed
+        radius (``field_radii``), so a radius-0 coefficient field streams
+        exactly one block per tile and no neighbour blocks.
       block_rows: VMEM row-tile override; default picks the largest divisor
         of rows fitting the shared VMEM budget (>= the inferred chain halo).
       vmem_budget: per-block byte budget for the planner (arg > env > 4 MiB).
@@ -134,26 +181,32 @@ def lower_pallas(
     ``rows_global`` (possibly traced) so ``lower_sharded`` can run the same
     kernel on a halo-padded shard block with true global row indices, and
     ``col_offset`` / ``cols_global`` for 2-D (rows x cols) decomposition:
-    passing ``cols_global`` marks the array as a column slab whose outer
+    passing ``cols_global`` marks the arrays as column slabs whose outer
     chain-radius columns are halo (the sweep consumes them and the global
     column ring is applied by absolute index, mirroring rows).
     """
-    if len(program.inputs) != 1:
-        raise ValueError(
-            f"pallas lowering needs a single-input program, got {program.inputs}"
-        )
     if program.ndim == 1:
+        if len(program.inputs) != 1:
+            raise ValueError(
+                "1-D pallas lowering supports single-input programs only, "
+                f"got {program.inputs}"
+            )
         return _lower_pallas_1d(program, interpret=interpret)
     if program.ndim != 2:
         raise ValueError(f"unsupported ndim {program.ndim}")
 
+    fields = program.inputs
     halo = program.radius  # full chain radius: k*r for repeat(p, k)
+    # Shared per-field halo rule (state at full chain radius, other fields
+    # at their own composed radius) — same home as the sharded exchange
+    # and the wire-byte models.
+    field_halos = program.exchange_radii()
     min_block = max(halo, 1)
 
     @functools.partial(jax.jit, static_argnames=("br", "interp", "col_sharded"))
-    def _call(x, row_offset, rows_global, col_offset, cols_global, br, interp,
+    def _call(arrays, row_offset, rows_global, col_offset, cols_global, br, interp,
               col_sharded):
-        depth, rows, cols = x.shape
+        depth, rows, cols = arrays[0].shape
         row_tiles = rows // br
         meta = jnp.stack(
             [
@@ -169,33 +222,52 @@ def lower_pallas(
             block_rows=br,
             halo=halo,
             col_sharded=col_sharded,
+            field_halos=field_halos,
         )
         spec = lambda fn: pl.BlockSpec((1, br, cols), fn)  # noqa: E731
+        in_specs = []
+        operands = []
+        for f, x in zip(fields, arrays):
+            if field_halos[f]:
+                in_specs += [
+                    spec(lambda d, i: (d, jnp.maximum(i - 1, 0), 0)),
+                    spec(lambda d, i: (d, i, 0)),
+                    spec(lambda d, i: (d, jnp.minimum(i + 1, row_tiles - 1), 0)),
+                ]
+                operands += [x, x, x]
+            else:
+                in_specs.append(spec(lambda d, i: (d, i, 0)))
+                operands.append(x)
+        in_specs.append(
+            pl.BlockSpec(
+                (1, 4), lambda d, i: (0, 0), memory_space=pltpu.MemorySpace.SMEM
+            )
+        )
+        state = arrays[fields.index(program.passthrough)]
         return pl.pallas_call(
             kernel,
             grid=(depth, row_tiles),
-            in_specs=[
-                spec(lambda d, i: (d, jnp.maximum(i - 1, 0), 0)),
-                spec(lambda d, i: (d, i, 0)),
-                spec(lambda d, i: (d, jnp.minimum(i + 1, row_tiles - 1), 0)),
-                pl.BlockSpec(
-                    (1, 4), lambda d, i: (0, 0), memory_space=pltpu.MemorySpace.SMEM
-                ),
-            ],
+            in_specs=in_specs,
             out_specs=spec(lambda d, i: (d, i, 0)),
-            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            out_shape=jax.ShapeDtypeStruct(state.shape, state.dtype),
             interpret=interp,
-        )(x, x, x, meta)
+        )(*operands, meta)
 
-    def fn(x: Array, *, row_offset=0, rows_global=None, col_offset=0,
-           cols_global=None) -> Array:
-        if x.ndim != 3:
-            raise ValueError(f"expected (depth, rows, cols), got shape {x.shape}")
-        _, rows, cols = x.shape
+    def fn(x: Array | Mapping[str, Array], *, row_offset=0, rows_global=None,
+           col_offset=0, cols_global=None) -> Array:
+        arrays = resolve_field_arrays(program, x, ndim=3)
+        _, rows, cols = arrays[0].shape
         br = block_rows
         if br is None:
+            # The budget models ONE resident tile; this kernel keeps one
+            # slab per input field live (plus the output), so an N-field
+            # program gets 1/N of the budget per field — otherwise the
+            # planner would pick tiles whose true VMEM residency overflows
+            # the budget N-fold.
+            per_field = vmem_tile_budget(vmem_budget) // len(fields)
             br = pick_block_rows(
-                rows, cols, budget_bytes=vmem_budget, min_rows=min(min_block, rows)
+                rows, cols, budget_bytes=max(per_field, 1),
+                min_rows=min(min_block, rows),
             )
         if rows % br:
             raise ValueError(f"rows={rows} not divisible by block_rows={br}")
@@ -207,13 +279,13 @@ def lower_pallas(
         interp = interpret if interpret is not None else not _on_tpu()
         if rows_global is None:
             rows_global = rows
-        # cols_global given => the array is a column slab of a wider grid
+        # cols_global given => the arrays are column slabs of a wider grid
         # (2-D domain decomposition): static mode switch for the kernel.
         col_sharded = cols_global is not None
         if cols_global is None:
             cols_global = cols
         return _call(
-            x, row_offset, rows_global, col_offset, cols_global, br, interp,
+            arrays, row_offset, rows_global, col_offset, cols_global, br, interp,
             col_sharded,
         )
 

@@ -15,7 +15,7 @@ from typing import Callable, Mapping
 
 import jax
 
-from repro.ir.evaluate import apply_program, embed_interior, op_views
+from repro.ir.evaluate import apply_program, embed_interior, op_views, thread_chain
 from repro.ir.graph import StencilProgram
 
 Array = jax.Array
@@ -31,14 +31,11 @@ def lower_reference(
     if mode == "staged":
         if program.steps == 1:
             return _lower_staged(program)
-        runs = [_lower_staged(p) for p in program.chain]
-
-        def run_chain(x):
-            for run in runs:
-                x = run(x)
-            return x
-
-        return run_chain
+        runs = [(p, _lower_staged(p)) for p in program.chain]
+        # thread_chain owns the multi-field sweep-threading convention
+        # (evolving passthrough field, shared inputs), shared verbatim with
+        # evaluate.apply_program so the two backends cannot drift.
+        return lambda x: thread_chain(program, x, runs)
     raise ValueError(f"unknown mode {mode!r} (want 'fused' or 'staged')")
 
 

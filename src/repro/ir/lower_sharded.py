@@ -8,6 +8,15 @@ or the fused Pallas kernel inside the shard — the ROADMAP's
 "Pallas-kernel-inside-shard_map" item: VMEM-fused B-block residency *and*
 domain decomposition in one step function.
 
+Multi-field programs shard every declared input identically and exchange
+halos PER FIELD at each field's composed radius (``field_radii``): the
+evolving state moves the full chain radius, a velocity field its own reach,
+and a radius-0 coefficient field moves NOTHING — zero wire bytes, which
+``dist.halo.program_halo_exchange_bytes`` models exactly (measured-exact in
+fig10/fig13). Exchanged aux fields are zero-padded up to the state's halo
+grid so every field shares one coordinate system inside the shard; the pads
+are never read into a kept output point.
+
 Domain decomposition is 2-D (rows x cols), like the paper's 2-D AIE array:
 ``row_axis`` and/or ``col_axis`` name mesh axes (or pass ``mesh_shape=(R,
 C)`` to build a ("rows", "cols") mesh over the default devices), and
@@ -44,13 +53,13 @@ derives its constants from this package).
 
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Mapping
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.ir.evaluate import slab_sweep
+from repro.ir.evaluate import resolve_field_arrays, slab_sweep
 from repro.ir.graph import StencilProgram
 from repro.ir.lower_pallas import lower_pallas
 from repro.ir.lower_reference import lower_reference
@@ -106,11 +115,15 @@ def lower_sharded(
         the jnp evaluator.
       interpret / vmem_budget: forwarded to the Pallas lowering.
     """
-    from repro.dist.halo import exchange_halos_2d, exchange_row_halos
+    from repro.dist.halo import (
+        exchange_halos_2d,
+        exchange_row_halos,
+        program_exchange_radii,
+    )
     from repro.dist.sharding import _mesh_sizes
 
-    if program.ndim != 2 or len(program.inputs) != 1:
-        raise ValueError("sharded lowering needs a single-input 2-D program")
+    if program.ndim != 2:
+        raise ValueError("sharded lowering needs a 2-D program")
     if inner not in ("pallas", "reference"):
         raise ValueError(f"unknown inner backend {inner!r}")
 
@@ -148,6 +161,15 @@ def lower_sharded(
     n_depth = sizes[depth_axis] if depth_axis is not None else 1
 
     halo = program.radius  # full chain radius; exchanged once per k sweeps
+    fields = program.inputs
+    state_f = program.passthrough
+    aux_fields = tuple(f for f in fields if f != state_f)
+    # Per-field exchanged halo (shared rule with the byte models): the
+    # evolving state moves the full chain radius, every other field only
+    # its own composed access radius — a radius-0 coefficient field is
+    # exchanged NOT AT ALL (zero wire bytes for it, matching
+    # dist.halo.program_halo_exchange_bytes exactly).
+    fhalos = program_exchange_radii(program)
 
     if inner == "pallas":
         apply_full = lower_pallas(program, interpret=interpret, vmem_budget=vmem_budget)
@@ -160,6 +182,12 @@ def lower_sharded(
         col_axis if n_col > 1 else None,
     )
 
+    def _full_input(state, aux):
+        """The apply_full argument: bare array or field mapping."""
+        if not aux_fields:
+            return state
+        return {state_f: state, **aux}
+
     def _offsets(block: Array):
         """Global index of the shard block's first row/col (pre-padding)."""
         r_loc, c_loc = block.shape[-2], block.shape[-1]
@@ -167,24 +195,50 @@ def lower_sharded(
         off_c = jax.lax.axis_index(col_axis) * c_loc if n_col > 1 else 0
         return off_r, off_c, r_loc * n_row, c_loc * n_col
 
-    def _inner_padded(padded: Array, off_r, off_c, r_glob, c_glob, r_loc, c_loc):
+    def _exchange_pad(a: Array, hf: int) -> Array:
+        """Exchange ``a``'s own radius-``hf`` halo, then zero-pad it out to
+        the state's ``halo`` grid so all fields stay aligned (rows always;
+        cols too when columns are sharded). The zero pad is never read into
+        a kept output point: reads reach at most ``hf`` past the kept
+        region, which the exchange covered with true values."""
+        if hf:
+            if n_col > 1:
+                a = exchange_halos_2d(
+                    a, row_axis, col_axis, n_row, n_col, hf,
+                    mesh_axis_names=axis_names,
+                )
+            else:
+                a = exchange_row_halos(a, row_axis, n_row, halo=hf)
+        pw = halo - hf
+        if pw == 0:
+            return a
+        pad = [(0, 0)] * (a.ndim - 2)
+        pad.append((pw, pw))
+        pad.append((pw, pw) if n_col > 1 else (0, 0))
+        return jnp.pad(a, pad)
+
+    def _inner_padded(padded, padded_aux, off_r, off_c, r_glob, c_glob, r_loc, c_loc):
         """Whole-shard compute on the halo-padded block -> (r_loc, c_loc)."""
         if inner == "pallas":
             if n_col > 1:
                 vals = apply_full(
-                    padded,
+                    _full_input(padded, padded_aux),
                     row_offset=off_r - halo, rows_global=r_glob,
                     col_offset=off_c - halo, cols_global=c_glob,
                 )
                 return vals[..., halo : halo + r_loc, halo : halo + c_loc]
-            vals = apply_full(padded, row_offset=off_r - halo, rows_global=r_glob)
+            vals = apply_full(
+                _full_input(padded, padded_aux),
+                row_offset=off_r - halo, rows_global=r_glob,
+            )
             return vals[..., halo : halo + r_loc, :]
+        extras = padded_aux or None
         if n_col > 1:
             return slab_sweep(program, padded, off_r - halo, r_glob,
-                              off_c - halo, c_glob)
-        return slab_sweep(program, padded, off_r - halo, r_glob)
+                              off_c - halo, c_glob, extras=extras)
+        return slab_sweep(program, padded, off_r - halo, r_glob, extras=extras)
 
-    def _inner_interior(block: Array, off_r, off_c, r_glob, c_glob):
+    def _inner_interior(block: Array, aux, off_r, off_c, r_glob, c_glob):
         """Halo-free interior compute on the UNPADDED block: output rows
         [halo, r_loc-halo) (and cols likewise when columns are sharded) —
         no data dependency on the exchange, so it can overlap it."""
@@ -192,48 +246,63 @@ def lower_sharded(
         if inner == "pallas":
             if n_col > 1:
                 vals = apply_full(
-                    block,
+                    _full_input(block, aux),
                     row_offset=off_r, rows_global=r_glob,
                     col_offset=off_c, cols_global=c_glob,
                 )
                 return vals[..., halo : r_loc - halo, halo : c_loc - halo]
-            vals = apply_full(block, row_offset=off_r, rows_global=r_glob)
+            vals = apply_full(
+                _full_input(block, aux), row_offset=off_r, rows_global=r_glob
+            )
             return vals[..., halo : r_loc - halo, :]
+        extras = aux or None
         if n_col > 1:
-            return slab_sweep(program, block, off_r, r_glob, off_c, c_glob)
-        return slab_sweep(program, block, off_r, r_glob)
+            return slab_sweep(program, block, off_r, r_glob, off_c, c_glob,
+                              extras=extras)
+        return slab_sweep(program, block, off_r, r_glob, extras=extras)
 
-    def _edge_bands(padded: Array, off_r, off_c, r_glob, c_glob, r_loc, c_loc):
+    def _edge_bands(padded, padded_aux, off_r, off_c, r_glob, c_glob, r_loc, c_loc):
         """The four radius-``halo`` edge bands of the shard's output, each a
         ``slab_sweep`` over a static slice of the padded block (top/bottom
-        span all owned cols; left/right cover the remaining interior rows)."""
+        span all owned cols; left/right cover the remaining interior rows).
+        Aux fields ride the SAME slices — they live on the same padded
+        grid, so one slicer keeps every field aligned."""
         h = halo
 
-        def sweep(slab, row0, col0):
+        def sweep(rows_sl, cols_sl, row0, col0):
+            slab = padded[..., rows_sl, cols_sl]
+            ex = {f: a[..., rows_sl, cols_sl] for f, a in padded_aux.items()}
             if inner == "pallas":
-                # The Pallas kernel upcasts to float32 and casts back on
-                # store; the edge bands must compute the same way or the
-                # overlap bit-match contract breaks for non-f32 inputs.
+                # The Pallas kernel upcasts every field to float32 and casts
+                # back on store; the edge bands must compute the same way or
+                # the overlap bit-match contract breaks for non-f32 inputs.
                 slab = slab.astype(jnp.float32)
+                ex = {f: a.astype(jnp.float32) for f, a in ex.items()}
+            ex = ex or None
             if n_col > 1:
-                return slab_sweep(program, slab, row0, r_glob, col0, c_glob)
-            return slab_sweep(program, slab, row0, r_glob)
+                return slab_sweep(program, slab, row0, r_glob, col0, c_glob,
+                                  extras=ex)
+            return slab_sweep(program, slab, row0, r_glob, extras=ex)
 
-        top = sweep(padded[..., : 3 * h, :], off_r - h, off_c - h)
-        bottom = sweep(padded[..., -3 * h :, :], off_r + r_loc - 2 * h, off_c - h)
+        full = slice(None)
+        top = sweep(slice(None, 3 * h), full, off_r - h, off_c - h)
+        bottom = sweep(slice(-3 * h, None), full, off_r + r_loc - 2 * h, off_c - h)
         if n_col == 1:
             return top, bottom, None, None
-        left = sweep(padded[..., h : h + r_loc, : 3 * h], off_r, off_c - h)
+        left = sweep(slice(h, h + r_loc), slice(None, 3 * h), off_r, off_c - h)
         right = sweep(
-            padded[..., h : h + r_loc, -3 * h :], off_r, off_c + c_loc - 2 * h
+            slice(h, h + r_loc), slice(-3 * h, None), off_r, off_c + c_loc - 2 * h
         )
         return top, bottom, left, right
 
-    def local_step(block: Array) -> Array:
+    def local_step(*blocks: Array) -> Array:
+        env = dict(zip(fields, blocks))
+        block = env[state_f]
+        aux = {f: env[f] for f in aux_fields}
         if (n_row == 1 and n_col == 1) or halo == 0:
             # Full grid present locally (or no spatial coupling at all): the
             # single-device lowering's boundary handling is already correct.
-            return apply_full(block)
+            return apply_full(_full_input(block, aux))
         r_loc, c_loc = block.shape[-2], block.shape[-1]
         off_r, off_c, r_glob, c_glob = _offsets(block)
 
@@ -241,9 +310,9 @@ def lower_sharded(
         can_overlap = overlap and r_loc > 2 * halo and (n_col == 1 or c_loc > 2 * halo)
         if can_overlap:
             # Interior first in program order: it reads only the unpadded
-            # block, so the exchange's ppermutes have no consumers before it
+            # blocks, so the exchange's ppermutes have no consumers before it
             # and the latency-hiding scheduler is free to run them behind it.
-            interior = _inner_interior(block, off_r, off_c, r_glob, c_glob)
+            interior = _inner_interior(block, aux, off_r, off_c, r_glob, c_glob)
 
         if n_col > 1:
             padded = exchange_halos_2d(
@@ -252,13 +321,16 @@ def lower_sharded(
             )
         else:
             padded = exchange_row_halos(block, row_axis, n_row, halo=halo)
+        padded_aux = {f: _exchange_pad(aux[f], fhalos[f]) for f in aux_fields}
 
         if not can_overlap:
-            vals = _inner_padded(padded, off_r, off_c, r_glob, c_glob, r_loc, c_loc)
+            vals = _inner_padded(
+                padded, padded_aux, off_r, off_c, r_glob, c_glob, r_loc, c_loc
+            )
             return vals.astype(block.dtype)
 
         top, bottom, left, right = _edge_bands(
-            padded, off_r, off_c, r_glob, c_glob, r_loc, c_loc
+            padded, padded_aux, off_r, off_c, r_glob, c_glob, r_loc, c_loc
         )
         if n_col > 1:
             interior = jnp.concatenate([left, interior, right], axis=-1)
@@ -266,14 +338,17 @@ def lower_sharded(
         return vals.astype(block.dtype)
 
     mapped = jax.shard_map(
-        local_step, mesh=mesh, in_specs=(spec,), out_specs=spec, check_vma=False
+        local_step,
+        mesh=mesh,
+        in_specs=(spec,) * len(fields),
+        out_specs=spec,
+        check_vma=False,
     )
 
     @jax.jit
-    def step(x: Array) -> Array:
-        if x.ndim != 3:
-            raise ValueError(f"expected (depth, rows, cols), got shape {x.shape}")
-        d, r, c = x.shape
+    def step(x: Array | Mapping[str, Array]) -> Array:
+        arrays = resolve_field_arrays(program, x, ndim=3)
+        d, r, c = arrays[0].shape
         if n_depth > 1 and d % n_depth:
             raise ValueError(f"depth {d} not divisible by {n_depth} {depth_axis!r} shards")
         for extent, n_sh, ax, what, remedy in (
@@ -292,6 +367,6 @@ def lower_sharded(
                         f"shards for the single-neighbour halo exchange — use "
                         f"fewer, or shard {remedy} instead"
                     )
-        return mapped(x)
+        return mapped(*arrays)
 
     return step

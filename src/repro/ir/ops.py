@@ -8,14 +8,21 @@ counts for a *program* are then derived by the graph analysis, never written
 per kernel.
 
 Cost conventions (matching SPARTA §3.1):
-  * ``affine``          — one MAC per tap (Eq. 5 counts a 5-point Laplacian
-                          as 5 MACs).
-  * ``flux``            — 1 sub for the stencil difference, plus 3 ops
-                          (mul, cmp, select) when the Eq. 2-3 limiter is on.
-                          The limiter's *gradient* difference rides free, as
-                          in the paper's Eq. 6 accounting (4 ops per flux).
-  * ``scaled_residual`` — one accumulate per term plus a single MAC for the
-                          shared scale against the base field.
+  * ``affine``            — one MAC per tap (Eq. 5 counts a 5-point Laplacian
+                            as 5 MACs).
+  * ``flux``              — 1 sub for the stencil difference, plus 3 ops
+                            (mul, cmp, select) when the Eq. 2-3 limiter is on.
+                            The limiter's *gradient* difference rides free, as
+                            in the paper's Eq. 6 accounting (4 ops per flux).
+  * ``scaled_residual``   — one accumulate per term plus a single MAC for the
+                            shared scale against the base field.
+  * ``product``           — one MAC (elementwise field x field multiply, the
+                            velocity x gradient term of an advection sweep).
+  * ``weighted_residual`` — ``scaled_residual`` with the scale promoted from
+                            a baked-in scalar to a *field* read at offset
+                            zero (the Smagorinsky-style spatially-varying
+                            diffusion coefficient): same cost shape, one MAC
+                            for the weight plus one accumulate per term.
 """
 
 from __future__ import annotations
@@ -93,6 +100,64 @@ def flux(
 
     cost = OpCost(other_ops=1 + (3 if limiter is not None else 0))
     return StencilOp(name, tuple(reads), compute, cost)
+
+
+def product(
+    name: str,
+    a: str,
+    b: str,
+    *,
+    a_offset: Offset | None = None,
+    b_offset: Offset | None = None,
+    ndim: int = 2,
+) -> StencilOp:
+    """Elementwise field product ``out = a[a_offset] * b[b_offset]``.
+
+    The coupling op multi-field programs are made of (velocity x gradient in
+    an advection sweep). Offsets default to zero — the fields are usually
+    co-located after any destaggering ``affine``.
+    """
+    zero = (0,) * ndim
+    reads = (
+        Read(a, a_offset if a_offset is not None else zero),
+        Read(b, b_offset if b_offset is not None else zero),
+    )
+
+    def compute(va, vb):
+        return va * vb
+
+    return StencilOp(name, reads, compute, OpCost(macs=1))
+
+
+def weighted_residual(
+    name: str,
+    base: str,
+    weight: str,
+    terms: Sequence[tuple[str, int]],
+    *,
+    ndim: int = 2,
+) -> StencilOp:
+    """``out = base - weight * sum(sign_i * term_i)`` with a *field* weight.
+
+    The multi-field form of :func:`scaled_residual`: the scale is a source
+    field sampled at offset zero (a spatially-varying diffusion coefficient,
+    COSMO's Smagorinsky pattern) instead of a scalar baked into the graph.
+    Term grouping matches :func:`scaled_residual` exactly, so a constant
+    weight field reproduces the scalar kernel bit-for-bit.
+    """
+    for f, s in terms:
+        if s not in (1, -1):
+            raise ValueError(f"sign for {f!r} must be +1/-1, got {s}")
+
+    def compute(b, w, *ts):
+        signed = [t if s > 0 else -t for t, (_, s) in zip(ts, terms)]
+        return b - w * _tree_sum(signed)
+
+    zero = (0,) * ndim
+    reads = (Read(base, zero), Read(weight, zero)) + tuple(
+        Read(f, zero) for f, _ in terms
+    )
+    return StencilOp(name, reads, compute, OpCost(macs=1, other_ops=len(terms)))
 
 
 def scaled_residual(

@@ -93,8 +93,9 @@ class Partition2D:
 
     ``wire_bytes`` is the whole-mesh traffic of ONE halo-exchange round
     under the exact 2-axis model (row bands + col bands + diagonal
-    corners); ``halo`` is the exchanged band depth (the program's full
-    chain radius — k*r for ``repeat(p, k)``, one round per k sweeps)."""
+    corners), summed per input field for multi-field programs; ``halo`` is
+    the deepest exchanged band (the program's full chain radius — k*r for
+    ``repeat(p, k)``, one round per k sweeps)."""
 
     row_shards: int
     col_shards: int
@@ -136,7 +137,7 @@ def plan_partition(
     """
     # Lazy: repro.dist imports repro.core, which derives constants from
     # this package — importing it at module scope would be a cycle.
-    from repro.dist.halo import halo_exchange_bytes
+    from repro.dist.halo import program_halo_exchange_bytes
 
     halo = program.radius
     if n_devices < 1:
@@ -152,8 +153,11 @@ def plan_partition(
             (r_sh > 1 and rows // r_sh < halo) or (c_sh > 1 and cols // c_sh < halo)
         ):
             continue
-        wire = halo_exchange_bytes(
-            depth, rows, cols, r_sh, itemsize=itemsize, halo=halo, col_shards=c_sh
+        # Per-field wire sum: for single-input programs this is exactly the
+        # old halo_exchange_bytes(halo=radius); multi-field programs add
+        # each extra field's own (possibly zero) composed-radius traffic.
+        wire = program_halo_exchange_bytes(
+            program, depth, rows, cols, r_sh, itemsize=itemsize, col_shards=c_sh
         )
         cand = Partition2D(r_sh, c_sh, halo, wire)
         if (

@@ -6,6 +6,13 @@ over two source-consumed fields. The five elementary §3.5 stencils are each
 a single affine op. Halo, op counts, and footprints for all of them are
 *derived* by the graph analysis; parity against the hand-written kernels in
 ``repro.core`` is enforced by ``tests/test_ir_lowering.py``.
+
+``MULTIFIELD_PROGRAMS`` holds the multi-input workloads (the larger-dycore
+fragments NERO/StencilFlow motivate): ``vadvc_program`` (vertical advection,
+velocity + scalar fields) and ``hdiff_coupled_program`` (hdiff with a
+diffusion-coefficient *field*). Per-field halos, reads and wire bytes are
+derived per field and summed; the cross-backend conformance matrix
+(``tests/conformance.py``) covers them on every backend/mesh/k cell.
 """
 
 from __future__ import annotations
@@ -13,7 +20,7 @@ from __future__ import annotations
 from typing import Callable
 
 from repro.ir.graph import StencilProgram, repeat
-from repro.ir.ops import affine, flux, scaled_residual
+from repro.ir.ops import affine, flux, product, scaled_residual, weighted_residual
 
 # Tap orders deliberately mirror the hand-written kernels' evaluation order
 # (see repro/core/{hdiff,stencils}.py) so lowered outputs are bit-identical.
@@ -53,6 +60,83 @@ def hdiff_multistep_program(
     ``kernels.hdiff.multistep.hdiff_twostep`` wraps.
     """
     return repeat(hdiff_program(coeff, limit=limit), k)
+
+
+def hdiff_coupled_program(*, limit: bool = True) -> StencilProgram:
+    """hdiff with a spatially-varying diffusion coefficient *field*.
+
+    The COSMO/Smagorinsky pattern NERO couples hdiff with: the Eq. 4 update
+    scales the flux divergence by a per-point coefficient (derived from the
+    local deformation in the full model) instead of the baked-in scalar —
+    two source fields, ``u`` (the evolving state, radius 2) and ``coeff``
+    (read at offset zero only, radius 0, so it exchanges NO halo at k=1;
+    under ``repeat(p, k)`` its composed radius grows to ``2 (k-1)`` while
+    ``u``'s grows to ``2 k`` — both derived, both tested).
+    """
+    lim = "u" if limit else None
+    ops = [
+        affine("lap", "u", _LAP_TAPS),
+        flux("flx_r", "lap", lo=(0, 0), hi=(1, 0), limiter=lim),
+        flux("flx_rm", "lap", lo=(-1, 0), hi=(0, 0), limiter=lim),
+        flux("flx_c", "lap", lo=(0, 0), hi=(0, 1), limiter=lim),
+        flux("flx_cm", "lap", lo=(0, -1), hi=(0, 0), limiter=lim),
+        weighted_residual(
+            "out",
+            "u",
+            "coeff",
+            [("flx_r", 1), ("flx_rm", -1), ("flx_c", 1), ("flx_cm", -1)],
+        ),
+    ]
+    return StencilProgram(
+        "hdiff_coupled" if limit else "hdiff_coupled_simple",
+        ["u", "coeff"],
+        ops,
+        passthrough="u",
+    )
+
+
+def vadvc_program(dt: float = 0.25) -> StencilProgram:
+    """NERO-style vertical-advection fragment: 2 fields, level-offset reads.
+
+    The vertical dimension maps to the IR's leading stencil dim (``rows`` of
+    the ``(batch, levels, columns)`` grid — depth planes are hdiff's
+    embarrassingly-parallel dim, but vadvc couples *along* the column, so
+    levels take the halo-carrying axis). One explicit advection sweep of a
+    scalar ``s`` by a face-staggered vertical velocity ``w``:
+
+      wbar = (w[k] + w[k+1]) / 2          destagger to cell centres
+      grad = (s[k+1] - s[k-1]) / 2        centered level gradient
+      out  = s - dt * wbar * grad
+
+    Per-field radii: ``s`` 1 (the gradient), ``w`` 1 (the destagger) —
+    BOTH fields exchange a halo when sharded, unlike ``hdiff_coupled``'s
+    radius-0 coefficient, so the two workloads cover both sides of the
+    per-field exchange logic.
+    """
+    ops = [
+        affine("wbar", "w", {(0, 0): 0.5, (1, 0): 0.5}),
+        affine("grad", "s", {(1, 0): 0.5, (-1, 0): -0.5}),
+        product("adv", "wbar", "grad"),
+        scaled_residual("out", "s", [("adv", 1)], dt),
+    ]
+    return StencilProgram("vadvc", ["s", "w"], ops, passthrough="s")
+
+
+def smagorinsky_coeff(noise):
+    """Deterministic positive diffusion-coefficient field from unit noise:
+    0.025 modulated +-25% through tanh. The ONE generator every
+    hdiff_coupled test/benchmark feeds the ``coeff`` input with, so the
+    conformance oracle, the paper-grid acceptance and fig13 all stress the
+    same coefficient regime (works on numpy and jax arrays alike)."""
+    import numpy as np
+
+    return np.asarray(0.025 * (1.0 + 0.25 * np.tanh(np.asarray(noise))), np.float32)
+
+
+MULTIFIELD_PROGRAMS: dict[str, Callable[[], StencilProgram]] = {
+    "vadvc": vadvc_program,
+    "hdiff_coupled": hdiff_coupled_program,
+}
 
 
 def jacobi1d_program(coeff: float = 1.0 / 3.0) -> StencilProgram:

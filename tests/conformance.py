@@ -12,6 +12,7 @@ program; the oracle itself is anchored against the hand-written kernels by
 
 Cells:
   program  in {hdiff, hdiff_simple} + the five elementary 2-D stencils
+           + the two multi-field workloads {vadvc, hdiff_coupled}
   backend  in {reference, staged, pallas, sharded-reference, sharded-pallas}
   k        in {1, 2, 3}
   mesh     in {1x1, 8x1, 2x4, 1x8}   (rows x cols shards; non-sharded
@@ -19,7 +20,9 @@ Cells:
                                       at 1x1 only)
 
 GRID is sized so every cell is feasible: 48 rows / 8 shards = 6 rows per
-shard == the deepest chain halo in the matrix (hdiff radius 2, k = 3).
+shard == the deepest chain halo in the matrix (hdiff / hdiff_coupled
+radius 2, k = 3). Multi-field cells feed every backend the same
+deterministic ``{field: array}`` mapping (``make_fields``).
 """
 
 from __future__ import annotations
@@ -30,6 +33,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.ir import (
+    hdiff_coupled_program,
     hdiff_program,
     jacobi2d_3pt_program,
     jacobi2d_5pt_program,
@@ -40,6 +44,8 @@ from repro.ir import (
     lower_sharded,
     repeat,
     seidel2d_program,
+    smagorinsky_coeff,
+    vadvc_program,
 )
 
 GRID = (2, 48, 48)
@@ -54,6 +60,11 @@ PROGRAMS = {
     "jacobi2d_5pt": jacobi2d_5pt_program,
     "jacobi2d_9pt": jacobi2d_9pt_program,
     "seidel2d": seidel2d_program,
+    # Multi-field workloads: every backend takes a {field: array} mapping.
+    # vadvc exchanges BOTH fields' halos; hdiff_coupled's coeff field is
+    # radius 0 at k=1 (no exchange) and grows to 2(k-1) under repeat.
+    "vadvc": vadvc_program,
+    "hdiff_coupled": lambda: hdiff_coupled_program(),
 }
 
 BACKENDS = ("reference", "staged", "pallas", "sharded-reference", "sharded-pallas")
@@ -75,6 +86,25 @@ def devices_needed(backend: str, mesh_shape: tuple[int, int]) -> int:
 def make_input(grid: tuple[int, ...] = GRID, seed: int = SEED):
     rng = np.random.default_rng(seed)
     return jnp.asarray(rng.standard_normal(grid).astype(np.float32))
+
+
+def make_fields(name: str, grid: tuple[int, ...] = GRID, seed: int = SEED):
+    """The shared input for one program cell: a bare array for single-input
+    programs (unchanged from before multi-field landed), a deterministic
+    ``{field: array}`` mapping for multi-field ones. A ``coeff`` field gets
+    a positive Smagorinsky-style coefficient (0.025 modulated per point)
+    instead of raw noise, so repeated diffusion sweeps stay tame."""
+    prog = PROGRAMS[name]()
+    if len(prog.inputs) == 1:
+        return make_input(grid, seed)
+    rng = np.random.default_rng(seed)
+    fields = {}
+    for f in prog.inputs:
+        a = rng.standard_normal(grid).astype(np.float32)
+        if f == "coeff":
+            a = smagorinsky_coeff(a)
+        fields[f] = jnp.asarray(a)
+    return fields
 
 
 def iter_cases(mesh_shapes=MESHES):
@@ -111,13 +141,15 @@ def build(program, backend: str, mesh_shape: tuple[int, int], *, overlap=False):
 def oracle(name: str, k: int) -> np.ndarray:
     """lower_reference of the k-step composed program on the shared input."""
     prog = repeat(PROGRAMS[name](), k)
-    return np.asarray(lower_reference(prog)(make_input()))
+    return np.asarray(lower_reference(prog)(make_fields(name)))
 
 
 def run_case(name: str, backend: str, k: int, mesh_shape, *, overlap=False):
     """(got, want) for one cell; caller asserts (pytest or subprocess)."""
     prog = repeat(PROGRAMS[name](), k)
-    got = np.asarray(build(prog, backend, mesh_shape, overlap=overlap)(make_input()))
+    got = np.asarray(
+        build(prog, backend, mesh_shape, overlap=overlap)(make_fields(name))
+    )
     return got, oracle(name, k)
 
 

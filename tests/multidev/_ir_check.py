@@ -13,7 +13,9 @@ this check keeps:
     the shard-the-other-axis remedy in the message),
   * the paper-grid acceptance runs: 64 x 256 x 256 on a depth x rows mesh
     AND on the 2-D rows x cols mesh (k in {1, 2, 3}, both inners, with
-    overlap=True bit-matching overlap=False).
+    overlap=True bit-matching overlap=False),
+  * the multi-field paper-grid acceptance: vadvc and hdiff_coupled on the
+    2 x 4 mesh with per-field halo exchange, k in {1, 2, 3}.
 
 Exits nonzero (assertion) on any mismatch.
 """
@@ -203,5 +205,45 @@ for k in (1, 2, 3):
                 err_msg=f"paper 2x4 overlap k={k} {inner}",
             )
     print(f"paper-grid 2x4 k={k} ok (both inners, overlap bit-match)")
+
+# Multi-field acceptance on the paper grid: vadvc (both fields exchange a
+# halo) and hdiff_coupled (coeff exchanges nothing at k=1, 2(k-1) beyond)
+# on the 2 x 4 rows x cols mesh, k in {1, 2, 3}, vs the composed reference
+# oracle — the ISSUE 5 acceptance runs. The Pallas inner runs at k=2 to
+# bound compile time (its full k sweep lives in the conformance matrix).
+from repro.ir import (  # noqa: E402
+    hdiff_coupled_program,
+    smagorinsky_coeff,
+    vadvc_program,
+)
+
+mf_cases = {
+    "vadvc": (vadvc_program(), {
+        "s": paper,
+        "w": jnp.asarray(rng.standard_normal(paper.shape).astype(np.float32)),
+    }),
+    "hdiff_coupled": (hdiff_coupled_program(), {
+        "u": paper,
+        "coeff": jnp.asarray(smagorinsky_coeff(rng.standard_normal(paper.shape))),
+    }),
+}
+for name, (mprog, arrs) in mf_cases.items():
+    for k in (1, 2, 3):
+        pk = repeat(mprog, k)
+        ref_k = np.asarray(lower_reference(pk)(arrs))
+        inners = ("reference", "pallas") if k == 2 else ("reference",)
+        for inner in inners:
+            fn = lower_sharded(pk, mesh_shape=(2, 4), inner=inner)
+            np.testing.assert_allclose(
+                np.asarray(fn(arrs)), ref_k, rtol=1e-6, atol=1e-6,
+                err_msg=f"paper 2x4 {name} k={k} {inner}",
+            )
+        fo = lower_sharded(pk, mesh_shape=(2, 4), inner="reference", overlap=True)
+        np.testing.assert_array_equal(
+            np.asarray(fo(arrs)),
+            np.asarray(lower_sharded(pk, mesh_shape=(2, 4), inner="reference")(arrs)),
+            err_msg=f"paper 2x4 {name} overlap k={k}",
+        )
+        print(f"paper-grid 2x4 {name} k={k} ok (overlap bit-match)")
 
 print("ALL_OK")

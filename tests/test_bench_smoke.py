@@ -1,0 +1,98 @@
+"""Unit tests for scripts/bench_smoke.py (the BENCH_*.json producer/gate).
+
+These are the bench-smoke CI job's pytest-collected smoke checks: they pin
+the ratio-extraction and gating logic on synthetic records (the heavy fig
+runs themselves execute in the job's bench_smoke.py step, not under
+pytest). The module imports bench_smoke WITHOUT triggering any benchmark
+import — helpers must stay cheap to load.
+"""
+
+import importlib.util
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SCRIPT = REPO / "scripts" / "bench_smoke.py"
+
+spec = importlib.util.spec_from_file_location("bench_smoke", SCRIPT)
+bench_smoke = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(bench_smoke)
+
+
+def _record(**overrides):
+    base = {
+        "fig": "figX",
+        "grid": {"depth": 2, "rows": 16, "cols": 16},
+        "wall_clock_s": 0.1,
+        "parity_ok": True,
+        "wire_ratios": [1.0],
+        "error": None,
+        "rows": [{"name": "figX/a", "value": 1.0, "derived": "ratio=1.000"}],
+    }
+    base.update(overrides)
+    return base
+
+
+def test_extract_wire_ratios_parses_rows():
+    rows = [
+        ("fig10/a", 1.0, "model=42 ratio=1.000 permutes=2"),
+        ("fig10/b", 2.0, "no ratio here"),
+        ("fig13/c", 3.0, "ratio=0.997 and ratio=1.003"),
+    ]
+    assert bench_smoke.extract_wire_ratios(rows) == [1.0, 0.997, 1.003]
+
+
+def test_rows_parity_flag():
+    ok = [("a", 1.0, "parity=ok(max|d|=0.0e+00)")]
+    bad = ok + [("b", 1.0, "parity=FAIL(max|d|=3.1e-02)")]
+    assert bench_smoke.rows_parity_ok(ok)
+    assert not bench_smoke.rows_parity_ok(bad)
+
+
+def test_gate_passes_clean_record():
+    assert bench_smoke.gate_record(_record()) == []
+
+
+def test_gate_fails_ratio_outside_band():
+    problems = bench_smoke.gate_record(_record(wire_ratios=[1.0, 1.02]))
+    assert any("1.02" in p for p in problems)
+    assert bench_smoke.gate_record(_record(wire_ratios=[0.989])) != []
+    # Boundary values pass.
+    assert bench_smoke.gate_record(_record(wire_ratios=[0.99, 1.01])) == []
+
+
+def test_gate_fails_parity_and_empty_and_error():
+    assert any(
+        "parity" in p for p in bench_smoke.gate_record(_record(parity_ok=False))
+    )
+    assert any(
+        "no benchmark rows" in p for p in bench_smoke.gate_record(_record(rows=[]))
+    )
+    assert any(
+        "run failed" in p
+        for p in bench_smoke.gate_record(
+            _record(error="RuntimeError: boom", parity_ok=False)
+        )
+    )
+
+
+def test_cli_rejects_unknown_fig(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, str(SCRIPT), "--figs", "nope", "--out-dir", str(tmp_path)],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert proc.returncode != 0
+    assert "unknown fig" in proc.stdout + proc.stderr
+
+
+def test_record_json_roundtrip(tmp_path):
+    """The artifact format is plain JSON — what CI uploads must reload."""
+    rec = _record()
+    path = tmp_path / "BENCH_figX.json"
+    path.write_text(json.dumps(rec, indent=2))
+    loaded = json.loads(path.read_text())
+    assert loaded == rec
+    assert bench_smoke.gate_record(loaded) == []

@@ -30,7 +30,7 @@ from conformance import (
     PROGRAMS,
     assert_case,
     iter_cases,
-    make_input,
+    make_fields,
     mesh_id,
     oracle,
 )
@@ -38,19 +38,72 @@ from repro.core import ELEMENTARY_FNS, hdiff, hdiff_simple
 
 REPO = Path(__file__).resolve().parent.parent
 
+
+def _hdiff_coupled_ref(arrs):
+    """Direct jnp hdiff with a coefficient FIELD (no IR involved): interior
+    update ``u - coeff * div(limited fluxes)``, radius-2 ring passthrough."""
+    import jax.numpy as jnp
+
+    u, coeff = arrs["u"], arrs["coeff"]
+    lap = (
+        4.0 * u[..., 1:-1, 1:-1]
+        - u[..., 2:, 1:-1]
+        - u[..., :-2, 1:-1]
+        - u[..., 1:-1, 2:]
+        - u[..., 1:-1, :-2]
+    )
+
+    def limit(dlap, du):
+        return jnp.where(dlap * du <= 0, dlap, jnp.zeros_like(dlap))
+
+    # Fluxes on the radius-2 interior (lap is radius-1 inset already).
+    flx_r = limit(lap[..., 2:, 1:-1] - lap[..., 1:-1, 1:-1],
+                  u[..., 3:-1, 2:-2] - u[..., 2:-2, 2:-2])
+    flx_rm = limit(lap[..., 1:-1, 1:-1] - lap[..., :-2, 1:-1],
+                   u[..., 2:-2, 2:-2] - u[..., 1:-3, 2:-2])
+    flx_c = limit(lap[..., 1:-1, 2:] - lap[..., 1:-1, 1:-1],
+                  u[..., 2:-2, 3:-1] - u[..., 2:-2, 2:-2])
+    flx_cm = limit(lap[..., 1:-1, 1:-1] - lap[..., 1:-1, :-2],
+                   u[..., 2:-2, 2:-2] - u[..., 2:-2, 1:-3])
+    interior = u[..., 2:-2, 2:-2] - coeff[..., 2:-2, 2:-2] * (
+        (flx_r - flx_rm) + (flx_c - flx_cm)
+    )
+    return u.at[..., 2:-2, 2:-2].set(interior)
+
+
+def _vadvc_ref(arrs):
+    """Direct jnp vertical-advection fragment (levels along rows): interior
+    ``s - dt * wbar * grad`` with a radius-1 ring passthrough."""
+    s, w = arrs["s"], arrs["w"]
+    dt = 0.25
+    wbar = 0.5 * (w[..., 1:-1, 1:-1] + w[..., 2:, 1:-1])
+    grad = 0.5 * (s[..., 2:, 1:-1] - s[..., :-2, 1:-1])
+    interior = s[..., 1:-1, 1:-1] - dt * (wbar * grad)
+    return s.at[..., 1:-1, 1:-1].set(interior)
+
+
 HANDWRITTEN = dict(ELEMENTARY_FNS)
 HANDWRITTEN.update(
     {"hdiff": lambda x: hdiff(x, 0.025), "hdiff_simple": lambda x: hdiff_simple(x, 0.025)}
 )
+# Multi-field anchors: fn(mapping) -> next state field.
+HANDWRITTEN_MULTI = {"hdiff_coupled": _hdiff_coupled_ref, "vadvc": _vadvc_ref}
 
 
 @pytest.mark.parametrize("name", sorted(PROGRAMS))
 def test_oracle_matches_handwritten(name):
-    x = make_input()
+    x = make_fields(name)
+    prog = PROGRAMS[name]()
     for k in KS:
-        want = x
-        for _ in range(k):
-            want = HANDWRITTEN[name](want)
+        if len(prog.inputs) == 1:
+            want = x
+            for _ in range(k):
+                want = HANDWRITTEN[name](want)
+        else:
+            arrs = dict(x)
+            for _ in range(k):
+                arrs[prog.passthrough] = HANDWRITTEN_MULTI[name](arrs)
+            want = arrs[prog.passthrough]
         np.testing.assert_allclose(
             oracle(name, k), np.asarray(want), rtol=1e-6, atol=1e-6,
             err_msg=f"{name} k={k}",

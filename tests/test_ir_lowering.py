@@ -83,9 +83,9 @@ def test_compound_fused_pallas_policy_now_works():
         comp.apply(x, policy="nope")
 
 
-def test_compound_multi_input_program_keeps_reference_policies():
-    """lower_pallas is single-input only; CompoundStencil must not build it
-    eagerly, so staged/fused-xla keep working for multi-input DAGs."""
+def test_compound_multi_input_program_runs_all_policies():
+    """Multi-input DAGs run every policy now that lower_pallas takes a
+    field mapping — including fused-pallas (one ref per field)."""
     from repro.core.compound import CompoundStencil
 
     prog = StencilProgram(
@@ -93,12 +93,13 @@ def test_compound_multi_input_program_keeps_reference_policies():
         [affine("s_a", "a", {(0, 0): 1.0}),
          affine("out", "s_a", {(0, 0): 1.0})],
     )
-    comp = CompoundStencil("sum2", prog)  # must not raise
+    comp = CompoundStencil("sum2", prog)
     x = {"a": _grid(2, 8, 8), "b": _grid(2, 8, 8)}
-    got = np.asarray(comp.apply(x, policy="fused-xla"))
-    np.testing.assert_allclose(got, np.asarray(x["a"]), rtol=0, atol=0)
-    with pytest.raises(ValueError, match="single-input"):
-        comp.apply(x, policy="fused-pallas")
+    for policy in ("fused-xla", "staged", "fused-pallas"):
+        got = np.asarray(comp.apply(x, policy=policy))
+        np.testing.assert_allclose(
+            got, np.asarray(x["a"]), rtol=0, atol=0, err_msg=policy
+        )
 
 
 def test_compound_accounting_is_graph_derived():
@@ -162,8 +163,14 @@ def test_lower_pallas_rejects_bad_inputs():
     two_in = StencilProgram(
         "two", ["a", "b"], [affine("out", "a", {(0, 0): 1.0})]
     )
-    with pytest.raises(ValueError, match="single-input"):
-        lower_pallas(two_in)
+    # Multi-input programs lower fine now, but demand a complete mapping.
+    fn2 = lower_pallas(two_in, interpret=True)
+    with pytest.raises(ValueError, match="pass a mapping"):
+        fn2(_grid(2, 8, 8))
+    with pytest.raises(ValueError, match="missing"):
+        fn2({"a": _grid(2, 8, 8)})
+    with pytest.raises(ValueError, match="share one grid"):
+        fn2({"a": _grid(2, 8, 8), "b": _grid(2, 8, 16)})
 
 
 def test_lower_sharded_validates_axes_and_shapes():

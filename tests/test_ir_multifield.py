@@ -1,0 +1,251 @@
+"""Multi-field IR programs: per-field analysis, lowering contracts, and the
+per-field wire model (ISSUE 5 tentpole).
+
+Backend parity for vadvc / hdiff_coupled lives in the conformance matrix
+(tests/conformance.py registers both); this module keeps the multi-field
+*contracts* that the matrix cells don't spell out: composed per-field radii,
+per-field reads summing to the program total, the degenerate
+constant-coefficient bit-match, missing-field errors, and the per-field
+halo-exchange byte model.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.dist import (
+    halo_exchange_bytes,
+    program_halo_exchange_bytes,
+    program_halo_exchange_bytes_per_shard,
+)
+from repro.ir import (
+    hdiff_coupled_program,
+    hdiff_program,
+    lower_pallas,
+    lower_reference,
+    lower_sharded,
+    plan_partition,
+    repeat,
+    smagorinsky_coeff,
+    vadvc_program,
+)
+from repro.ir.evaluate import apply_program
+
+
+def _grid(*shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+def _coupled_inputs(shape=(2, 16, 16)):
+    return {
+        "u": _grid(*shape, seed=1),
+        "coeff": jnp.asarray(smagorinsky_coeff(np.asarray(_grid(*shape, seed=2)))),
+    }
+
+
+def test_field_radii_compose_per_field():
+    """The state's radius grows by r per sweep; a zero-offset coefficient is
+    read through k-1 downstream sweeps, so its radius is 2(k-1); vadvc's
+    velocity (read through the destagger at every sweep) tracks the state."""
+    p = hdiff_coupled_program()
+    assert p.field_radii() == {"u": 2, "coeff": 0}
+    for k in (1, 2, 3):
+        pk = repeat(p, k)
+        assert pk.field_radii() == {"u": 2 * k, "coeff": 2 * (k - 1)}
+        assert pk.radius == 2 * k
+
+    v = vadvc_program()
+    assert v.field_radii() == {"s": 1, "w": 1}
+    for k in (1, 2, 3):
+        assert repeat(v, k).field_radii() == {"s": k, "w": k}
+
+
+def test_reads_by_field_sums_to_spec():
+    for prog in (hdiff_program(), hdiff_coupled_program(), vadvc_program(),
+                 repeat(hdiff_coupled_program(), 2), repeat(vadvc_program(), 3)):
+        per_field = prog.reads_by_field()
+        assert sum(per_field.values()) == prog.spec().reads
+        assert max(prog.field_radii().values()) == prog.radius
+    # Single-input programs degenerate to the scalar accounting exactly.
+    p = hdiff_program()
+    assert p.reads_by_field() == {"psi": p.spec().reads}
+    assert p.field_radius("psi") == p.radius
+
+
+def test_coupled_constant_coeff_matches_scalar_hdiff_bitwise():
+    """weighted_residual with a constant coeff field must reproduce the
+    scalar scaled_residual kernel bit-for-bit (same term grouping)."""
+    x = _grid(2, 20, 20, seed=3)
+    coeff = jnp.full(x.shape, 0.025, jnp.float32)
+    for k in (1, 2):
+        want = np.asarray(apply_program(repeat(hdiff_program(), k), x))
+        got = np.asarray(
+            apply_program(repeat(hdiff_coupled_program(), k), {"u": x, "coeff": coeff})
+        )
+        np.testing.assert_array_equal(got, want, err_msg=f"k={k}")
+
+
+def test_pallas_multifield_parity_and_field_order_independence():
+    arrs = _coupled_inputs()
+    pk = repeat(hdiff_coupled_program(), 2)
+    want = np.asarray(lower_reference(pk)(arrs))
+    got = np.asarray(lower_pallas(pk, interpret=True)(arrs))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    # Mapping insertion order must not matter (fields resolve by name).
+    flipped = {"coeff": arrs["coeff"], "u": arrs["u"]}
+    np.testing.assert_array_equal(
+        np.asarray(lower_pallas(pk, interpret=True)(flipped)), got
+    )
+
+
+def test_lower_sharded_missing_field_raises_clearly():
+    fn = lower_sharded(vadvc_program(), mesh_shape=(1, 1), inner="reference")
+    with pytest.raises(ValueError, match=r"missing\s+input\(s\) \['w'\]"):
+        fn({"s": _grid(2, 8, 8)})
+    with pytest.raises(ValueError, match="pass a mapping"):
+        fn(_grid(2, 8, 8))
+    with pytest.raises(ValueError, match="share one grid"):
+        fn({"s": _grid(2, 8, 8), "w": _grid(2, 8, 16)})
+
+
+def test_composed_chain_missing_field_raises_value_error():
+    """Regression: the k>1 chain paths used to die with a bare KeyError when
+    the mapping omitted a shared field; they now share the k=1 validation
+    (thread_chain -> resolve_field_arrays) and name the missing input."""
+    pk = repeat(hdiff_coupled_program(), 2)
+    u = _grid(2, 16, 16)
+    for fn in (lower_reference(pk), lower_reference(pk, mode="staged")):
+        with pytest.raises(ValueError, match=r"missing\s+input\(s\) \['coeff'\]"):
+            fn({"u": u})
+        with pytest.raises(ValueError, match="pass a mapping"):
+            fn(u)
+
+
+def test_compose_shared_name_shadowing_chain_entry_passthrough():
+    """Regression: compose renames the merged DAG but the chain keeps the
+    ORIGINAL per-sweep programs, so a downstream sweep whose input name
+    collides with an upstream shared field used to make slab_step run the
+    sweep on the shared array instead of the evolving state — Pallas and
+    sharded silently diverged from the reference. State must win the name
+    collision on every backend."""
+    from repro.ir import StencilProgram, affine, product
+
+    a = StencilProgram(
+        "a", ["s", "w"],
+        [affine("sbar", "s", {(1, 0): 0.5, (-1, 0): 0.5}),
+         product("out", "sbar", "w")],
+        passthrough="s",
+    )
+    b = StencilProgram("b", ["w"], [affine("out", "w", {(0, 0): 2.0})])
+    c = a.compose(b)  # b's input name "w" shadows a's shared field "w"
+    arrs = {"s": _grid(2, 16, 16, seed=7), "w": _grid(2, 16, 16, seed=8)}
+    want = np.asarray(lower_reference(c)(arrs))
+    staged = np.asarray(lower_reference(c, mode="staged")(arrs))
+    np.testing.assert_allclose(staged, want, rtol=1e-6, atol=1e-6)
+    got = np.asarray(lower_pallas(c, interpret=True)(arrs))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    sharded = np.asarray(
+        lower_sharded(c, mesh_shape=(1, 1), inner="reference")(arrs)
+    )
+    np.testing.assert_allclose(sharded, want, rtol=1e-6, atol=1e-6)
+
+
+def test_compose_rejects_reading_evolving_field_as_shared():
+    """A downstream sweep only ever sees the UPDATED state: reading the
+    evolving field as a shared (non-evolving) input must be rejected at
+    graph construction — the slab lowerings cannot supply pre-sweep
+    values, and a silent backend split is worse than an error."""
+    from repro.ir import StencilProgram, affine, product
+
+    a = StencilProgram(
+        "a", ["x", "c"], [affine("out", "x", {(0, 0): 1.0})], passthrough="x"
+    )
+    # b evolves "c" and reads "x" — a's evolving field — as a SHARED input:
+    # after a's sweep there is no original "x" left to feed it.
+    b = StencilProgram(
+        "b", ["c", "x"], [product("out", "c", "x")], passthrough="c"
+    )
+    with pytest.raises(ValueError, match="evolving field"):
+        a.compose(b)
+
+
+def test_lower_pallas_default_tile_budget_scales_with_field_count():
+    """The VMEM planner models one resident tile; an N-field kernel keeps
+    N slabs live, so the default block_rows must shrink accordingly."""
+    from repro.ir import StencilProgram, affine, scaled_residual
+
+    one = StencilProgram("one", ["a"], [affine("out", "a", {(0, 0): 1.0})])
+    two = StencilProgram(
+        "two", ["a", "b"],
+        [affine("s", "a", {(0, 0): 1.0}),
+         scaled_residual("out", "s", [("b", 1)], 1.0)],
+    )
+    rows, cols = 16, 8
+    budget = 640  # fits a 16-row single-field tile (512 B), not two of them
+    xs = {"a": _grid(2, rows, cols, seed=5), "b": _grid(2, rows, cols, seed=6)}
+    # Probe the chosen tile via the divisibility error on a bad override vs
+    # the accepted default: run both and compare numerics instead — the
+    # two-field default must still be correct, just smaller-tiled.
+    got1 = np.asarray(lower_pallas(one, vmem_budget=budget, interpret=True)(xs["a"]))
+    np.testing.assert_array_equal(got1, np.asarray(xs["a"]))
+    got2 = np.asarray(lower_pallas(two, vmem_budget=budget, interpret=True)(xs))
+    want2 = np.asarray(lower_reference(two)(xs))
+    np.testing.assert_allclose(got2, want2, rtol=1e-6, atol=1e-6)
+
+
+def test_lower_pallas_1d_stays_single_input():
+    from repro.ir import StencilProgram, affine
+
+    two = StencilProgram(
+        "two1d", ["a", "b"], [affine("out", "a", {(0,): 1.0})], ndim=1
+    )
+    with pytest.raises(ValueError, match="single-input"):
+        lower_pallas(two, interpret=True)
+
+
+def test_program_halo_exchange_bytes_is_per_field_sum():
+    D, R, C = 4, 48, 48
+    # Single-input: reduces exactly to the halo_exchange_bytes formula.
+    p = hdiff_program()
+    assert program_halo_exchange_bytes(p, D, R, C, 4, col_shards=2) == (
+        halo_exchange_bytes(D, R, C, 4, halo=p.radius, col_shards=2)
+    )
+    # hdiff_coupled at k=1: coeff radius 0 contributes ZERO bytes.
+    pc = hdiff_coupled_program()
+    assert program_halo_exchange_bytes(pc, D, R, C, 4, col_shards=2) == (
+        program_halo_exchange_bytes(p, D, R, C, 4, col_shards=2)
+    )
+    # At k=2 the coeff field adds its own radius-2 band on top of the
+    # state's radius-4 band.
+    pc2 = repeat(pc, 2)
+    assert program_halo_exchange_bytes(pc2, D, R, C, 4, col_shards=2) == (
+        halo_exchange_bytes(D, R, C, 4, halo=4, col_shards=2)
+        + halo_exchange_bytes(D, R, C, 4, halo=2, col_shards=2)
+    )
+    # vadvc: both fields move a radius-k band.
+    for k in (1, 2):
+        vk = repeat(vadvc_program(), k)
+        assert program_halo_exchange_bytes(vk, D, R, C, 8) == (
+            2 * halo_exchange_bytes(D, R, C, 8, halo=k)
+        )
+    # Per-shard variant mirrors the same per-field sum.
+    assert program_halo_exchange_bytes_per_shard(
+        pc2, D, R // 2, C // 4, row_sharded=True, col_sharded=True
+    ) == sum(
+        2 * D * h * (C // 4) * 4 + 2 * D * (R // 2) * h * 4 + 4 * D * h * h * 4
+        for h in (4, 2)
+    )
+
+
+def test_plan_partition_accounts_multifield_wire():
+    """The planner's wire objective sums per field: vadvc (two radius-1
+    fields) models exactly twice the single-field laplacian traffic, and
+    planning still returns a feasible factorization."""
+    from repro.ir import laplacian_program
+
+    D, R, C = 8, 64, 64
+    plan_v = plan_partition(vadvc_program(), D, R, C, 8)
+    plan_l = plan_partition(laplacian_program(), D, R, C, 8)
+    assert plan_v.mesh_shape == plan_l.mesh_shape
+    assert plan_v.wire_bytes == 2 * plan_l.wire_bytes

@@ -79,6 +79,56 @@ def test_spec_is_structural_not_numeric(r, w1, w2):
     assert (a.macs, a.other_ops, a.reads, a.radius) == (b.macs, b.other_ops, b.reads, b.radius)
 
 
+def _multifield(radii):
+    """A program over len(radii) input fields: field i is star-smoothed at
+    radius radii[i], and the smoothed fields are summed into the output (a
+    scaled_residual over the non-base terms), so every field's composed
+    footprint is exactly its own star."""
+    from repro.ir import scaled_residual
+
+    fields = [f"f{i}" for i in range(len(radii))]
+    ops = [affine(f"s{i}", f, _star_taps(r)) for i, (f, r) in enumerate(zip(fields, radii))]
+    if len(radii) == 1:
+        ops.append(affine("out", "s0", {(0, 0): 1.0}))
+    else:
+        ops.append(
+            scaled_residual("out", "s0", [(f"s{i}", 1) for i in range(1, len(radii))], 1.0)
+        )
+    return StencilProgram("multi", fields, ops)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=4))
+def test_multifield_accounting_is_per_field_sum(radii):
+    """Tentpole invariant: a multi-field program's total reads equal the
+    per-field sum, its radius is the widest field's reach, and compulsory
+    fused bytes count every field once (+ the output)."""
+    prog = _multifield(radii)
+    per_field = prog.reads_by_field()
+    assert sum(per_field.values()) == prog.spec().reads
+    for i, r in enumerate(radii):
+        assert per_field[f"f{i}"] == len(_star_taps(r))
+        assert prog.field_radius(f"f{i}") == r
+    assert prog.radius == max(radii)
+    points = 64
+    assert prog.fused_bytes(points) == (len(radii) + 1) * points * 4
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 3))
+def test_single_field_degenerates_to_scalar_accounting(r):
+    """A one-field program answered through the per-field API must agree
+    exactly with the classic scalar accounting — nothing drifts when the
+    multi-field machinery is not in play."""
+    prog = _chain([r])
+    spec = prog.spec()
+    assert prog.reads_by_field() == {"x": spec.reads}
+    assert prog.field_radii() == {"x": spec.radius}
+    multi = _multifield([r])  # same star through the multi-field builder
+    assert multi.reads_by_field()["f0"] == spec.reads
+    assert multi.field_radius("f0") == spec.radius
+
+
 @settings(max_examples=20, deadline=None)
 @given(
     st.integers(1, 2),

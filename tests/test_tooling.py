@@ -45,6 +45,19 @@ def _run(xml: str, tmp_path, *flags):
     )
 
 
+def _run_many(xmls, tmp_path, *flags):
+    reports = []
+    for i, xml in enumerate(xmls):
+        report = tmp_path / f"report{i}.xml"
+        report.write_text(xml)
+        reports.append(str(report))
+    return subprocess.run(
+        [sys.executable, str(SCRIPT), *reports, *flags],
+        capture_output=True,
+        text=True,
+    )
+
+
 def test_passes_on_non_dependency_skips(tmp_path):
     proc = _run(CLEAN, tmp_path)
     assert proc.returncode == 0, proc.stdout + proc.stderr
@@ -75,4 +88,23 @@ def test_usage_error_without_report():
     proc = subprocess.run(
         [sys.executable, str(SCRIPT)], capture_output=True, text=True
     )
+    assert proc.returncode == 2
+
+
+def test_multiple_reports_gated_in_one_call(tmp_path):
+    """The bench-smoke job passes every junitxml it produced in ONE call;
+    one bad report fails the whole gate and names the offending file."""
+    proc = _run_many([CLEAN, CLEAN], tmp_path)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "2 report(s)" in proc.stdout
+    proc = _run_many([CLEAN, DEP_SKIP], tmp_path)
+    assert proc.returncode == 1
+    assert "report1.xml" in proc.stdout and "hypothesis" in proc.stdout
+    proc = _run_many([MESH_SKIP, CLEAN], tmp_path, "--fail-on-mesh-skips")
+    assert proc.returncode == 1
+    assert "report0.xml" in proc.stdout and "2x4" in proc.stdout
+
+
+def test_unknown_flag_is_usage_error(tmp_path):
+    proc = _run(CLEAN, tmp_path, "--nope")
     assert proc.returncode == 2
