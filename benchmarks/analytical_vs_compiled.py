@@ -32,9 +32,10 @@ def run(fast: bool = False) -> None:
     lo = hdiff_min_bytes(depth, ROWS, COLS)
     hi = hdiff_algorithmic_bytes(depth, ROWS, COLS)
 
-    emit("analytic/flops_model", model_flops, "Eq.5-7 op count as flops")
+    emit("analytic/flops_model", model_flops, "Eq.5-7 op count as flops",
+         unit="flops")
     emit("analytic/flops_hlo", hlo_flops,
-         f"ratio hlo/model={hlo_flops/model_flops:.2f}")
+         f"ratio hlo/model={hlo_flops/model_flops:.2f}", unit="flops")
     emit("analytic/bytes_hlo", hlo_bytes,
          f"fused_bound={lo:.3e} algorithmic_bound={hi:.3e} "
-         f"within_bounds={lo * 0.5 <= hlo_bytes <= hi * 1.5}")
+         f"within_bounds={lo * 0.5 <= hlo_bytes <= hi * 1.5}", unit="bytes")

@@ -2,19 +2,46 @@
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable
 
 import jax
 
+from repro.obs import metrics
+
 # The paper's evaluation domain (§4.1).
 ROWS, COLS, DEPTH = 256, 256, 64
 
-_rows: list[tuple[str, float, str]] = []
+_rows: list[tuple[str, float, str, str]] = []
 
 
-def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall time per call in microseconds (blocks on device)."""
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    """Best-of-N wall-clock stats for one timed callable (microseconds).
+
+    ``median_us`` is the headline (robust to scheduler noise); ``min_us`` is
+    the best case (closest to the machine's true capability — what perf
+    trajectories should trend on); both are reported so a regression in one
+    but not the other distinguishes noise from a real slowdown.
+    """
+
+    median_us: float
+    min_us: float
+    mean_us: float
+    iters: int
+    warmup: int
+
+
+def time_stats(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> Timing:
+    """Times ``fn(*args)`` with ``block_until_ready`` discipline.
+
+    At least one untimed warmup call ALWAYS runs first, so compilation can
+    never land inside a timed iteration — even when the caller has already
+    primed the jit cache and asks for ``warmup=0``.
+    """
+    warmup = max(1, warmup)
+    iters = max(1, iters)
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -23,12 +50,33 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2] * 1e6
+    return Timing(
+        median_us=times[len(times) // 2] * 1e6,
+        min_us=times[0] * 1e6,
+        mean_us=sum(times) / len(times) * 1e6,
+        iters=iters,
+        warmup=warmup,
+    )
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    _rows.append((name, us_per_call, derived))
-    print(f"{name},{us_per_call:.1f},{derived}")
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (blocks on device)."""
+    return time_stats(fn, *args, warmup=warmup, iters=iters).median_us
+
+
+def emit(name: str, value: float, derived: str = "", unit: str = "us") -> None:
+    """Records one benchmark row.
+
+    ``unit`` tags what ``value`` measures so downstream consumers
+    (``scripts/bench_compare.py``) know which comparison rule applies:
+    ``"us"`` (wall-clock, lower is better, noise-tolerant), ``"bytes"``
+    (deterministic wire/HBM models, tight tolerance), anything else
+    (``"x"``, ``"model_us"``, ``"bool"``, ...) is informational and never
+    gates.
+    """
+    _rows.append((name, value, derived, unit))
+    metrics.set_gauge(f"bench.{name}", value)
+    print(f"{name},{value:.1f},{derived},{unit}")
 
 
 def all_rows():

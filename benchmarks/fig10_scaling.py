@@ -136,12 +136,13 @@ def run(fast: bool = False) -> None:
             f"fig10/shards_{n:02d}",
             plan.step_s * 1e6,
             f"kind={plan.kind} speedup={speedup:.1f}x ici_s={plan.ici_s:.2e}",
+            unit="model_us",
         )
     # The paper's headline: 32 blocks -> 32.6x over 1 block (linear).
     plan32 = plan_partition(DEPTH, ROWS, COLS, 32)
     emit("fig10/speedup_at_32", t1 / plan32.step_s,
          f"paper reports 32.6x at 32 B-blocks; depth-parallel model gives "
-         f"{t1/plan32.step_s:.1f}x (linear, no collectives)")
+         f"{t1/plan32.step_s:.1f}x (linear, no collectives)", unit="x")
 
     # Halo traffic model when forced to row-decompose (beyond 64 shards the
     # paper's plane-parallel strategy runs out of planes; ours does too).
@@ -152,6 +153,7 @@ def run(fast: bool = False) -> None:
             plan.step_s * 1e6,
             f"kind={plan.kind} rows/shard={ROWS//plan.row_shards} "
             f"ici_s={plan.ici_s:.2e} (halo exchange appears)",
+            unit="model_us",
         )
 
     # 2-D rows x cols factorization: wire bytes per exchange round for every
@@ -169,6 +171,7 @@ def run(fast: bool = False) -> None:
             f"fig10/wire_2d_{r_sh}x{c_sh}",
             wire,
             "mesh-total halo bytes/round, 2-axis model (bands + corners)",
+            unit="bytes",
         )
     pick = plan_2d(prog, DEPTH, ROWS, COLS, 8)
     emit(
@@ -177,6 +180,7 @@ def run(fast: bool = False) -> None:
         f"plan_partition pick {pick.row_shards}x{pick.col_shards} "
         f"(<= 1-D row baseline "
         f"{halo_exchange_bytes(DEPTH, ROWS, COLS, 8, halo=prog.radius)})",
+        unit="bytes",
     )
 
     # REAL 8-fake-device run: correctness + measured halo bytes vs model.
@@ -197,7 +201,7 @@ def real_halo_check(depth: int, rows: int, cols: int) -> None:
         capture_output=True, text=True, env=env, timeout=600,
     )
     if proc.returncode != 0:
-        emit("fig10/real_8dev", 0.0, f"FAILED: {proc.stderr[-200:]!r}")
+        emit("fig10/real_8dev", 0.0, f"FAILED: {proc.stderr[-200:]!r}", unit="error")
         raise RuntimeError(f"real 8-device halo run failed:\n{proc.stderr[-2000:]}")
     line = next(l for l in proc.stdout.splitlines() if l.startswith("RESULT "))
     fields = dict(kv.split("=") for kv in line.split()[1:])
@@ -210,6 +214,7 @@ def real_halo_check(depth: int, rows: int, cols: int) -> None:
         f"mesh_total_model={fields['mesh_total_model']} "
         f"permutes={fields['permutes']} (2x4 mesh, depth x row decomposition, "
         f"sharded==single-device verified)",
+        unit="bytes",
     )
     line2 = next(l for l in proc.stdout.splitlines() if l.startswith("RESULT2 "))
     fields2 = dict(kv.split("=") for kv in line2.split()[1:])
@@ -222,6 +227,7 @@ def real_halo_check(depth: int, rows: int, cols: int) -> None:
         f"mesh_total_model={fields2['mesh_total_model']} "
         f"permutes={fields2['permutes']} (exchange ROUNDS per simulated step "
         f"halve; repeat(hdiff,2)==hdiff∘hdiff verified)",
+        unit="bytes",
     )
     line3 = next(l for l in proc.stdout.splitlines() if l.startswith("RESULT2D "))
     fields3 = dict(kv.split("=") for kv in line3.split()[1:])
@@ -237,6 +243,7 @@ def real_halo_check(depth: int, rows: int, cols: int) -> None:
         f"mesh_total_model={fields3['mesh_total_model']} "
         f"permutes={fields3['permutes']} (2-D decomposition verified vs "
         f"single-device)",
+        unit="bytes",
     )
     emit(
         "fig10/real_8dev_2d_overlap",
@@ -245,6 +252,7 @@ def real_halo_check(depth: int, rows: int, cols: int) -> None:
         f"(interior compute issued concurrently with the edge exchange); "
         f"overlap wire bytes {fields3['overlap_measured']} == "
         f"{measured3:.0f} non-overlap",
+        unit="bool",
     )
     if fields3["overlap_bitmatch"] != "True":
         raise RuntimeError("overlap=True did not bit-match overlap=False")
@@ -258,4 +266,5 @@ def real_halo_check(depth: int, rows: int, cols: int) -> None:
         f"per-field sum model); model={model4:.0f} "
         f"ratio={measured4 / model4 if model4 else float('nan'):.6f} "
         f"permutes={fields4['permutes']} (depth x rows mesh, parity verified)",
+        unit="bytes",
     )

@@ -21,7 +21,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import COLS, ROWS, emit, time_fn
+from benchmarks.common import COLS, ROWS, emit, time_stats
 from repro.ir import (
     ELEMENTARY_PROGRAMS,
     hdiff_program,
@@ -69,13 +69,14 @@ def run(fast: bool = False) -> None:
             while sweeps_done < k:
                 want, sweeps_done = ref(want), sweeps_done + 1
             parity = _parity(fn(x), want, k)  # also compiles fn's jit cache
-            us = time_fn(fn, x, warmup=0, iters=3)
-            us_per_step = us / k
+            ts = time_stats(fn, x, warmup=0, iters=3)
+            us_per_step = ts.median_us / k
             if base_us is None:
                 base_us = us_per_step
             emit(
                 f"fig12/{name}_k{k}",
                 us_per_step,
+                f"min_us={ts.min_us / k:.1f} "
                 f"hbm_bytes_per_step={prog_k.fused_bytes_per_step(points):.0f} "
                 f"(/{k} of one residency) "
                 f"per_step_speedup={base_us / us_per_step:.2f}x "

@@ -28,7 +28,7 @@ import sys
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import COLS, ROWS, emit, time_fn
+from benchmarks.common import COLS, ROWS, emit, time_stats
 from repro.ir import (
     hdiff_coupled_program,
     lower_pallas,
@@ -106,11 +106,12 @@ def run(fast: bool = False) -> None:
                     f"{name} k={k}: fused multi-input Pallas diverges from "
                     f"composed reference: max|d|={err:.1e}"
                 )
-            us = time_fn(fn, arrs, warmup=1, iters=3)
+            ts = time_stats(fn, arrs, warmup=1, iters=3)
             reads = pk.reads_by_field()
             emit(
                 f"fig13/{name}_k{k}",
-                us / k,
+                ts.median_us / k,
+                f"min_us={ts.min_us / k:.1f} "
                 f"parity=ok(max|d|={err:.1e}) "
                 f"hbm_bytes_per_step={pk.fused_bytes_per_step(points):.0f} "
                 f"({len(pk.inputs)} fields in + out, /{k}) "
@@ -135,7 +136,7 @@ def real_multifield_check(depth: int, rows: int, cols: int) -> None:
         capture_output=True, text=True, env=env, timeout=600,
     )
     if proc.returncode != 0:
-        emit("fig13/real_8dev", 0.0, f"FAILED: {proc.stderr[-200:]!r}")
+        emit("fig13/real_8dev", 0.0, f"FAILED: {proc.stderr[-200:]!r}", unit="error")
         raise RuntimeError(f"real 8-device multi-field run failed:\n{proc.stderr[-2000:]}")
     for line in proc.stdout.splitlines():
         if not line.startswith("RESULT "):
@@ -149,6 +150,7 @@ def real_multifield_check(depth: int, rows: int, cols: int) -> None:
             f"ratio={measured / model if model else float('nan'):.6f} "
             f"permutes={fields['permutes']} parity={fields['parity']} "
             f"(2x4 rows x cols mesh; hdiff_coupled k=1 moves zero coeff bytes)",
+            unit="bytes",
         )
         if measured != model:
             raise RuntimeError(

@@ -31,17 +31,20 @@ def run(fast: bool = False) -> None:
     ridge_vpu = TPUV5E.peak_flops_vpu_f32 / TPUV5E.hbm_bw
 
     emit("fig1/ai_algorithmic", ai_algo,
-         f"every-read-to-memory model; attainable={min(TPUV5E.peak_flops_vpu_f32, TPUV5E.hbm_bw*ai_algo)/1e9:.0f}GFLOP/s")
+         f"every-read-to-memory model; attainable={min(TPUV5E.peak_flops_vpu_f32, TPUV5E.hbm_bw*ai_algo)/1e9:.0f}GFLOP/s",
+         unit="flops/byte")
     emit("fig1/ai_fused", ai_fused,
-         f"compulsory-traffic model; attainable={min(TPUV5E.peak_flops_vpu_f32, TPUV5E.hbm_bw*ai_fused)/1e9:.0f}GFLOP/s")
+         f"compulsory-traffic model; attainable={min(TPUV5E.peak_flops_vpu_f32, TPUV5E.hbm_bw*ai_fused)/1e9:.0f}GFLOP/s",
+         unit="flops/byte")
     emit("fig1/ridge_point_vpu", ridge_vpu,
          f"v5e VPU ridge at {ridge_vpu:.2f} flops/B; hdiff sits "
-         f"{'left (memory-bound)' if ai_fused < ridge_vpu else 'right (compute-bound)'}")
+         f"{'left (memory-bound)' if ai_fused < ridge_vpu else 'right (compute-bound)'}",
+         unit="flops/byte")
 
     # Faithful §3.1 reproduction: the paper's AIE cycle counts (Eq. 5-10).
     cyc = aie_hdiff_cycles(ROWS, COLS, DEPTH)
     emit("fig1/aie_compute_cycles_eq7", cyc["hdiff_compute_cycles"],
-         "paper Eq.5-7 (verbatim model)")
+         "paper Eq.5-7 (verbatim model)", unit="cycles")
     emit("fig1/aie_memory_cycles_eq10", cyc["hdiff_memory_cycles"],
          f"paper Eq.8-10; compute/memory={cyc['hdiff_compute_cycles']/cyc['hdiff_memory_cycles']:.2f} "
-         "(>1 for flux per paper's §3.1 discussion)")
+         "(>1 for flux per paper's §3.1 discussion)", unit="cycles")

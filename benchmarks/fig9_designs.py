@@ -63,12 +63,13 @@ def run(fast: bool = False) -> None:
     algo = hdiff_algorithmic_bytes(depth, ROWS, COLS)
     fmin = hdiff_min_bytes(depth, ROWS, COLS)
     emit("fig9/bytes_staged_over_fused", algo / fmin,
-         f"staged={algo/1e6:.1f}MB fused={fmin/1e6:.1f}MB (x{algo/fmin:.1f} reuse)")
+         f"staged={algo/1e6:.1f}MB fused={fmin/1e6:.1f}MB (x{algo/fmin:.1f} reuse)",
+         unit="x")
     emit("fig9/tpu_projected_speedup_staged_to_fused", algo / fmin,
          "v5e projection: both policies are HBM-bound, so speedup ~= bytes "
-         "ratio (paper's tri-AIE speedup is 3.5x, pipeline-limited)")
+         "ratio (paper's tri-AIE speedup is 3.5x, pipeline-limited)", unit="x")
     emit("fig9/cpu_walltime_ratio_staged_to_fused", us / us_fused,
-         "CPU caches hide staged traffic; informational only")
+         "CPU caches hide staged traffic; informational only", unit="x")
 
     # Temporal blocking (beyond-paper, from the paper's own §1 insight):
     # two timesteps per HBM pass halves compulsory traffic per step.

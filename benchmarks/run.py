@@ -1,7 +1,10 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows. ``--fast`` shrinks the grid
+Prints ``name,value,derived,unit`` CSV rows. ``--fast`` shrinks the grid
 depth for quick CI-style runs; full runs use the paper's 256x256x64 domain.
+
+Set ``REPRO_TRACE_DIR=/some/dir`` to capture a ``jax.profiler`` trace per
+benchmark (one subdirectory each, viewable in Perfetto / TensorBoard).
 """
 
 from __future__ import annotations
@@ -42,13 +45,16 @@ def main() -> None:
     }
     only = {s for s in args.only.split(",") if s}
 
-    print("name,us_per_call,derived")
+    from repro.obs import maybe_trace
+
+    print("name,value,derived,unit")
     failed = []
     for name, fn in benches.items():
         if only and name not in only:
             continue
         try:
-            fn(fast=args.fast)
+            with maybe_trace(name):
+                fn(fast=args.fast)
         except Exception as e:
             failed.append(name)
             print(f"{name}/ERROR,0,{e!r}", file=sys.stderr)

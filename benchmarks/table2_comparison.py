@@ -43,6 +43,7 @@ def run(fast: bool = False) -> None:
             0.0,
             f"device={device} peak={tflops}TFLOPS bw={bw}GB/s "
             f"perf={gops}GOp/s roofline={roof}%",
+            unit="info",
         )
 
     # Our measured row (this container's CPU, XLA-fused f32).
@@ -66,10 +67,11 @@ def run(fast: bool = False) -> None:
         f"AI={ai:.2f}flops/B attainable={attain/1e9:.0f}GOp/s "
         f"bound={'memory' if attain == attain_mem else 'compute'} "
         f"(projection from roofline, single chip)",
+        unit="model_us",
     )
     # Roofline fraction if the kernel achieves the memory-bound ceiling
     # (fused kernel moves compulsory bytes only):
     frac = roofline_fraction(attain, flops, bts)
     emit("table2/ours_tpu_v5e_roofline_fraction", frac * 100,
          f"{frac*100:.0f}% of attainable roofline at compulsory traffic "
-         f"(paper achieves 31.4% of peak)")
+         f"(paper achieves 31.4% of peak)", unit="%")

@@ -44,4 +44,4 @@ def run(fast: bool = False) -> None:
     y_seq, _ = wkv6_ref(r, k, v, w, u)
     y_ch, _ = wkv6_chunked_ref(r, k, v, w, u, chunk=64)
     err = float(jnp.abs(y_seq - y_ch).max())
-    emit("wkv6/chunked_max_abs_err", err, "vs sequential oracle")
+    emit("wkv6/chunked_max_abs_err", err, "vs sequential oracle", unit="abs_err")

@@ -1,0 +1,207 @@
+#!/usr/bin/env python
+"""Perf-trajectory gate: current BENCH_<fig>.json vs committed baselines.
+
+``scripts/bench_smoke.py`` produces one machine-readable record per fig;
+this script compares those records against the baselines committed under
+``benchmarks/baselines/`` and exits nonzero on a per-row regression, so a
+PR that slows a kernel down or fattens a wire model fails CI instead of
+silently bending the trajectory.
+
+Comparison rules, per row, keyed by the row's ``unit`` tag:
+
+  * ``us``     — wall clock, lower is better, noisy on shared runners: a
+                 regression needs BOTH ``cur > base * (1 + --max-us-regression)``
+                 AND ``cur - base > --us-floor`` microseconds (the absolute
+                 floor stops 20 us -> 45 us interpret-mode jitter from
+                 failing a build).
+  * ``bytes``  — deterministic traffic models (wire bytes, HBM bytes): ANY
+                 drift beyond ``--max-bytes-regression`` in either
+                 direction fails, because byte counts only move when the
+                 program or the model changed — refresh the baseline
+                 deliberately with ``--update`` when that's intended.
+  * anything else (``x``, ``model_us``, ``bool``, ``info``, ...) —
+                 informational, never gates.
+
+Rows are matched by name; a gating row present in the baseline but missing
+from the current run is a failure (coverage shrank). Records whose
+metadata differs on ``backend`` / ``device_kind`` / ``device_count`` are
+skipped entirely — a laptop run must not gate against a CI baseline.
+
+``--update`` rewrites the baselines from the current records and exits 0;
+CI refreshes the committed baseline artifact this way on main.
+
+Usage:
+    PYTHONPATH=src python scripts/bench_compare.py \
+        --current-dir bench-artifacts --baseline-dir benchmarks/baselines
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(
+    0,
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"),
+)
+
+from repro.obs import MATCH_KEYS  # noqa: E402
+
+GATED_UNITS = ("us", "bytes")
+
+
+def load_records(directory: Path) -> dict[str, dict]:
+    """``{fig: record}`` for every BENCH_<fig>.json in ``directory``."""
+    records = {}
+    for path in sorted(directory.glob("BENCH_*.json")):
+        rec = json.loads(path.read_text())
+        records[rec.get("fig", path.stem.removeprefix("BENCH_"))] = rec
+    return records
+
+
+def meta_mismatch(cur: dict, base: dict) -> list[str]:
+    """The MATCH_KEYS on which the two records' environments differ."""
+    cm, bm = cur.get("meta", {}), base.get("meta", {})
+    return [k for k in MATCH_KEYS if cm.get(k) != bm.get(k)]
+
+
+def rows_by_name(record: dict) -> dict[str, dict]:
+    return {r["name"]: r for r in record.get("rows", [])}
+
+
+def compare_fig(
+    cur: dict,
+    base: dict,
+    *,
+    max_us_regression: float,
+    us_floor: float,
+    max_bytes_regression: float,
+) -> tuple[list[str], list[str]]:
+    """Returns ``(failures, notes)`` for one fig's record pair."""
+    failures: list[str] = []
+    notes: list[str] = []
+    fig = cur.get("fig", "?")
+
+    mismatch = meta_mismatch(cur, base)
+    if mismatch:
+        cm, bm = cur.get("meta", {}), base.get("meta", {})
+        notes.append(
+            f"{fig}: SKIPPED (metadata mismatch on "
+            + ", ".join(f"{k}: {bm.get(k)!r} -> {cm.get(k)!r}" for k in mismatch)
+            + ")"
+        )
+        return failures, notes
+
+    cur_rows, base_rows = rows_by_name(cur), rows_by_name(base)
+    for name, brow in base_rows.items():
+        unit = brow.get("unit", "us")
+        if unit not in GATED_UNITS:
+            continue
+        crow = cur_rows.get(name)
+        if crow is None:
+            failures.append(f"{fig}: {name} [{unit}] present in baseline but "
+                            f"missing from the current run")
+            continue
+        bval, cval = float(brow["value"]), float(crow["value"])
+        if unit == "us":
+            limit = bval * (1.0 + max_us_regression)
+            if cval > limit and cval - bval > us_floor:
+                failures.append(
+                    f"{fig}: {name} wall-clock regression "
+                    f"{bval:.1f}us -> {cval:.1f}us "
+                    f"(limit {limit:.1f}us = +{max_us_regression:.0%}, "
+                    f"floor +{us_floor:.0f}us)"
+                )
+        elif unit == "bytes":
+            tol = bval * max_bytes_regression
+            if abs(cval - bval) > tol:
+                failures.append(
+                    f"{fig}: {name} byte-model drift {bval:.0f} -> {cval:.0f} "
+                    f"(tolerance +/-{max_bytes_regression:.0%}; byte counts "
+                    f"are deterministic — refresh the baseline with --update "
+                    f"if this change is intended)"
+                )
+    new = [n for n in cur_rows if n not in base_rows]
+    if new:
+        notes.append(f"{fig}: {len(new)} new row(s) not in baseline: "
+                     + ", ".join(sorted(new)[:5])
+                     + ("..." if len(new) > 5 else ""))
+    return failures, notes
+
+
+def update_baselines(current: dict[str, dict], baseline_dir: Path) -> None:
+    baseline_dir.mkdir(parents=True, exist_ok=True)
+    for fig, rec in current.items():
+        path = baseline_dir / f"BENCH_{fig}.json"
+        path.write_text(json.dumps(rec, indent=2) + "\n")
+        print(f"baseline updated: {path}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current-dir", required=True,
+                    help="directory holding the fresh BENCH_<fig>.json records")
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines",
+                    help="committed baseline records (default: %(default)s)")
+    ap.add_argument("--max-us-regression", type=float, default=0.5,
+                    help="relative wall-clock regression bound "
+                         "(0.5 = +50%%; default: %(default)s)")
+    ap.add_argument("--us-floor", type=float, default=200.0,
+                    help="absolute wall-clock slack in us — a row must also "
+                         "slow by more than this to fail (default: %(default)s)")
+    ap.add_argument("--max-bytes-regression", type=float, default=0.02,
+                    help="byte-model drift tolerance, either direction "
+                         "(default: %(default)s)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baselines from the current records")
+    args = ap.parse_args(argv)
+
+    current = load_records(Path(args.current_dir))
+    if not current:
+        print(f"no BENCH_*.json records in {args.current_dir}", file=sys.stderr)
+        return 1
+    if args.update:
+        update_baselines(current, Path(args.baseline_dir))
+        return 0
+
+    baseline = load_records(Path(args.baseline_dir))
+    failures: list[str] = []
+    for fig, cur in sorted(current.items()):
+        base = baseline.get(fig)
+        if base is None:
+            failures.append(
+                f"{fig}: no baseline in {args.baseline_dir} "
+                f"(run with --update to create it)"
+            )
+            continue
+        figs_failures, notes = compare_fig(
+            cur,
+            base,
+            max_us_regression=args.max_us_regression,
+            us_floor=args.us_floor,
+            max_bytes_regression=args.max_bytes_regression,
+        )
+        failures.extend(figs_failures)
+        for n in notes:
+            print(n)
+        if not figs_failures and not any(n.endswith(")") and "SKIPPED" in n for n in notes):
+            gated = sum(
+                1 for r in base.get("rows", []) if r.get("unit", "us") in GATED_UNITS
+            )
+            print(f"{fig}: ok ({gated} gated row(s) within bounds)")
+
+    if failures:
+        print(f"\nbench compare FAILED ({len(failures)} problem(s)):",
+              file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"bench compare ok: {len(current)} fig(s) vs {args.baseline_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

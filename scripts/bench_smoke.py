@@ -9,7 +9,12 @@ produced). This script runs fig10 / fig11 / fig12 / fig13 on a reduced grid
 into ``benchmarks.common`` BEFORE the fig modules import it, plus each
 fig's ``fast=True`` mode) and writes one JSON record per fig with:
 
-  * ``rows``          — the raw ``(name, value, derived)`` benchmark rows;
+  * ``rows``          — the raw ``(name, value, derived, unit)`` benchmark
+                        rows (``unit`` drives scripts/bench_compare.py's
+                        per-row comparison rule);
+  * ``meta``          — device/platform provenance (jax version, backend,
+                        device kind/count, commit SHA) so trajectory
+                        comparisons only gate like-for-like rows;
   * ``parity_ok``     — every in-benchmark parity check held (fig10/12/13
                         raise on divergence; fig11 marks rows parity=FAIL);
   * ``wire_ratios``   — every measured-vs-model wire-byte ratio parsed
@@ -44,18 +49,23 @@ DEFAULT_FIGS = ("fig10", "fig11", "fig12", "fig13")
 
 
 def extract_wire_ratios(rows) -> list[float]:
-    """Every measured-vs-model ratio stamped into the rows' derived column."""
-    return [
-        float(m)
-        for _name, _value, derived in rows
-        for m in RATIO_RE.findall(derived)
-    ]
+    """Every measured-vs-model ratio stamped into the rows' derived column.
+
+    Rows are ``(name, value, derived)`` or ``(name, value, derived, unit)``
+    — the unit column arrived with the trajectory gate and old callers/tests
+    still hand in 3-tuples."""
+    return [float(m) for row in rows for m in RATIO_RE.findall(row[2])]
 
 
 def rows_parity_ok(rows) -> bool:
     """fig11-style rows carry parity=ok / parity=FAIL inline (the other figs
     raise on parity failure, which the caller turns into error != None)."""
-    return not any("parity=FAIL" in derived for _n, _v, derived in rows)
+    return not any("parity=FAIL" in row[2] for row in rows)
+
+
+def row_unit(row) -> str:
+    """The unit tag of a benchmark row; 3-tuple rows predate tagging = us."""
+    return row[3] if len(row) > 3 else "us"
 
 
 def gate_record(record, lo: float = RATIO_LO, hi: float = RATIO_HI) -> list[str]:
@@ -80,6 +90,7 @@ def run_figs(figs, depth: int, rows: int, cols: int):
     yielding one record dict per fig. Import happens HERE so the grid patch
     lands before the fig modules read ROWS/COLS/DEPTH at import time."""
     import benchmarks.common as common
+    from repro.obs import maybe_trace, runtime_metadata
 
     common.DEPTH, common.ROWS, common.COLS = depth, rows, cols
     from benchmarks import (  # noqa: E402  (grid must be patched first)
@@ -99,12 +110,14 @@ def run_figs(figs, depth: int, rows: int, cols: int):
     if unknown:
         raise SystemExit(f"unknown fig(s) {unknown}; choose from {sorted(runners)}")
 
+    meta = runtime_metadata()
     for fig in figs:
         start_rows = len(common.all_rows())
         t0 = time.perf_counter()
         error = None
         try:
-            runners[fig](fast=True)
+            with maybe_trace(fig):
+                runners[fig](fast=True)
         except Exception as e:  # parity asserts / subprocess failures land here
             error = f"{type(e).__name__}: {e}"
         wall = time.perf_counter() - t0
@@ -112,12 +125,19 @@ def run_figs(figs, depth: int, rows: int, cols: int):
         yield {
             "fig": fig,
             "grid": {"depth": depth, "rows": rows, "cols": cols},
+            "meta": meta,
             "wall_clock_s": round(wall, 3),
             "parity_ok": error is None and rows_parity_ok(rows_out),
             "wire_ratios": extract_wire_ratios(rows_out),
             "error": error,
             "rows": [
-                {"name": n, "value": v, "derived": d} for n, v, d in rows_out
+                {
+                    "name": r[0],
+                    "value": r[1],
+                    "derived": r[2],
+                    "unit": row_unit(r),
+                }
+                for r in rows_out
             ],
         }
 

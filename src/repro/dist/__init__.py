@@ -21,10 +21,12 @@ from repro.dist.halo import (
     halo_exchange_bytes,
     halo_exchange_bytes_per_shard,
     make_sharded_hdiff,
+    measured_collective_permute_bytes,
     owned_rows_mask,
     program_exchange_radii,
     program_halo_exchange_bytes,
     program_halo_exchange_bytes_per_shard,
+    wire_drift_report,
 )
 from repro.dist.reduce import compress_bf16, decompress_bf16, reduce_gradients
 from repro.dist.sharding import (
@@ -44,6 +46,7 @@ __all__ = [
     "halo_exchange_bytes",
     "halo_exchange_bytes_per_shard",
     "make_sharded_hdiff",
+    "measured_collective_permute_bytes",
     "owned_rows_mask",
     "program_exchange_radii",
     "program_halo_exchange_bytes",
@@ -53,4 +56,5 @@ __all__ = [
     "spec_for",
     "tree_shardings",
     "use_mesh",
+    "wire_drift_report",
 ]

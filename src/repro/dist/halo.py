@@ -322,6 +322,61 @@ def program_halo_exchange_bytes_per_shard(
     )
 
 
+def measured_collective_permute_bytes(step_fn, x) -> tuple[float, int]:
+    """PER-CHIP collective-permute result bytes of ``step_fn`` compiled on
+    input ``x`` — the *measured* side of the wire-model claims, parsed from
+    the post-SPMD HLO (``repro.launch.dryrun.parse_collective_bytes``).
+    Returns ``(bytes, permute_count)``. Compiles (does not execute) the
+    step."""
+    import jax
+
+    from repro.launch.dryrun import parse_collective_bytes
+
+    coll = parse_collective_bytes(jax.jit(step_fn).lower(x).compile().as_text())
+    return (
+        coll["bytes"].get("collective-permute", 0.0),
+        int(coll["counts"].get("collective-permute", 0)),
+    )
+
+
+def wire_drift_report(
+    program,
+    step_fn,
+    x,
+    *,
+    local_depth: int,
+    local_rows: int,
+    local_cols: int,
+    row_sharded: bool = True,
+    col_sharded: bool = False,
+    tolerance: float | None = None,
+    name: str = "halo.wire",
+):
+    """Measured-vs-model drift check for one sharded lowering: compiles
+    ``step_fn`` on ``x``, parses the per-chip collective-permute bytes, and
+    compares them against :func:`program_halo_exchange_bytes_per_shard`.
+
+    Records through :func:`repro.obs.drift.check_drift` into the active
+    metrics registry (counters ``<name>.measured_bytes`` /
+    ``<name>.model_bytes``, gauge ``<name>.ratio``, counter
+    ``<name>.drift_flags`` when out of tolerance) and returns the
+    :class:`~repro.obs.drift.DriftResult`. This is the standing form of the
+    fig10/fig13 "ratio=1.000" lines: any accounting drift between what
+    ``lower_sharded`` puts on the wire and what the byte model predicts
+    flags immediately, on every instrumented run.
+    """
+    from repro.obs.drift import DEFAULT_TOLERANCE, check_drift
+
+    itemsize = next(iter(x.values())).dtype.itemsize if isinstance(x, dict) else x.dtype.itemsize
+    measured, _count = measured_collective_permute_bytes(step_fn, x)
+    model = program_halo_exchange_bytes_per_shard(
+        program, local_depth, local_rows, local_cols,
+        itemsize=itemsize, row_sharded=row_sharded, col_sharded=col_sharded,
+    )
+    tol = DEFAULT_TOLERANCE if tolerance is None else tolerance
+    return check_drift(name, measured, model, tol)
+
+
 def make_sharded_hdiff(
     mesh,
     *,

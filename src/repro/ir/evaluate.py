@@ -127,7 +127,11 @@ def interior_eval(program: StencilProgram, arrays: Mapping[str, Array]) -> Array
 
     env: dict[str, Array] = dict(arrays)
     for op in program.ops:
-        env[op.name] = op.compute(*op_views(op, env, margins, grid, nd))
+        # Per-op named_scope: XLA/Perfetto traces (repro.obs.profile) carry
+        # stencil-op names instead of anonymous fusions. Trace-time only —
+        # zero runtime cost and no effect on the compiled computation.
+        with jax.named_scope(f"ir/{program.name}/{op.name}"):
+            env[op.name] = op.compute(*op_views(op, env, margins, grid, nd))
     return env[program.output]
 
 
@@ -249,31 +253,34 @@ def slab_sweep(
     n0 = slab.shape[-2]
     m0 = slab.shape[-1]
     inset = 0  # cumulative state shrink vs the extras' (initial) grid
-    for prog in program.chain:
-        r = prog.radius
-        n = slab.shape[-2]
-        ex = None
-        if extras:
+    for sweep_i, prog in enumerate(program.chain):
+        # Per-sweep named_scope: temporal-blocked traces show which of the
+        # k fused sweeps a fusion belongs to (trace-time metadata only).
+        with jax.named_scope(f"ir/{program.name}/sweep{sweep_i}"):
+            r = prog.radius
+            n = slab.shape[-2]
+            ex = None
+            if extras:
+                if col_offset is None:
+                    ex = {f: a[..., inset : n0 - inset, :] for f, a in extras.items()}
+                else:
+                    ex = {
+                        f: a[..., inset : n0 - inset, inset : m0 - inset]
+                        for f, a in extras.items()
+                    }
+            # 2-D iota: 1-D iota is unsupported by the TPU Mosaic lowering.
+            ids = base_r + r + jax.lax.broadcasted_iota(jnp.int32, (n - 2 * r, 1), 0)
             if col_offset is None:
-                ex = {f: a[..., inset : n0 - inset, :] for f, a in extras.items()}
+                slab = slab_step(prog, slab, ids, rows_total, extras=ex)
             else:
-                ex = {
-                    f: a[..., inset : n0 - inset, inset : m0 - inset]
-                    for f, a in extras.items()
-                }
-        # 2-D iota: 1-D iota is unsupported by the TPU Mosaic lowering.
-        ids = base_r + r + jax.lax.broadcasted_iota(jnp.int32, (n - 2 * r, 1), 0)
-        if col_offset is None:
-            slab = slab_step(prog, slab, ids, rows_total, extras=ex)
-        else:
-            m = slab.shape[-1]
-            cids = base_c + r + jax.lax.broadcasted_iota(
-                jnp.int32, (1, m - 2 * r), 1
-            )
-            slab = slab_step(prog, slab, ids, rows_total, cids, cols_total, extras=ex)
-            base_c = base_c + r
-        base_r = base_r + r
-        inset += r
+                m = slab.shape[-1]
+                cids = base_c + r + jax.lax.broadcasted_iota(
+                    jnp.int32, (1, m - 2 * r), 1
+                )
+                slab = slab_step(prog, slab, ids, rows_total, cids, cols_total, extras=ex)
+                base_c = base_c + r
+            base_r = base_r + r
+            inset += r
     return slab
 
 

@@ -53,6 +53,7 @@ from repro.ir.evaluate import (
 )
 from repro.ir.graph import StencilProgram
 from repro.ir.plan import pick_block_rows, vmem_tile_budget
+from repro.obs import metrics
 
 Array = jax.Array
 
@@ -289,7 +290,9 @@ def lower_pallas(
             col_sharded,
         )
 
-    return fn
+    # Per-call timer/counter under the repro.obs registry (no-op when
+    # disabled; steps aside when traced inside lower_sharded's shard_map).
+    return metrics.instrument_call(fn, f"ir.lower_pallas.{program.name}")
 
 
 def _lower_pallas_1d(program, *, interpret):
@@ -312,4 +315,4 @@ def _lower_pallas_1d(program, *, interpret):
         interp = interpret if interpret is not None else not _on_tpu()
         return _call(x, interp)
 
-    return fn
+    return metrics.instrument_call(fn, f"ir.lower_pallas.{program.name}")

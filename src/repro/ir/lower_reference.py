@@ -17,6 +17,7 @@ import jax
 
 from repro.ir.evaluate import apply_program, embed_interior, op_views, thread_chain
 from repro.ir.graph import StencilProgram
+from repro.obs import metrics
 
 Array = jax.Array
 
@@ -24,18 +25,22 @@ Array = jax.Array
 def lower_reference(
     program: StencilProgram, *, mode: str = "fused"
 ) -> Callable[[Array | Mapping[str, Array]], Array]:
+    # instrument_call: per-call wall-clock timer + call counter under the
+    # repro.obs registry (no-op when metrics are disabled; steps aside when
+    # traced inside an enclosing jit/shard_map, e.g. by lower_sharded).
+    name = f"ir.lower_reference.{program.name}.{mode}"
     if mode == "fused":
         # apply_program is chain-aware: a composed program applies its
         # sweeps in sequence with the ring passthrough between them.
-        return jax.jit(lambda x: apply_program(program, x))
+        return metrics.instrument_call(jax.jit(lambda x: apply_program(program, x)), name)
     if mode == "staged":
         if program.steps == 1:
-            return _lower_staged(program)
+            return metrics.instrument_call(_lower_staged(program), name)
         runs = [(p, _lower_staged(p)) for p in program.chain]
         # thread_chain owns the multi-field sweep-threading convention
         # (evolving passthrough field, shared inputs), shared verbatim with
         # evaluate.apply_program so the two backends cannot drift.
-        return lambda x: thread_chain(program, x, runs)
+        return metrics.instrument_call(lambda x: thread_chain(program, x, runs), name)
     raise ValueError(f"unknown mode {mode!r} (want 'fused' or 'staged')")
 
 

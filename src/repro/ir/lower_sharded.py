@@ -63,6 +63,7 @@ from repro.ir.evaluate import resolve_field_arrays, slab_sweep
 from repro.ir.graph import StencilProgram
 from repro.ir.lower_pallas import lower_pallas
 from repro.ir.lower_reference import lower_reference
+from repro.obs import metrics
 
 Array = jax.Array
 
@@ -346,6 +347,34 @@ def lower_sharded(
     )
 
     @jax.jit
+    def _run(arrays) -> Array:
+        return mapped(*arrays)
+
+    def _record_halo_model(arrays) -> None:
+        """Per-field PER-CHIP model bytes for the exchange this call issues
+        — the ``halo.model_bytes.<field>`` counters the drift detector
+        compares against measured collective-permute bytes
+        (``repro.dist.halo.wire_drift_report``). Skipped while tracing:
+        a lowered-but-instrumented step must not count trace-time calls."""
+        reg = metrics.current()
+        if reg is None or metrics.has_tracer(arrays):
+            return
+        from repro.dist.halo import halo_exchange_bytes_per_shard
+
+        d, r, c = arrays[0].shape
+        reg.inc("halo.exchange_rounds")
+        for f, a in zip(fields, arrays):
+            hf = fhalos[f]
+            if hf:
+                reg.inc(
+                    f"halo.model_bytes.{f}",
+                    halo_exchange_bytes_per_shard(
+                        d // n_depth, r // n_row, c // n_col,
+                        itemsize=a.dtype.itemsize, halo=hf,
+                        row_sharded=n_row > 1, col_sharded=n_col > 1,
+                    ),
+                )
+
     def step(x: Array | Mapping[str, Array]) -> Array:
         arrays = resolve_field_arrays(program, x, ndim=3)
         d, r, c = arrays[0].shape
@@ -367,6 +396,8 @@ def lower_sharded(
                         f"shards for the single-neighbour halo exchange — use "
                         f"fewer, or shard {remedy} instead"
                     )
-        return mapped(*arrays)
+        if halo > 0 and (n_row > 1 or n_col > 1):
+            _record_halo_model(arrays)
+        return _run(arrays)
 
-    return step
+    return metrics.instrument_call(step, f"ir.lower_sharded.{program.name}")

@@ -1,0 +1,47 @@
+"""repro.obs — runtime telemetry for the whole stack.
+
+Four small pieces (see README "Observability"):
+
+  * :mod:`repro.obs.metrics` — counters / gauges / nested wall-clock timers
+    with ``block_until_ready`` discipline; zero-overhead no-op when
+    disabled, enabled via ``enable()`` / ``using()`` / ``REPRO_METRICS=1``.
+  * :mod:`repro.obs.drift`   — model-vs-measured drift detection (the
+    standing form of the repo's measured/model == 1.000 wire claims).
+  * :mod:`repro.obs.report`  — structured JSON run reports + the
+    ``runtime_metadata()`` stamp every ``BENCH_fig*.json`` carries.
+  * :mod:`repro.obs.profile` — env-gated ``jax.profiler`` trace capture
+    (``REPRO_TRACE_DIR``), with per-IR-op ``named_scope`` labels.
+
+Everything downstream (``ir`` lowerings, ``dist.halo``, ``serve.engine``,
+the benchmark suite) reports through this package; it imports jax lazily
+and nothing here initialises a backend at import time.
+"""
+
+from repro.obs import metrics
+from repro.obs.drift import DEFAULT_TOLERANCE, DriftResult, check_drift
+from repro.obs.metrics import (
+    METRICS_ENV,
+    MetricsRegistry,
+    TimerStat,
+    instrument_call,
+)
+from repro.obs.profile import TRACE_DIR_ENV, maybe_trace, profiler_trace
+from repro.obs.report import MATCH_KEYS, RunReport, git_commit, runtime_metadata
+
+__all__ = [
+    "DEFAULT_TOLERANCE",
+    "DriftResult",
+    "MATCH_KEYS",
+    "METRICS_ENV",
+    "MetricsRegistry",
+    "RunReport",
+    "TRACE_DIR_ENV",
+    "TimerStat",
+    "check_drift",
+    "git_commit",
+    "instrument_call",
+    "maybe_trace",
+    "metrics",
+    "profiler_trace",
+    "runtime_metadata",
+]

@@ -1,0 +1,65 @@
+"""Optional ``jax.profiler`` trace capture, env-gated.
+
+Set ``REPRO_TRACE_DIR=/some/dir`` and every benchmark entry point that
+wraps its work in :func:`maybe_trace` writes an XLA/Perfetto trace there
+(one subdirectory per label), viewable in ``xprof``/TensorBoard or
+``ui.perfetto.dev``. Because ``repro.ir.evaluate`` tags every IR op with
+``jax.named_scope``, the captured timelines carry stencil-op names
+(``ir/<program>/<op>``) instead of anonymous fusions.
+
+Unset (the default) this module is a no-op — no profiler import, no
+overhead. Capture failures (profiler already active, missing profiler
+backend pieces) degrade to a warning + no-op: tracing must never take a
+benchmark run down.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from contextlib import contextmanager, nullcontext
+from pathlib import Path
+
+TRACE_DIR_ENV = "REPRO_TRACE_DIR"
+
+
+def trace_dir_from_env() -> str | None:
+    """The configured capture directory, or None when capture is off."""
+    d = os.environ.get(TRACE_DIR_ENV, "").strip()
+    return d or None
+
+
+@contextmanager
+def profiler_trace(trace_dir: str | Path):
+    """Capture a ``jax.profiler`` trace of the enclosed block into
+    ``trace_dir`` (created if needed). Degrades to a no-op on failure."""
+    import jax
+
+    path = Path(trace_dir)
+    started = False
+    try:
+        path.mkdir(parents=True, exist_ok=True)
+        jax.profiler.start_trace(str(path))
+        started = True
+    except Exception as e:  # pragma: no cover - backend-dependent
+        print(f"repro.obs.profile: trace capture unavailable ({e!r}); "
+              f"continuing without", file=sys.stderr)
+    try:
+        yield path if started else None
+    finally:
+        if started:
+            try:
+                jax.profiler.stop_trace()
+            except Exception as e:  # pragma: no cover - backend-dependent
+                print(f"repro.obs.profile: stop_trace failed ({e!r})",
+                      file=sys.stderr)
+
+
+def maybe_trace(label: str | None = None):
+    """Env-gated capture: a :func:`profiler_trace` into
+    ``$REPRO_TRACE_DIR[/label]`` when the env var is set, else a shared
+    no-op context manager."""
+    base = trace_dir_from_env()
+    if base is None:
+        return nullcontext(None)
+    return profiler_trace(Path(base) / label if label else Path(base))

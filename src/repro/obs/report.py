@@ -1,0 +1,112 @@
+"""Structured JSON run reports + runtime environment metadata.
+
+``runtime_metadata()`` is the one home of the "what ran this" record every
+perf artifact carries (``scripts/bench_smoke.py`` stamps it into each
+``BENCH_fig*.json``): jax version, backend, device kind/count, python and
+platform, plus the commit SHA when one is discoverable. The perf-trajectory
+gate (``scripts/bench_compare.py``) matches on it so wall-clock numbers are
+only ever compared like-for-like.
+
+``RunReport`` is the generic container for any instrumented run: metadata +
+a metrics snapshot + named free-form sections, serialised to plain JSON.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform
+import subprocess
+import time
+from pathlib import Path
+from typing import Any
+
+from repro.obs import metrics
+
+# The metadata keys a trajectory comparison must agree on before wall-clock
+# rows are comparable at all (bench_compare's default match keys).
+MATCH_KEYS = ("backend", "device_kind", "device_count")
+
+
+def git_commit(cwd: str | None = None) -> str | None:
+    """Best-effort commit SHA: ``GITHUB_SHA`` (CI) or ``git rev-parse``.
+    Returns None outside a repo / without git — metadata must never make a
+    benchmark run fail."""
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10, cwd=cwd,
+        )
+    except (OSError, subprocess.SubprocessError):
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
+
+
+def runtime_metadata(cwd: str | None = None) -> dict[str, Any]:
+    """Device/platform metadata for perf records. Importing this must never
+    lock a backend the caller didn't already initialise — jax's device query
+    does initialise the backend, which is fine for benchmark entry points
+    (they query devices anyway) but means library code should call this
+    lazily, not at import time."""
+    import jax
+
+    devices = jax.devices()
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": devices[0].device_kind if devices else None,
+        "device_count": len(devices),
+        "python_version": platform.python_version(),
+        "platform": platform.platform(),
+        "commit": git_commit(cwd),
+        "recorded_at_unix": time.time(),
+    }
+
+
+@dataclasses.dataclass
+class RunReport:
+    """A structured record of one instrumented run."""
+
+    name: str
+    metadata: dict[str, Any] = dataclasses.field(default_factory=dict)
+    sections: dict[str, Any] = dataclasses.field(default_factory=dict)
+    metrics_snapshot: dict[str, Any] | None = None
+
+    @classmethod
+    def begin(cls, name: str, *, with_metadata: bool = True) -> "RunReport":
+        return cls(name=name, metadata=runtime_metadata() if with_metadata else {})
+
+    def add_section(self, name: str, payload: Any) -> "RunReport":
+        self.sections[name] = payload
+        return self
+
+    def attach_metrics(
+        self, registry: metrics.MetricsRegistry | None = None
+    ) -> "RunReport":
+        """Snapshots ``registry`` (or the active one) into the report."""
+        reg = registry if registry is not None else metrics.current()
+        if reg is not None:
+            self.metrics_snapshot = reg.snapshot()
+        return self
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "name": self.name,
+            "metadata": self.metadata,
+            "sections": self.sections,
+            "metrics": self.metrics_snapshot,
+        }
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True, default=str)
+
+    def write(self, path: str | Path) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(self.to_json() + "\n")
+        return path

@@ -13,6 +13,7 @@ queue with a prefill that writes that lane's cache slice. Greedy sampling
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import numpy as np
@@ -22,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import build_cache, lm_decode, lm_prefill
+from repro.obs import metrics
 
 Array = jax.Array
 
@@ -49,6 +51,14 @@ class Request:
     max_new_tokens: int
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # Telemetry (repro.obs): stamped by the server as the request moves
+    # through the queue; exposed on the result object so callers get
+    # per-request latency without touching the registry.
+    submitted_ts: float | None = None   # perf_counter at submit()
+    prefill_ts: float | None = None     # perf_counter when a lane picked it up
+    done_ts: float | None = None        # perf_counter at completion
+    queue_latency_s: float | None = None   # prefill_ts - submitted_ts
+    tokens_per_sec: float | None = None    # decode throughput of THIS request
 
 
 class BatchedServer:
@@ -80,22 +90,32 @@ class BatchedServer:
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(Request(rid, np.asarray(prompt, np.int32), max_new_tokens))
+        req = Request(rid, np.asarray(prompt, np.int32), max_new_tokens)
+        req.submitted_ts = time.perf_counter()
+        self._queue.append(req)
+        metrics.inc("serve.requests_submitted")
         return rid
 
     def _fill_lanes(self):
         for i in range(self.lanes):
             if self._lane_req[i] is None and self._queue:
                 req = self._queue.pop(0)
+                req.prefill_ts = time.perf_counter()
+                if req.submitted_ts is not None:
+                    req.queue_latency_s = req.prefill_ts - req.submitted_ts
+                    metrics.observe("serve.queue_latency", req.queue_latency_s)
                 cache, _ = build_cache(self.cfg, 1, self.max_len)
                 tokens = jnp.asarray(req.prompt[None, :])
-                logits, cache = self.prefill(self.params, tokens, cache)
+                with metrics.timer("serve.prefill"):
+                    logits, cache = self.prefill(self.params, tokens, cache)
+                    logits = jax.block_until_ready(logits)
                 tok = int(jnp.argmax(logits[0]))
                 req.out_tokens.append(tok)
                 self._lane_req[i] = req
                 self._lane_cache[i] = cache
                 self._lane_pos[i] = len(req.prompt)
                 self.stats["prefills"] += 1
+                metrics.inc("serve.prefills")
 
     def step(self) -> bool:
         """One scheduler step: refill lanes, decode one token per active
@@ -104,31 +124,50 @@ class BatchedServer:
         active = [i for i in range(self.lanes) if self._lane_req[i] is not None]
         if not active:
             return False
-        for i in active:
-            req = self._lane_req[i]
-            last = jnp.asarray([req.out_tokens[-1]], jnp.int32)
-            logits, cache = self.decode(
-                self.params, last, self._lane_cache[i], jnp.int32(self._lane_pos[i])
-            )
-            self._lane_cache[i] = cache
-            self._lane_pos[i] += 1
-            tok = int(jnp.argmax(logits[0]))
-            req.out_tokens.append(tok)
-            self.stats["decode_steps"] += 1
-            self.stats["tokens_out"] += 1
-            if len(req.out_tokens) >= req.max_new_tokens or self._lane_pos[i] >= self.max_len - 1:
-                req.done = True
-                self._lane_req[i] = None
-                self._lane_cache[i] = None
+        metrics.set_gauge("serve.batch_occupancy", len(active) / self.lanes)
+        with metrics.timer("serve.decode_step"):
+            for i in active:
+                req = self._lane_req[i]
+                last = jnp.asarray([req.out_tokens[-1]], jnp.int32)
+                logits, cache = self.decode(
+                    self.params, last, self._lane_cache[i], jnp.int32(self._lane_pos[i])
+                )
+                self._lane_cache[i] = cache
+                self._lane_pos[i] += 1
+                tok = int(jnp.argmax(logits[0]))
+                req.out_tokens.append(tok)
+                self.stats["decode_steps"] += 1
+                self.stats["tokens_out"] += 1
+                metrics.inc("serve.decode_steps")
+                metrics.inc("serve.tokens_out")
+                if (
+                    len(req.out_tokens) >= req.max_new_tokens
+                    or self._lane_pos[i] >= self.max_len - 1
+                ):
+                    req.done = True
+                    req.done_ts = time.perf_counter()
+                    if req.prefill_ts is not None and req.done_ts > req.prefill_ts:
+                        req.tokens_per_sec = len(req.out_tokens) / (
+                            req.done_ts - req.prefill_ts
+                        )
+                    self._lane_req[i] = None
+                    self._lane_cache[i] = None
         return True
 
     def run_until_idle(self, max_steps: int = 10_000) -> list[Request]:
         finished: list[Request] = []
         seen: set[int] = set()
         all_reqs: list[Request] = list(self._queue)
+        t0 = time.perf_counter()
+        tokens0 = self.stats["tokens_out"]
         for _ in range(max_steps):
             if not self.step():
                 break
+        elapsed = time.perf_counter() - t0
+        if elapsed > 0:
+            metrics.set_gauge(
+                "serve.tokens_per_sec", (self.stats["tokens_out"] - tokens0) / elapsed
+            )
         for r in all_reqs:
             if r.done and r.rid not in seen:
                 finished.append(r)

@@ -1,0 +1,168 @@
+"""Unit tests for scripts/bench_compare.py (the perf-trajectory gate).
+
+Synthetic BENCH_<fig>.json pairs drive every gate rule: wall-clock
+regressions (relative bound AND absolute floor), deterministic byte-model
+drift (both directions), missing baselines, metadata-mismatch skips,
+missing rows, informational units, and ``--update``.
+"""
+
+import importlib.util
+import json
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SCRIPT = REPO / "scripts" / "bench_compare.py"
+
+spec = importlib.util.spec_from_file_location("bench_compare", SCRIPT)
+bench_compare = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(bench_compare)
+
+META = {"backend": "cpu", "device_kind": "cpu", "device_count": 1}
+
+
+def _record(fig="figX", rows=None, meta=None):
+    return {
+        "fig": fig,
+        "grid": {"depth": 8, "rows": 128, "cols": 128},
+        "meta": dict(META if meta is None else meta),
+        "wall_clock_s": 1.0,
+        "parity_ok": True,
+        "wire_ratios": [],
+        "error": None,
+        "rows": rows if rows is not None else [
+            {"name": f"{fig}/t", "value": 1000.0, "derived": "", "unit": "us"},
+            {"name": f"{fig}/b", "value": 4096.0, "derived": "", "unit": "bytes"},
+            {"name": f"{fig}/i", "value": 3.0, "derived": "", "unit": "x"},
+        ],
+    }
+
+
+def _write(directory: Path, *records):
+    directory.mkdir(parents=True, exist_ok=True)
+    for rec in records:
+        (directory / f"BENCH_{rec['fig']}.json").write_text(
+            json.dumps(rec, indent=2)
+        )
+
+
+def _run(cur_dir, base_dir, *extra):
+    return bench_compare.main(
+        ["--current-dir", str(cur_dir), "--baseline-dir", str(base_dir), *extra]
+    )
+
+
+def _rows(**values):
+    units = {"t": "us", "b": "bytes", "i": "x"}
+    return [
+        {"name": f"figX/{n}", "value": v, "derived": "", "unit": units[n]}
+        for n, v in values.items()
+    ]
+
+
+def test_identical_records_pass(tmp_path):
+    _write(tmp_path / "base", _record())
+    _write(tmp_path / "cur", _record())
+    assert _run(tmp_path / "cur", tmp_path / "base") == 0
+
+
+def test_wall_clock_regression_fails(tmp_path):
+    _write(tmp_path / "base", _record())
+    # 1000us -> 3500us: past +50% default AND the 200us floor.
+    _write(tmp_path / "cur", _record(rows=_rows(t=3500.0, b=4096.0, i=3.0)))
+    assert _run(tmp_path / "cur", tmp_path / "base") == 1
+
+
+def test_wall_clock_within_absolute_floor_passes(tmp_path):
+    """A big relative but tiny absolute slowdown is runner noise, not a
+    regression: 50us -> 120us is +140% but under the 200us floor."""
+    _write(tmp_path / "base", _record(rows=_rows(t=50.0, b=4096.0, i=3.0)))
+    _write(tmp_path / "cur", _record(rows=_rows(t=120.0, b=4096.0, i=3.0)))
+    assert _run(tmp_path / "cur", tmp_path / "base") == 0
+
+
+def test_wall_clock_bound_is_configurable(tmp_path):
+    _write(tmp_path / "base", _record())
+    _write(tmp_path / "cur", _record(rows=_rows(t=1400.0, b=4096.0, i=3.0)))
+    # +40%: inside the default +50%...
+    assert _run(tmp_path / "cur", tmp_path / "base") == 0
+    # ...but outside a tightened +20% with a lowered floor.
+    assert _run(tmp_path / "cur", tmp_path / "base",
+                "--max-us-regression", "0.2", "--us-floor", "100") == 1
+
+
+def test_byte_drift_fails_both_directions(tmp_path):
+    _write(tmp_path / "base", _record())
+    _write(tmp_path / "cur", _record(rows=_rows(t=1000.0, b=5000.0, i=3.0)))
+    assert _run(tmp_path / "cur", tmp_path / "base") == 1
+    # Byte models are deterministic: a DECREASE is drift too.
+    _write(tmp_path / "cur", _record(rows=_rows(t=1000.0, b=3000.0, i=3.0)))
+    assert _run(tmp_path / "cur", tmp_path / "base") == 1
+
+
+def test_informational_units_never_gate(tmp_path):
+    _write(tmp_path / "base", _record())
+    # The "x" row blows up 100x: not gated.
+    _write(tmp_path / "cur", _record(rows=_rows(t=1000.0, b=4096.0, i=300.0)))
+    assert _run(tmp_path / "cur", tmp_path / "base") == 0
+
+
+def test_missing_baseline_fails(tmp_path):
+    (tmp_path / "base").mkdir()
+    _write(tmp_path / "cur", _record())
+    assert _run(tmp_path / "cur", tmp_path / "base") == 1
+
+
+def test_missing_gated_row_fails(tmp_path):
+    _write(tmp_path / "base", _record())
+    _write(tmp_path / "cur", _record(rows=_rows(t=1000.0, i=3.0)))
+    assert _run(tmp_path / "cur", tmp_path / "base") == 1
+
+
+def test_new_rows_do_not_gate(tmp_path):
+    _write(tmp_path / "base", _record(rows=_rows(t=1000.0)))
+    _write(tmp_path / "cur", _record())
+    assert _run(tmp_path / "cur", tmp_path / "base") == 0
+
+
+def test_metadata_mismatch_skips_rows(tmp_path):
+    """A record from a different device must not gate: same rows would fail
+    hard, but the backend differs so the fig is skipped wholesale."""
+    _write(tmp_path / "base", _record())
+    other = dict(META, device_kind="TPU v5e", backend="tpu")
+    _write(tmp_path / "cur",
+           _record(rows=_rows(t=9000.0, b=9999.0, i=3.0), meta=other))
+    assert _run(tmp_path / "cur", tmp_path / "base") == 0
+
+
+def test_update_writes_baselines_then_passes(tmp_path):
+    _write(tmp_path / "cur", _record())
+    assert _run(tmp_path / "cur", tmp_path / "base") == 1  # no baseline yet
+    assert _run(tmp_path / "cur", tmp_path / "base", "--update") == 0
+    assert (tmp_path / "base" / "BENCH_figX.json").is_file()
+    assert _run(tmp_path / "cur", tmp_path / "base") == 0
+
+
+def test_empty_current_dir_fails(tmp_path):
+    (tmp_path / "cur").mkdir()
+    _write(tmp_path / "base", _record())
+    assert _run(tmp_path / "cur", tmp_path / "base") == 1
+
+
+def test_legacy_rows_without_unit_default_to_us(tmp_path):
+    rows = [{"name": "figX/t", "value": 1000.0, "derived": ""}]
+    _write(tmp_path / "base", _record(rows=rows))
+    cur = [{"name": "figX/t", "value": 5000.0, "derived": ""}]
+    _write(tmp_path / "cur", _record(rows=cur))
+    assert _run(tmp_path / "cur", tmp_path / "base") == 1
+
+
+def test_compare_fig_reports_reasons():
+    cur = _record(rows=_rows(t=9000.0, b=9999.0, i=3.0))
+    base = _record()
+    failures, _notes = bench_compare.compare_fig(
+        cur, base, max_us_regression=0.5, us_floor=200.0,
+        max_bytes_regression=0.02,
+    )
+    assert len(failures) == 2
+    assert any("wall-clock regression" in f for f in failures)
+    assert any("byte-model drift" in f for f in failures)

@@ -35,8 +35,18 @@ from conformance import (
     oracle,
 )
 from repro.core import ELEMENTARY_FNS, hdiff, hdiff_simple
+from repro.obs import metrics
 
 REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(autouse=True)
+def _metrics_on():
+    """Every cell runs fully instrumented (per-call timers, named scopes,
+    halo model counters live): parity must hold with metrics ON — the
+    instrumentation contract is that it never perturbs the computation."""
+    with metrics.using():
+        yield
 
 
 def _hdiff_coupled_ref(arrs):
@@ -132,6 +142,8 @@ def test_conformance_mesh(mesh):
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
     env["PYTHONPATH"] = str(REPO / "src")
     env["JAX_PLATFORMS"] = "cpu"
+    # The sharded cells must also hold fully instrumented (see _metrics_on).
+    env["REPRO_METRICS"] = "1"
     proc = subprocess.run(
         [
             sys.executable,
