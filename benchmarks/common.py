@@ -8,7 +8,7 @@ from typing import Callable
 
 import jax
 
-from repro.obs import metrics
+from repro.obs import events, metrics
 
 # The paper's evaluation domain (§4.1).
 ROWS, COLS, DEPTH = 256, 256, 64
@@ -76,6 +76,7 @@ def emit(name: str, value: float, derived: str = "", unit: str = "us") -> None:
     """
     _rows.append((name, value, derived, unit))
     metrics.set_gauge(f"bench.{name}", value)
+    events.record("bench.row", name=name, value=value, unit=unit)
     print(f"{name},{value:.1f},{derived},{unit}")
 
 

@@ -14,12 +14,27 @@ devices, which is how a real multi-host launch degrades gracefully to one
 host for local testing. ``--inner pallas`` composes the fused Pallas kernel
 inside each shard (interpret mode off-TPU, so it is a correctness datapoint
 on CPU, not a speed claim).
+
+``--health`` arms the numerics watchdog for long forecasts: the time loop
+runs in cadence-sized jitted chunks and a ``repro.obs.HealthMonitor``
+probes the field (NaN/Inf counts, min/max/mean, global L2 — on-device
+reductions, scalars-only host transfer) every ``--health-every`` steps. On
+a blow-up the run halts within one probe cadence under the chosen
+``--health-policy``: the flight recorder (JSONL at ``--event-log`` /
+``REPRO_EVENT_LOG``) is flushed with the failing step's field stats, and
+``checkpoint-then-abort`` first COMMITs a checkpoint of the last healthy
+probed state to ``--ckpt-dir``. ``--inject-nan STEP`` poisons one grid
+point mid-forecast — the end-to-end blow-up drill CI runs. Exit code 3
+signals a detected blow-up.
 """
 
 import argparse
+import functools
 import os
 import sys
 import time
+
+BLOWUP_EXIT_CODE = 3
 
 
 def main() -> None:
@@ -34,6 +49,18 @@ def main() -> None:
         default="reference",
         help="per-shard compute backend for the IR sharded lowering",
     )
+    ap.add_argument("--health", action="store_true",
+                    help="probe field numerics on a cadence (blow-up-safe loop)")
+    ap.add_argument("--health-every", type=int, default=10,
+                    help="probe cadence in steps (with --health)")
+    ap.add_argument("--health-policy", default="checkpoint-then-abort",
+                    choices=("warn", "abort", "checkpoint-then-abort"))
+    ap.add_argument("--ckpt-dir", default="weather_ckpt",
+                    help="checkpoint root for checkpoint-then-abort")
+    ap.add_argument("--event-log", default="",
+                    help="flight-recorder JSONL sink (or set REPRO_EVENT_LOG)")
+    ap.add_argument("--inject-nan", type=int, default=-1, metavar="STEP",
+                    help="poison one grid point after STEP (blow-up drill)")
     ap.add_argument("--_worker", action="store_true")
     args = ap.parse_args()
 
@@ -81,6 +108,10 @@ def main() -> None:
 
     psi0 = make_initial_field(args.depth, args.size, args.size, kind="gaussian")
 
+    if args.health:
+        run_with_health(args, step, psi0)
+        return
+
     # Distributed time-stepping (grid stays device-resident between steps).
     @jax.jit
     def run(psi, n):
@@ -99,6 +130,79 @@ def main() -> None:
     np.testing.assert_allclose(np.asarray(final), np.asarray(ref), rtol=1e-4, atol=1e-5)
     print("distributed result matches single-device reference ✓")
     print(f"field range: [{float(final.min()):.4f}, {float(final.max()):.4f}]")
+
+
+def run_with_health(args, step, psi0) -> None:
+    """The blow-up-safe forecast loop: cadence-chunked stepping + probes."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint import save_checkpoint
+    from repro.obs import FlightRecorder, HealthMonitor, NumericsError, events
+
+    if args.event_log:
+        events.enable(FlightRecorder(sink=args.event_log))
+    # (REPRO_EVENT_LOG in the environment already installed a recorder at
+    # import time; without either, probes still guard the run — the ring
+    # and crash dump are simply unavailable.)
+
+    checkpoint_fn = None
+    if args.health_policy == "checkpoint-then-abort":
+        def checkpoint_fn(healthy_step, psi):
+            path = save_checkpoint(
+                args.ckpt_dir, healthy_step, {"psi": psi},
+                {"step": healthy_step, "reason": "pre-blow-up health snapshot"},
+            )
+            print(f"committed last-healthy checkpoint: {path}")
+            return path
+
+    monitor = HealthMonitor(
+        cadence=args.health_every,
+        policy=args.health_policy,
+        name="psi",
+        checkpoint_fn=checkpoint_fn,
+    )
+
+    cadence = args.health_every
+
+    @functools.partial(jax.jit, static_argnums=1)
+    def run_chunk(psi, n):
+        def body(p, _):
+            return step(p), None
+        out, _ = jax.lax.scan(body, psi, None, length=n)
+        return out
+
+    psi = psi0
+    monitor.check(0, psi)  # step-0 baseline: the initial field is healthy
+    events.record("forecast.start", steps=args.steps, cadence=cadence,
+                  policy=args.health_policy, grid=[args.depth, args.size, args.size])
+    t0 = time.perf_counter()
+    try:
+        done = 0
+        while done < args.steps:
+            n = min(cadence - done % cadence if done % cadence else cadence,
+                    args.steps - done)
+            psi = run_chunk(psi, n)
+            done += n
+            if 0 <= args.inject_nan <= done and args.inject_nan > done - n:
+                # The drill: one poisoned point mid-forecast, as if the
+                # dynamics blew up somewhere inside this chunk.
+                psi = psi.at[0, args.size // 2, args.size // 2].set(jnp.nan)
+                print(f"injected NaN after step {args.inject_nan}")
+            monitor.check(done, psi)
+    except NumericsError as e:
+        dump = events.crash_dump(reason=str(e))
+        print(f"BLOWUP_DETECTED step={e.step} field={e.field} "
+              f"nan_count={e.stats['nan_count']:.0f} inf_count={e.stats['inf_count']:.0f}")
+        if dump is not None:
+            print(f"flight recorder crash dump: {dump}")
+        sys.exit(BLOWUP_EXIT_CODE)
+    dt = time.perf_counter() - t0
+    events.record("forecast.end", steps=args.steps, wall_s=dt)
+    print(f"{args.steps} steps in {dt:.2f}s with {monitor.probes} health probes "
+          f"({args.steps / cadence:.0f} cadences, policy={args.health_policy})")
+    print(f"forecast healthy: l2={monitor.last_healthy and 'ok'} "
+          f"probes={monitor.probes} blowups={monitor.blowups}")
 
 
 if __name__ == "__main__":

@@ -85,6 +85,31 @@ def gate_record(record, lo: float = RATIO_LO, hi: float = RATIO_HI) -> list[str]
     return problems
 
 
+def emit_probe_overhead_row(common, fig: str) -> None:
+    """One informational row per fig: the cost of a jitted
+    ``repro.obs.health.field_stats`` probe on this run's reduced grid, so
+    the BENCH_*.json trajectory records what a health probe costs next to
+    what the stencils cost. The ``probe_us`` unit is NOT in
+    scripts/bench_compare.py's GATED_UNITS — the row never gates."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.obs.health import field_stats
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(
+        rng.standard_normal((common.DEPTH, common.ROWS, common.COLS)).astype(np.float32)
+    )
+    t = common.time_stats(jax.jit(field_stats), x, warmup=2, iters=5)
+    common.emit(
+        f"{fig}/health_probe",
+        t.median_us,
+        f"min={t.min_us:.1f}us grid={common.DEPTH}x{common.ROWS}x{common.COLS}",
+        unit="probe_us",
+    )
+
+
 def run_figs(figs, depth: int, rows: int, cols: int):
     """Imports the fig modules against the reduced grid and runs each,
     yielding one record dict per fig. Import happens HERE so the grid patch
@@ -121,6 +146,8 @@ def run_figs(figs, depth: int, rows: int, cols: int):
         except Exception as e:  # parity asserts / subprocess failures land here
             error = f"{type(e).__name__}: {e}"
         wall = time.perf_counter() - t0
+        if error is None:
+            emit_probe_overhead_row(common, fig)
         rows_out = common.all_rows()[start_rows:]
         yield {
             "fig": fig,

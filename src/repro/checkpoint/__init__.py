@@ -3,4 +3,5 @@ from repro.checkpoint.store import (
     latest_step,
     restore_checkpoint,
     save_checkpoint,
+    tree_health,
 )

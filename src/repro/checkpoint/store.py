@@ -43,6 +43,32 @@ def _flatten(tree: Any):
     return leaves, treedef
 
 
+def tree_health(host_leaves: list[np.ndarray]) -> dict:
+    """Aggregate numerics-health snapshot of a checkpoint's host leaves:
+    NaN/Inf counts and the global L2 norm (float64 accumulation, so the
+    save-time and restore-time computations agree bit-for-bit on identical
+    bytes). Embedded in ``meta.json`` at save and recomputed at restore —
+    a bit-rotted ``arrays.npz`` whose shapes still line up fails HERE, not
+    three layers later as a mysteriously diverging forecast."""
+    nan = inf = n = 0
+    sumsq = 0.0
+    for a in host_leaves:
+        n += a.size
+        if np.issubdtype(a.dtype, np.floating) or np.issubdtype(a.dtype, np.complexfloating):
+            nan += int(np.isnan(a).sum())
+            inf += int(np.isinf(a).sum())
+            finite = np.asarray(a)[np.isfinite(a)]
+            sumsq += float(np.sum(np.square(finite, dtype=np.float64)))
+        else:
+            sumsq += float(np.sum(np.square(a.astype(np.float64))))
+    return {
+        "n_elements": int(n),
+        "nan_count": int(nan),
+        "inf_count": int(inf),
+        "l2": float(np.sqrt(sumsq)),
+    }
+
+
 def save_checkpoint(root: str | Path, step: int, tree: Any, extra: dict | None = None) -> Path:
     """Synchronous atomic save. ``tree``: pytree of arrays."""
     root = Path(root)
@@ -62,6 +88,7 @@ def save_checkpoint(root: str | Path, step: int, tree: Any, extra: dict | None =
         "n_leaves": len(host_leaves),
         "shapes": [list(a.shape) for a in host_leaves],
         "dtypes": [str(a.dtype) for a in host_leaves],
+        "health": tree_health(host_leaves),
         "extra": extra or {},
         "time": time.time(),
     }
@@ -90,10 +117,19 @@ def restore_checkpoint(
     step: int | None,
     tree_like: Any,
     shardings: Any | None = None,
+    *,
+    verify_health: bool = True,
 ) -> tuple[Any, dict]:
     """Restores into the structure of ``tree_like``. With ``shardings`` (a
     matching pytree of NamedSharding), arrays are placed sharded on the
-    CURRENT mesh — this is the elastic re-mesh path."""
+    CURRENT mesh — this is the elastic re-mesh path.
+
+    ``arrays.npz`` is never trusted blindly: every leaf's shape/dtype is
+    validated against what ``meta.json`` recorded at save time (a clear
+    ``ValueError`` naming the mismatching leaf, instead of a failure deep
+    in re-sharding), and with ``verify_health`` the meta's numerics-health
+    snapshot (NaN/Inf counts, global L2) is recomputed and compared — a
+    corrupted payload fails at load."""
     root = Path(root)
     if step is None:
         step = latest_step(root)
@@ -104,7 +140,36 @@ def restore_checkpoint(
         raise FileNotFoundError(f"checkpoint {d} has no COMMIT marker")
     meta = json.loads((d / "meta.json").read_text())
     with np.load(d / "arrays.npz") as z:
+        missing = [f"a{i}" for i in range(meta["n_leaves"]) if f"a{i}" not in z]
+        if missing:
+            raise ValueError(
+                f"checkpoint {d}: arrays.npz is missing leaves {missing} "
+                f"recorded in meta.json — the payload is corrupt or truncated"
+            )
         host_leaves = [z[f"a{i}"] for i in range(meta["n_leaves"])]
+
+    # arrays.npz vs meta.json: the payload must match what save recorded.
+    for i, a in enumerate(host_leaves):
+        want_shape = tuple(meta["shapes"][i])
+        want_dtype = meta["dtypes"][i]
+        if tuple(a.shape) != want_shape or str(a.dtype) != want_dtype:
+            raise ValueError(
+                f"checkpoint {d} leaf a{i}: arrays.npz has shape "
+                f"{tuple(a.shape)} dtype {a.dtype} but meta.json recorded "
+                f"shape {want_shape} dtype {want_dtype} — the checkpoint "
+                f"payload is corrupt (or meta.json was tampered with)"
+            )
+    if verify_health and "health" in meta:
+        want, got = meta["health"], tree_health(host_leaves)
+        counts_ok = all(got[k] == want[k]
+                        for k in ("n_elements", "nan_count", "inf_count"))
+        l2_ok = np.isclose(got["l2"], want["l2"], rtol=1e-9, atol=0.0)
+        if not (counts_ok and l2_ok):
+            raise ValueError(
+                f"checkpoint {d}: health snapshot mismatch — meta.json "
+                f"recorded {want} but arrays.npz recomputes to {got}; the "
+                f"payload bytes changed since save (bit rot / partial write)"
+            )
 
     ref_leaves, treedef = _flatten(tree_like)
     if len(ref_leaves) != len(host_leaves):

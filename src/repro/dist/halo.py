@@ -365,6 +365,7 @@ def wire_drift_report(
     ``lower_sharded`` puts on the wire and what the byte model predicts
     flags immediately, on every instrumented run.
     """
+    from repro.obs import events
     from repro.obs.drift import DEFAULT_TOLERANCE, check_drift
 
     itemsize = next(iter(x.values())).dtype.itemsize if isinstance(x, dict) else x.dtype.itemsize
@@ -374,7 +375,14 @@ def wire_drift_report(
         itemsize=itemsize, row_sharded=row_sharded, col_sharded=col_sharded,
     )
     tol = DEFAULT_TOLERANCE if tolerance is None else tolerance
-    return check_drift(name, measured, model, tol)
+    result = check_drift(name, measured, model, tol)
+    # The full report (clean or not) goes to the flight recorder: one event
+    # per wire measurement, so a long run's event log carries the standing
+    # measured==model evidence alongside its health probes.
+    events.record("drift.report", name=name, program=program.name,
+                  measured=result.measured, model=result.model,
+                  ratio=result.ratio, ok=result.ok)
+    return result
 
 
 def make_sharded_hdiff(

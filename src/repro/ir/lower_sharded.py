@@ -63,7 +63,7 @@ from repro.ir.evaluate import resolve_field_arrays, slab_sweep
 from repro.ir.graph import StencilProgram
 from repro.ir.lower_pallas import lower_pallas
 from repro.ir.lower_reference import lower_reference
-from repro.obs import metrics
+from repro.obs import events, metrics
 
 Array = jax.Array
 
@@ -354,10 +354,17 @@ def lower_sharded(
         """Per-field PER-CHIP model bytes for the exchange this call issues
         — the ``halo.model_bytes.<field>`` counters the drift detector
         compares against measured collective-permute bytes
-        (``repro.dist.halo.wire_drift_report``). Skipped while tracing:
-        a lowered-but-instrumented step must not count trace-time calls."""
+        (``repro.dist.halo.wire_drift_report``) — plus a ``halo.exchange``
+        flight-recorder event per round. Skipped while tracing: a
+        lowered-but-instrumented step must not count trace-time calls."""
         reg = metrics.current()
-        if reg is None or metrics.has_tracer(arrays):
+        if (reg is None and events.current() is None) or metrics.has_tracer(arrays):
+            return
+        events.record(
+            "halo.exchange", program=program.name, halo=halo,
+            fields=[f for f in fields if fhalos[f]],
+        )
+        if reg is None:
             return
         from repro.dist.halo import halo_exchange_bytes_per_shard
 

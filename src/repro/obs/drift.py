@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.obs import metrics
+from repro.obs import events, metrics
 
 # The benchmark gate's band (scripts/bench_smoke.py uses the same one): the
 # models are exact, so anything past 1% is a real accounting bug, not noise.
@@ -64,6 +64,10 @@ def check_drift(
         raw pair, accumulated so repeated rounds sum;
       * gauge   ``<name>.ratio`` — the latest measured/model ratio;
       * counter ``<name>.drift_flags`` — bumped only when out of tolerance.
+
+    An out-of-tolerance result additionally lands in the flight recorder
+    as a ``drift.flagged`` event (no event on clean checks — the recorder
+    keeps *notable* history, the registry keeps aggregates).
     """
     result = DriftResult(name=name, measured=float(measured), model=float(model),
                          tolerance=tolerance)
@@ -74,4 +78,8 @@ def check_drift(
         reg.set_gauge(f"{name}.ratio", result.ratio)
         if not result.ok:
             reg.inc(f"{name}.drift_flags")
+    if not result.ok:
+        events.record("drift.flagged", name=name, measured=result.measured,
+                      model=result.model, ratio=result.ratio,
+                      tolerance=tolerance)
     return result

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import build_cache, lm_decode, lm_prefill
-from repro.obs import metrics
+from repro.obs import events, metrics
 
 Array = jax.Array
 
@@ -94,6 +94,8 @@ class BatchedServer:
         req.submitted_ts = time.perf_counter()
         self._queue.append(req)
         metrics.inc("serve.requests_submitted")
+        events.record("serve.submit", rid=rid, prompt_len=len(req.prompt),
+                      max_new_tokens=max_new_tokens)
         return rid
 
     def _fill_lanes(self):
@@ -116,6 +118,8 @@ class BatchedServer:
                 self._lane_pos[i] = len(req.prompt)
                 self.stats["prefills"] += 1
                 metrics.inc("serve.prefills")
+                events.record("serve.prefill", rid=req.rid, lane=i,
+                              queue_latency_s=req.queue_latency_s)
 
     def step(self) -> bool:
         """One scheduler step: refill lanes, decode one token per active
@@ -125,6 +129,7 @@ class BatchedServer:
         if not active:
             return False
         metrics.set_gauge("serve.batch_occupancy", len(active) / self.lanes)
+        events.record("serve.decode", active_lanes=len(active), lanes=self.lanes)
         with metrics.timer("serve.decode_step"):
             for i in active:
                 req = self._lane_req[i]
@@ -152,6 +157,9 @@ class BatchedServer:
                         )
                     self._lane_req[i] = None
                     self._lane_cache[i] = None
+                    events.record("serve.retire", rid=req.rid, lane=i,
+                                  tokens_out=len(req.out_tokens),
+                                  tokens_per_sec=req.tokens_per_sec)
         return True
 
     def run_until_idle(self, max_steps: int = 10_000) -> list[Request]:
@@ -173,3 +181,12 @@ class BatchedServer:
                 finished.append(r)
                 seen.add(r.rid)
         return finished
+
+    def metrics_text(self) -> str:
+        """Prometheus-style exposition of the active metrics registry —
+        serve counters/timers plus any health gauges a monitor maintains.
+        A scrape endpoint in front of this server returns exactly this
+        string; with metrics disabled it is a single well-formed comment."""
+        from repro.obs.export import prometheus_text
+
+        return prometheus_text()

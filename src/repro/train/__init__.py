@@ -1,4 +1,5 @@
 from repro.train.loop import (
+    SpikeDetector,
     StepWatchdog,
     TrainConfig,
     batch_sharding,

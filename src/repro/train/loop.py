@@ -36,6 +36,8 @@ from jax.sharding import Mesh
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import sharding_for, tree_shardings
 from repro.models import build_lm, lm_loss
+from repro.obs import events, metrics
+from repro.obs.health import HealthMonitor
 from repro.optim.optimizers import (
     OptimizerConfig,
     clip_by_global_norm,
@@ -58,6 +60,9 @@ class TrainConfig:
     keep_last: int = 3
     watchdog_factor: float = 3.0     # flag steps slower than factor * median
     grad_compression: str = "none"   # none | bf16 (cross-pod reduce)
+    spike_factor: float = 5.0        # flag losses above factor * running median
+    health_every: int = 0            # probe loss health every N steps (0 = off)
+    health_policy: str = "abort"     # warn | abort | checkpoint-then-abort
 
 
 def make_train_step(
@@ -162,6 +167,45 @@ def shape_for_microbatches(batch: Any, microbatches: int) -> Any:
     )
 
 
+class SpikeDetector:
+    """Flags loss spikes through ``repro.obs``: a loss is a spike when it
+    is non-finite, or exceeds ``factor`` x the running median of the last
+    ``window`` recorded losses (after ``warmup`` steps — the first losses
+    of a fresh run legitimately swing). Every spike bumps the
+    ``train.loss_spikes`` counter and records a structured
+    ``train.loss_spike`` event carrying step/loss/threshold, so a loss
+    excursion at step 40k is in the flight recorder with its context, not
+    just a line lost in stdout. Finite spikes still enter the history, so
+    a genuine regime change re-centres the median instead of flagging
+    forever."""
+
+    def __init__(self, factor: float = 5.0, warmup: int = 5, window: int = 50):
+        self.factor = factor
+        self.warmup = warmup
+        self.window = window
+        self.losses: list[float] = []
+        self.spikes: list[tuple[int, float]] = []
+
+    def record(self, step: int, loss: float) -> bool:
+        loss = float(loss)
+        finite = np.isfinite(loss)
+        threshold = None
+        spike = not finite
+        if finite and len(self.losses) > self.warmup:
+            med = float(np.median(self.losses[-self.window:]))
+            if med > 0:
+                threshold = self.factor * med
+                spike = loss > threshold
+        if finite:
+            self.losses.append(loss)
+        if spike:
+            self.spikes.append((step, loss))
+            metrics.inc("train.loss_spikes")
+            events.record("train.loss_spike", step=step, loss=loss,
+                          threshold=threshold, factor=self.factor)
+        return spike
+
+
 class StepWatchdog:
     """Flags steps slower than ``factor`` x running median (straggler/
     interference detection signal for the cluster layer)."""
@@ -193,7 +237,12 @@ def train(
     log_fn=print,
 ):
     """End-to-end training driver (used by examples/train_lm.py)."""
-    from repro.checkpoint.store import CheckpointManager, latest_step, restore_checkpoint
+    from repro.checkpoint.store import (
+        CheckpointManager,
+        latest_step,
+        restore_checkpoint,
+        save_checkpoint,
+    )
 
     opt_cfg = optimizer_config_from_model(cfg)
     params, opt_state, p_sh, o_sh, _ = init_train_state(cfg, mesh, seed)
@@ -234,6 +283,29 @@ def train(
     old_handler = signal.signal(signal.SIGTERM, _on_sigterm)
 
     watchdog = StepWatchdog(train_cfg.watchdog_factor)
+    spike_det = SpikeDetector(train_cfg.spike_factor)
+    monitor = None
+    if train_cfg.health_every > 0:
+        # Loss-health probe on cadence: a NaN/Inf loss halts the run within
+        # health_every steps instead of burning the rest of it. Under
+        # checkpoint-then-abort the LAST HEALTHY (params, opt_state) is
+        # committed before the raise (requires ckpt_dir).
+        ckpt_fn = None
+        if train_cfg.health_policy == "checkpoint-then-abort":
+            if not train_cfg.ckpt_dir:
+                raise ValueError(
+                    "health_policy='checkpoint-then-abort' needs ckpt_dir"
+                )
+            ckpt_fn = lambda s, state: save_checkpoint(  # noqa: E731
+                train_cfg.ckpt_dir, s, state, {"step": s, "reason": "health-abort"}
+            )
+        monitor = HealthMonitor(
+            cadence=train_cfg.health_every,
+            policy=train_cfg.health_policy,
+            name="train.loss",
+            checkpoint_fn=ckpt_fn,
+            log_fn=log_fn,
+        )
     history = []
     try:
         with jax.set_mesh(mesh):
@@ -242,16 +314,22 @@ def train(
                 batch = jax.tree.map(
                     jnp.asarray, shape_for_microbatches(dataset.batch_at(step), mb)
                 )
-                params, opt_state, metrics = jit_step(params, opt_state, batch)
-                loss = float(metrics["loss"])
+                params, opt_state, step_metrics = jit_step(params, opt_state, batch)
+                loss = float(step_metrics["loss"])
                 dt = time.perf_counter() - t0
                 slow = watchdog.record(step, dt)
+                spiked = spike_det.record(step, loss)
+                if monitor is not None:
+                    monitor.check(step, loss, state=(params, opt_state))
                 history.append({"step": step, "loss": loss, "dt": dt})
-                if step % train_cfg.log_every == 0 or slow:
-                    flag = " [SLOW-STEP]" if slow else ""
+                if step % train_cfg.log_every == 0 or slow or spiked:
+                    flag = (" [SLOW-STEP]" if slow else "") + (
+                        " [LOSS-SPIKE]" if spiked else ""
+                    )
                     log_fn(
                         f"[train] step {step} loss {loss:.4f} "
-                        f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms{flag}"
+                        f"gnorm {float(step_metrics['grad_norm']):.3f} "
+                        f"{dt*1e3:.0f}ms{flag}"
                     )
                 if manager and step and step % train_cfg.ckpt_every == 0:
                     manager.save_async(step, (params, opt_state), {"step": step})

@@ -1,0 +1,104 @@
+"""Subprocess body: mesh-global field_stats on 8 fake devices.
+
+Run by tests/test_obs_health.py with XLA_FLAGS forcing 8 host devices.
+Asserts the two mesh-level health claims:
+
+  * ``field_stats(block, axis_names=("rows", "cols"))`` inside a
+    ``shard_map`` over a 2x4 mesh returns GLOBAL statistics of the sharded
+    field that match the single-device ``field_stats`` of the unsharded
+    array to 1e-6 — on the paper's evaluation grid (64 x 256 x 256), with
+    NaN/Inf poison points planted so the counts exercise the psum path;
+  * a conformance cell (hdiff, k=2, sharded-reference on the 2x4 mesh)
+    stays BIT-identical when run under ``HealthMonitor.wrap`` with metrics
+    and the flight recorder enabled — probes must not perturb the numbers.
+
+Prints HEALTH_OK on success.
+"""
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+assert len(jax.devices()) == 8, jax.devices()
+
+import numpy as np
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+import repro.compat  # noqa: F401  (jax.shard_map on older jax)
+from repro.ir import hdiff_program, lower_sharded, repeat
+from repro.launch.mesh import make_mesh
+from repro.obs import FlightRecorder, HealthMonitor, events, field_stats, host_stats, metrics
+
+# --- 1. sharded-vs-single-device stats parity on the paper grid ------------
+
+depth, rows, cols = 64, 256, 256  # the paper's evaluation domain (§4.1)
+rng = np.random.default_rng(7)
+host = rng.standard_normal((depth, rows, cols)).astype(np.float32)
+host[0, 10, 20] = np.nan          # poison points: counts must psum globally
+host[1, 200, 30] = np.inf
+host[2, 5, 250] = -np.inf
+host[3, 100, 100] = 37.5          # a known global max on one shard only
+x = jnp.asarray(host)
+
+single = host_stats(field_stats(x))
+
+mesh = make_mesh((2, 4), ("rows", "cols"))
+spec = P(None, "rows", "cols")
+sharded_fn = jax.jit(
+    jax.shard_map(
+        lambda block: field_stats(block, axis_names=("rows", "cols")),
+        mesh=mesh,
+        in_specs=(spec,),
+        out_specs=P(),
+        check_vma=False,
+    )
+)
+sharded = host_stats(sharded_fn(x))
+
+for key in ("size", "nan_count", "inf_count"):
+    assert sharded[key] == single[key], (key, sharded[key], single[key])
+for key in ("min", "max", "mean", "l2"):
+    np.testing.assert_allclose(
+        sharded[key], single[key], rtol=1e-6, atol=1e-6,
+        err_msg=f"sharded {key} diverged from single-device",
+    )
+assert single["nan_count"] == 1 and single["inf_count"] == 2
+assert single["max"] == 37.5
+print(f"stats parity: l2 sharded={sharded['l2']:.6f} single={single['l2']:.6f}")
+
+# --- 2. probes must not perturb a conformance cell -------------------------
+
+import conformance  # noqa: E402  (tests/ is on sys.path)
+
+prog = repeat(hdiff_program(), 2)
+cell_in = conformance.make_fields("hdiff")
+fn = lower_sharded(prog, mesh_shape=(2, 4), inner="reference")
+
+prev = metrics.current()
+metrics.disable()
+try:
+    baseline = np.asarray(fn(cell_in))
+finally:
+    if prev is not None:
+        metrics.enable(prev)
+
+with tempfile.TemporaryDirectory() as td:
+    sink = os.path.join(td, "events.jsonl")
+    with metrics.using() as reg, events.using(FlightRecorder(sink=sink)) as rec:
+        monitor = HealthMonitor(cadence=1, policy="abort", name="hdiff_out")
+        probed = np.asarray(monitor.wrap(fn)(cell_in))
+        assert monitor.probes == 1 and monitor.blowups == 0
+        assert rec.events("health.probe"), "probe event missing from the ring"
+        assert reg.counters.get("health.probes") == 1.0
+        assert reg.gauges["health.hdiff_out.nan_count"] == 0.0
+        assert os.path.getsize(sink) > 0, "JSONL sink not written"
+
+assert (probed == baseline).all(), "health probe perturbed the conformance cell"
+print("conformance cell bit-exact under probes")
+
+print("HEALTH_OK")

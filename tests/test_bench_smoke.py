@@ -88,6 +88,29 @@ def test_cli_rejects_unknown_fig(tmp_path):
     assert "unknown fig" in proc.stdout + proc.stderr
 
 
+def test_probe_overhead_row_is_informational():
+    """The per-fig health-probe cost row: emitted with the probe_us unit,
+    which the trajectory gate treats as informational (never gates)."""
+    import benchmarks.common as common
+
+    start = len(common.all_rows())
+    bench_smoke.emit_probe_overhead_row(common, "figX")
+    rows = common.all_rows()[start:]
+    assert len(rows) == 1
+    name, value, derived, unit = rows[0]
+    assert name == "figX/health_probe"
+    assert value > 0
+    assert unit == "probe_us"
+    assert "ratio=" not in derived  # must never feed the wire-ratio gate
+
+    compare_spec = importlib.util.spec_from_file_location(
+        "bench_compare", REPO / "scripts" / "bench_compare.py"
+    )
+    bench_compare = importlib.util.module_from_spec(compare_spec)
+    compare_spec.loader.exec_module(bench_compare)
+    assert "probe_us" not in bench_compare.GATED_UNITS
+
+
 def test_record_json_roundtrip(tmp_path):
     """The artifact format is plain JSON — what CI uploads must reload."""
     rec = _record()

@@ -35,7 +35,7 @@ from conformance import (
     oracle,
 )
 from repro.core import ELEMENTARY_FNS, hdiff, hdiff_simple
-from repro.obs import metrics
+from repro.obs import events, metrics
 
 REPO = Path(__file__).resolve().parent.parent
 
@@ -43,9 +43,10 @@ REPO = Path(__file__).resolve().parent.parent
 @pytest.fixture(autouse=True)
 def _metrics_on():
     """Every cell runs fully instrumented (per-call timers, named scopes,
-    halo model counters live): parity must hold with metrics ON — the
-    instrumentation contract is that it never perturbs the computation."""
-    with metrics.using():
+    halo model counters AND the flight recorder live): parity must hold
+    with both observability channels ON — the instrumentation contract is
+    that it never perturbs the computation."""
+    with metrics.using(), events.using():
         yield
 
 
@@ -136,14 +137,17 @@ MULTIDEV_MESHES = [m for m in MESHES if m != (1, 1)]
 
 @pytest.mark.multidev
 @pytest.mark.parametrize("mesh", [pytest.param(m, id=mesh_id(m)) for m in MULTIDEV_MESHES])
-def test_conformance_mesh(mesh):
+def test_conformance_mesh(mesh, tmp_path):
     n_dev = mesh[0] * mesh[1]
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
     env["PYTHONPATH"] = str(REPO / "src")
     env["JAX_PLATFORMS"] = "cpu"
-    # The sharded cells must also hold fully instrumented (see _metrics_on).
+    # The sharded cells must also hold fully instrumented (see _metrics_on):
+    # metrics registry AND flight recorder both live via env auto-enable.
     env["REPRO_METRICS"] = "1"
+    event_log = tmp_path / "events.jsonl"
+    env["REPRO_EVENT_LOG"] = str(event_log)
     proc = subprocess.run(
         [
             sys.executable,
@@ -160,3 +164,6 @@ def test_conformance_mesh(mesh):
         pytest.skip(f"mesh {mesh_id(mesh)} unavailable: {proc.stdout.strip()}")
     assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
     assert "ALL_OK" in proc.stdout
+    # The instrumented run must actually have recorded events (at minimum
+    # the meta header + per-call halo.exchange events from lower_sharded).
+    assert event_log.exists() and event_log.stat().st_size > 0

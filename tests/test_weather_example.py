@@ -13,7 +13,7 @@ import pytest
 REPO = Path(__file__).resolve().parent.parent
 
 
-def _run_example(*extra: str) -> str:
+def _run_example(*extra: str, expect_rc: int = 0) -> str:
     env = dict(os.environ)
     env["PYTHONPATH"] = str(REPO / "src")
     env["JAX_PLATFORMS"] = "cpu"
@@ -25,7 +25,10 @@ def _run_example(*extra: str) -> str:
         env=env,
         timeout=600,
     )
-    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert proc.returncode == expect_rc, (
+        f"rc={proc.returncode} (wanted {expect_rc})\n"
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    )
     return proc.stdout
 
 
@@ -43,3 +46,55 @@ def test_weather_example_smoke_pallas_inner():
         "--inner", "pallas",
     )
     assert "distributed result matches single-device reference" in out
+
+
+@pytest.mark.multidev
+def test_weather_example_health_blowup_drill(tmp_path):
+    """The end-to-end blow-up drill: a NaN injected after step 7 must be
+    caught at the NEXT cadence-3 probe (step 9), the last healthy probed
+    state (step 6) must be a COMMITted checkpoint, and the flight-recorder
+    JSONL must hold the failing step's field stats."""
+    import json
+
+    from repro.checkpoint import latest_step
+
+    ckpt = tmp_path / "ckpt"
+    log = tmp_path / "events.jsonl"
+    out = _run_example(
+        "--steps", "12", "--devices", "2", "--depth", "4", "--size", "24",
+        "--health", "--health-every", "3", "--inject-nan", "7",
+        "--health-policy", "checkpoint-then-abort",
+        "--ckpt-dir", str(ckpt), "--event-log", str(log),
+        expect_rc=3,
+    )
+    # Halted within one probe cadence of the injection.
+    assert "BLOWUP_DETECTED step=9" in out
+    assert "nan_count=1" in out
+    # checkpoint-then-abort left a COMMITted checkpoint of the last
+    # healthy probed state.
+    assert latest_step(ckpt) == 6
+    assert (ckpt / "step_00000006" / "COMMIT").exists()
+    # Flight recorder: JSONL sink has healthy probes plus the blow-up
+    # event carrying the failing step's stats.
+    lines = [json.loads(l) for l in log.read_text().splitlines()]
+    kinds = [e["kind"] for e in lines]
+    assert "health.probe" in kinds and "health.blowup" in kinds
+    blowup = next(e for e in lines if e["kind"] == "health.blowup")
+    assert blowup["data"]["step"] == 9
+    assert blowup["data"]["nan_count"] >= 1
+    # ... and the crash dump flushed the ring next to the sink.
+    crash = json.loads((tmp_path / "events.jsonl.crash.json").read_text())
+    assert any(e["kind"] == "health.blowup" for e in crash["events"])
+    assert "blow" in crash["reason"] or "NaN" in crash["reason"]
+
+
+@pytest.mark.multidev
+def test_weather_example_health_clean_run(tmp_path):
+    """--health on a healthy forecast: exits 0, probes on cadence."""
+    out = _run_example(
+        "--steps", "9", "--devices", "2", "--depth", "4", "--size", "24",
+        "--health", "--health-every", "3", "--health-policy", "warn",
+        "--event-log", str(tmp_path / "ok.jsonl"),
+    )
+    assert "forecast healthy" in out
+    assert "probes=4" in out and "blowups=0" in out
