@@ -189,7 +189,10 @@ def run_with_health(args, step, psi0) -> None:
                 # dynamics blew up somewhere inside this chunk.
                 psi = psi.at[0, args.size // 2, args.size // 2].set(jnp.nan)
                 print(f"injected NaN after step {args.inject_nan}")
-            monitor.check(done, psi)
+            # force on the final boundary: when steps is not a multiple of
+            # the cadence the last partial chunk is off-cadence, and a NaN
+            # born there must not escape as "forecast healthy".
+            monitor.check(done, psi, force=(done == args.steps))
     except NumericsError as e:
         dump = events.crash_dump(reason=str(e))
         print(f"BLOWUP_DETECTED step={e.step} field={e.field} "

@@ -58,7 +58,10 @@ def tree_health(host_leaves: list[np.ndarray]) -> dict:
             nan += int(np.isnan(a).sum())
             inf += int(np.isinf(a).sum())
             finite = np.asarray(a)[np.isfinite(a)]
-            sumsq += float(np.sum(np.square(finite, dtype=np.float64)))
+            # |z|^2 — np.abs is exact for real floats (sign-bit clear, so
+            # the square is bit-identical) and makes complex leaves work:
+            # np.square(complex, dtype=f64) raises UFuncTypeError.
+            sumsq += float(np.sum(np.square(np.abs(finite), dtype=np.float64)))
         else:
             sumsq += float(np.sum(np.square(a.astype(np.float64))))
     return {

@@ -75,6 +75,7 @@ class FlightRecorder:
         self._ring: deque[Event] = deque(maxlen=capacity)
         self._seq = 0
         self._file = None  # lazily opened append handle
+        self._header_written = False  # once per recorder, even across close/reopen
 
     # -- recording ---------------------------------------------------------
     def record(self, kind: str, **data: Any) -> Event:
@@ -124,9 +125,11 @@ class FlightRecorder:
         if self._file is None:
             self.sink.parent.mkdir(parents=True, exist_ok=True)
             self._file = self.sink.open("a", buffering=1)
-            header = {"seq": -1, "ts": time.monotonic(), "wall": time.time(),
-                      "kind": "meta", "data": self._metadata()}
-            self._file.write(json.dumps(header, default=str) + "\n")
+            if not self._header_written:
+                header = {"seq": -1, "ts": time.monotonic(), "wall": time.time(),
+                          "kind": "meta", "data": self._metadata()}
+                self._file.write(json.dumps(header, default=str) + "\n")
+                self._header_written = True
         self._file.write(json.dumps(ev.as_dict(), default=str) + "\n")
         self._file.flush()
 
@@ -153,6 +156,9 @@ class FlightRecorder:
         return path
 
     def close(self) -> None:
+        """Closes the sink file handle. Safe to keep using the recorder:
+        the next sink write lazily reopens in append mode (without
+        duplicating the ``meta`` header)."""
         if self._file is not None:
             self._file.close()
             self._file = None
@@ -173,20 +179,30 @@ def enabled() -> bool:
 
 
 def enable(recorder: FlightRecorder | None = None) -> FlightRecorder:
-    """Installs ``recorder`` (or a fresh sink-less one) as active."""
+    """Installs ``recorder`` (or a fresh sink-less one) as active. A
+    different recorder being replaced has its sink handle closed — the
+    switchboard owns the fd of whatever it installed (re-enabling the old
+    recorder later is safe: the sink lazily reopens)."""
     global _RECORDER
-    _RECORDER = recorder if recorder is not None else FlightRecorder()
+    rec = recorder if recorder is not None else FlightRecorder()
+    if _RECORDER is not None and _RECORDER is not rec:
+        _RECORDER.close()
+    _RECORDER = rec
     return _RECORDER
 
 
 def disable() -> None:
+    """Uninstalls (and closes the sink handle of) the active recorder."""
     global _RECORDER
+    if _RECORDER is not None:
+        _RECORDER.close()
     _RECORDER = None
 
 
 @contextmanager
 def using(recorder: FlightRecorder | None = None):
-    """Scoped :func:`enable`: restores the previous recorder on exit."""
+    """Scoped :func:`enable`: restores the previous recorder on exit and
+    closes the scoped one's sink handle (its ring stays inspectable)."""
     global _RECORDER
     prev = _RECORDER
     rec = recorder if recorder is not None else FlightRecorder()
@@ -195,6 +211,8 @@ def using(recorder: FlightRecorder | None = None):
         yield rec
     finally:
         _RECORDER = prev
+        if rec is not prev:
+            rec.close()
 
 
 # -- zero-overhead convenience hooks (instrumented layers call these) -------

@@ -47,14 +47,28 @@ STAT_KEYS = ("size", "nan_count", "inf_count", "min", "max", "mean", "l2")
 POLICIES = ("warn", "abort", "checkpoint-then-abort")
 
 
+def _host_snapshot(tree: Any) -> Any:
+    """Device->host copy of an arbitrary pytree of arrays (np.asarray per
+    leaf). Used to decouple retained state from buffers the caller may
+    donate/delete."""
+    import jax
+    import numpy as np
+
+    return jax.tree.map(np.asarray, tree)
+
+
 def field_stats(x, *, axis_names: Sequence[str] = ()) -> dict[str, Any]:
     """On-device health statistics of one array (any shape/dtype).
 
     Returns a dict of 0-d jnp arrays: ``size``, ``nan_count``,
-    ``inf_count``, ``min``, ``max``, ``mean``, ``l2``. Min/max/mean/L2 are
-    over the FINITE values only (a single NaN must not erase the signal of
-    where the rest of the field sits); with no finite values min/max are
-    +/-inf and mean/L2 are 0 — ``nan_count``/``inf_count`` carry the alarm.
+    ``inf_count``, ``min``, ``max``, ``mean``, ``l2``. Counts
+    (``size``/``nan_count``/``inf_count``) accumulate in int32, so they
+    are exact up to 2^31-1 elements per (sharded) field — a float32
+    accumulator would silently lose exactness past 2^24 (~16.7M), below a
+    full ERA5-scale field. Min/max/mean/L2 are over the FINITE values only
+    (a single NaN must not erase the signal of where the rest of the field
+    sits); with no finite values min/max are +/-inf and mean/L2 are 0 —
+    ``nan_count``/``inf_count`` carry the alarm.
 
     ``axis_names`` names enclosing ``shard_map``/``pmap`` mesh axes to
     reduce across (``psum`` for counts and moments, ``pmin``/``pmax`` for
@@ -67,15 +81,15 @@ def field_stats(x, *, axis_names: Sequence[str] = ()) -> dict[str, Any]:
 
     x = jnp.asarray(x)
     finite = jnp.isfinite(x)
-    nan_count = jnp.sum(jnp.isnan(x), dtype=jnp.float32)
-    inf_count = jnp.sum(jnp.isinf(x), dtype=jnp.float32)
-    n_finite = jnp.sum(finite, dtype=jnp.float32)
+    nan_count = jnp.sum(jnp.isnan(x), dtype=jnp.int32)
+    inf_count = jnp.sum(jnp.isinf(x), dtype=jnp.int32)
+    n_finite = jnp.sum(finite, dtype=jnp.int32)
     xf = jnp.where(finite, x, 0).astype(jnp.float32)
     total = jnp.sum(xf)
     sumsq = jnp.sum(xf * xf)
     mn = jnp.min(jnp.where(finite, x, jnp.inf).astype(jnp.float32))
     mx = jnp.max(jnp.where(finite, x, -jnp.inf).astype(jnp.float32))
-    size = jnp.asarray(x.size, jnp.float32)
+    size = jnp.asarray(x.size, jnp.int32)
 
     if axis_names:
         ax = tuple(axis_names)
@@ -88,7 +102,7 @@ def field_stats(x, *, axis_names: Sequence[str] = ()) -> dict[str, Any]:
         mn = jax.lax.pmin(mn, ax)
         mx = jax.lax.pmax(mx, ax)
 
-    mean = total / jnp.maximum(n_finite, 1.0)
+    mean = total / jnp.maximum(n_finite, 1).astype(jnp.float32)
     return {
         "size": size,
         "nan_count": nan_count,
@@ -144,6 +158,14 @@ class HealthMonitor:
     retained reference keeps that state alive until the next healthy probe
     replaces it — the memory cost of ``checkpoint-then-abort``.
 
+    ``snapshot_state=True`` copies the retained state to host
+    (``np.asarray`` over the tree) at probe time. REQUIRED when the step
+    function donates its state buffers (``jax.jit(..., donate_argnums)``):
+    the device arrays a probe retains are deleted by the very next step,
+    so without a snapshot ``checkpoint_fn`` would read dead buffers and
+    the advertised last-healthy checkpoint could never be written. The
+    host-copy cost is paid only on cadence probes, never off-cadence.
+
     Tracer arguments (probe called while being traced inside jit /
     shard_map / scan) step aside entirely, exactly like
     ``metrics.instrument_call``: the traced computation is byte-identical
@@ -158,6 +180,7 @@ class HealthMonitor:
         max_abs: float | None = None,
         name: str = "field",
         checkpoint_fn: Callable[[int, Any], Any] | None = None,
+        snapshot_state: bool = False,
         log_fn: Callable[[str], Any] = print,
     ) -> None:
         if cadence < 1:
@@ -171,6 +194,7 @@ class HealthMonitor:
         self.max_abs = max_abs
         self.name = name
         self.checkpoint_fn = checkpoint_fn
+        self.snapshot_state = snapshot_state
         self.log_fn = log_fn
         self.probes = 0
         self.blowups = 0
@@ -197,7 +221,10 @@ class HealthMonitor:
             metrics.set_gauge(f"health.{name}.{k}", v)
         events.record("health.probe", step=step, field=name, **stats)
         if is_healthy(stats, max_abs=self.max_abs):
-            self.last_healthy = (step, x if state is None else state)
+            keep = x if state is None else state
+            if self.snapshot_state:
+                keep = _host_snapshot(keep)
+            self.last_healthy = (step, keep)
             return stats
         self.blowups += 1
         metrics.inc("health.blowups")

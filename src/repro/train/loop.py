@@ -304,6 +304,10 @@ def train(
             policy=train_cfg.health_policy,
             name="train.loss",
             checkpoint_fn=ckpt_fn,
+            # jit_step donates (params, opt_state): the buffers a probe
+            # retains are deleted by the NEXT step, so last_healthy must be
+            # a host snapshot or checkpoint_fn would read dead arrays.
+            snapshot_state=True,
             log_fn=log_fn,
         )
     history = []

@@ -116,6 +116,59 @@ def test_save_records_health_snapshot_and_clean_restore_passes(tmp_path):
     np.testing.assert_array_equal(np.asarray(state["w"]), tree["w"])
 
 
+def test_checkpoint_roundtrip_complex_leaves(tmp_path):
+    """Complex leaves go through the health snapshot as |z|^2 (np.square
+    with a float64 dtype arg rejects complex input) — save, L2, and the
+    verify-on-restore path must all work."""
+    c = (np.arange(6) + 1j * np.arange(6, 0, -1)).astype(np.complex64).reshape(2, 3)
+    c[0, 0] = np.nan + 0j
+    tree = {"c": c, "w": np.ones(3, dtype=np.float32)}
+    save_checkpoint(tmp_path, 5, tree)
+    meta = json.loads((tmp_path / "step_00000005" / "meta.json").read_text())
+    h = meta["health"]
+    assert h["nan_count"] == 1
+    finite = c[np.isfinite(c)]
+    want_l2 = float(np.sqrt((np.abs(finite).astype(np.float64) ** 2).sum() + 3.0))
+    assert np.isclose(h["l2"], want_l2, rtol=1e-12)
+    state, _ = _restore(tmp_path, tree)  # health verification on
+    np.testing.assert_array_equal(np.asarray(state["c"]), c)
+
+
+# --- train-loop health abort under buffer donation -------------------------
+
+
+def test_train_health_checkpoint_then_abort_survives_donation(tmp_path):
+    """train()'s jit_step donates (params, opt_state), so the last-healthy
+    state the loss monitor retains is deleted by the very next step unless
+    it was host-snapshotted at probe time. A diverging run (lr=1e9 goes
+    NaN at step 2) must still COMMIT the step-1 checkpoint before the
+    abort — pre-fix this crashed with 'Array has been deleted'."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.data import DataConfig, SyntheticLM
+    from repro.launch.mesh import make_host_mesh
+    from repro.obs.health import NumericsError
+    from repro.train import TrainConfig, train
+
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen1.5-0.5b"), n_layers=2, d_model=32, n_heads=2,
+        n_kv_heads=2, head_dim=0, d_ff=64, vocab_size=64, remat=False,
+        learning_rate=1e9)
+    ds = SyntheticLM(DataConfig(seq_len=8, global_batch=4, vocab_size=64))
+    tc = TrainConfig(steps=6, ckpt_every=10_000, ckpt_dir=str(tmp_path),
+                     log_every=100, health_every=1,
+                     health_policy="checkpoint-then-abort")
+    with pytest.raises(NumericsError) as ei:
+        train(cfg, tc, make_host_mesh(), ds, log_fn=lambda *_: None)
+    assert ei.value.step == 2 and ei.value.stats["nan_count"] == 1
+    # The step-1 (last healthy) checkpoint was written from live buffers.
+    assert latest_step(tmp_path) == 1
+    meta = json.loads((tmp_path / "step_00000001" / "meta.json").read_text())
+    assert meta["extra"]["reason"] == "health-abort"
+    assert meta["health"]["nan_count"] == 0 and meta["health"]["inf_count"] == 0
+
+
 PREEMPT_SCRIPT = """
 import sys, os, signal
 sys.path.insert(0, "{src}")

@@ -148,6 +148,40 @@ def test_enable_disable_roundtrip():
     assert not events.enabled()
 
 
+def test_disable_closes_sink_and_reenable_reopens_without_second_header(tmp_path):
+    """The switchboard owns the fd of whatever it installed: disable()
+    must close it (no leak across repeated scopes), and re-enabling the
+    same recorder lazily reopens the sink WITHOUT duplicating the meta
+    header."""
+    sink = tmp_path / "e.jsonl"
+    rec = events.enable(FlightRecorder(sink=sink))
+    events.record("a")
+    assert rec._file is not None
+    events.disable()
+    assert rec._file is None  # handle released
+    events.enable(rec)
+    events.record("b")
+    events.disable()
+    kinds = [json.loads(l)["kind"] for l in sink.read_text().splitlines()]
+    assert kinds == ["meta", "a", "b"]
+
+
+def test_using_closes_scoped_recorder_sink(tmp_path):
+    with events.using(FlightRecorder(sink=tmp_path / "s.jsonl")) as rec:
+        events.record("inside")
+    assert rec._file is None   # fd released on scope exit...
+    assert len(rec) == 1       # ...ring still inspectable
+
+
+def test_enable_replacement_closes_previous_recorder(tmp_path):
+    prev = events.enable(FlightRecorder(sink=tmp_path / "a.jsonl"))
+    events.record("x")
+    assert prev._file is not None
+    events.enable(FlightRecorder())  # replaces prev -> closes its sink
+    assert prev._file is None
+    events.disable()
+
+
 def test_env_auto_enable_in_subprocess(tmp_path):
     """REPRO_EVENT_LOG=path installs a sink-backed recorder at import."""
     sink = tmp_path / "auto.jsonl"

@@ -89,6 +89,18 @@ def test_field_stats_is_jit_safe():
     assert all(hasattr(v, "shape") and v.shape == () for v in field_stats(x).values())
 
 
+def test_field_stats_counts_are_exact_past_float32_precision():
+    """Counts accumulate in int32: a field larger than 2^24 elements (where
+    float32 integer arithmetic stops being exact) still reports its size —
+    and therefore nan/finite counts — exactly."""
+    n = 2**24 + 3  # odd excess: not representable in float32
+    s = field_stats(jnp.ones((n,), jnp.int8))
+    assert s["size"].dtype == jnp.int32
+    assert s["nan_count"].dtype == jnp.int32
+    assert int(s["size"]) == n
+    assert int(s["nan_count"]) == 0 and int(s["inf_count"]) == 0
+
+
 def test_is_healthy_max_abs_bound():
     s = host_stats(field_stats(jnp.asarray([1.0, -3.0, 2.0])))
     assert is_healthy(s)
@@ -154,6 +166,33 @@ def test_monitor_checkpoint_then_abort_hands_over_last_healthy_state():
     step, state = saved[0]
     assert step == 2
     np.testing.assert_array_equal(np.asarray(state["params"]), np.arange(4.0) * 2)
+
+
+def test_monitor_snapshot_state_survives_donated_buffers():
+    """A step fn with donate_argnums deletes the buffers a probe retained;
+    snapshot_state=True must host-copy last_healthy at probe time so
+    checkpoint_fn still reads live arrays after the donation."""
+    saved = []
+    m = HealthMonitor(
+        cadence=1, policy="checkpoint-then-abort", snapshot_state=True,
+        checkpoint_fn=lambda s, st: saved.append((s, st)), log_fn=lambda _: None,
+    )
+    step = jax.jit(lambda p: p * 2.0, donate_argnums=0)
+    p = jnp.arange(4.0)
+    m.check(0, 1.0, state=p)
+    p = step(p)  # donation deletes the retained step-0 buffers
+    with pytest.raises(NumericsError):
+        m.check(1, float("nan"), state=p)
+    ((s, st),) = saved
+    assert s == 0
+    np.testing.assert_array_equal(np.asarray(st), np.arange(4.0))
+
+
+def test_monitor_without_snapshot_retains_state_by_reference():
+    m = HealthMonitor(cadence=1)
+    x = jnp.arange(3.0)
+    m.check(0, 1.0, state=x)
+    assert m.last_healthy[1] is x  # default: no host copy
 
 
 def test_monitor_checkpoint_then_abort_without_healthy_probe_still_aborts():

@@ -89,6 +89,21 @@ def test_weather_example_health_blowup_drill(tmp_path):
 
 
 @pytest.mark.multidev
+def test_weather_example_health_probes_final_partial_chunk(tmp_path):
+    """steps=11 with cadence 3 ends on a partial chunk (done=11 is
+    off-cadence): the final boundary must still be probed (force=True) so a
+    NaN born in the last chunk cannot escape as 'forecast healthy'."""
+    out = _run_example(
+        "--steps", "11", "--devices", "2", "--depth", "4", "--size", "24",
+        "--health", "--health-every", "3", "--inject-nan", "10",
+        "--health-policy", "abort",
+        "--event-log", str(tmp_path / "events.jsonl"),
+        expect_rc=3,
+    )
+    assert "BLOWUP_DETECTED step=11" in out
+
+
+@pytest.mark.multidev
 def test_weather_example_health_clean_run(tmp_path):
     """--health on a healthy forecast: exits 0, probes on cadence."""
     out = _run_example(
