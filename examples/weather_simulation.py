@@ -1,13 +1,23 @@
-"""End-to-end weather-stencil driver: distributed iterative hdiff via the IR.
+"""End-to-end coupled-system weather driver: shallow-water via the IR.
 
-  PYTHONPATH=src python examples/weather_simulation.py [--steps 100] [--devices 8]
+  PYTHONPATH=src python examples/weather_simulation.py [--steps 50] [--devices 8]
 
-Builds the hdiff step through the ``repro.ir`` compiler path: the stencil is
-declared once as a dataflow graph (``hdiff_program``), the §3.1 analytical
-planner consumes its graph-derived halo/op counts to choose the partition,
-and ``lower_sharded`` decomposes it over the device mesh with the *inferred*
-radius-2 halo exchange (the B-block scale-out of §3.4). The distributed
-result is verified against the single-device reference kernel.
+A multi-equation model as ONE multi-output IR program: the linearized
+shallow-water system evolves three fields per sweep —
+
+    u <- u - g*dt * dh/dx
+    v <- v - g*dt * dh/dy
+    h <- h - H*dt * (du/dx + dv/dy)
+
+declared once as a dataflow graph (``shallow_water_program``) with
+``outputs={u, v, h}``. The §3.1 planner consumes the program's derived
+per-output halos to choose the rows x cols partition that minimizes the
+MERGED exchange bytes, and ``lower_sharded`` decomposes the whole system
+over the device mesh: one fused per-shard kernel writes all three outputs
+and ONE stacked halo exchange per sweep moves every evolving field's bands
+(8 collective permutes on a 2-D mesh where sequential per-field exchanges
+would issue 24). The distributed state dict is verified per field against
+the single-device reference lowering.
 
 With --devices N (default 8) the script re-execs itself with N fake host
 devices, which is how a real multi-host launch degrades gracefully to one
@@ -16,16 +26,18 @@ inside each shard (interpret mode off-TPU, so it is a correctness datapoint
 on CPU, not a speed claim).
 
 ``--health`` arms the numerics watchdog for long forecasts: the time loop
-runs in cadence-sized jitted chunks and a ``repro.obs.HealthMonitor``
-probes the field (NaN/Inf counts, min/max/mean, global L2 — on-device
-reductions, scalars-only host transfer) every ``--health-every`` steps. On
-a blow-up the run halts within one probe cadence under the chosen
-``--health-policy``: the flight recorder (JSONL at ``--event-log`` /
-``REPRO_EVENT_LOG``) is flushed with the failing step's field stats, and
-``checkpoint-then-abort`` first COMMITs a checkpoint of the last healthy
-probed state to ``--ckpt-dir``. ``--inject-nan STEP`` poisons one grid
-point mid-forecast — the end-to-end blow-up drill CI runs. Exit code 3
-signals a detected blow-up.
+runs in cadence-sized jitted chunks and one ``repro.obs.HealthMonitor``
+PER OUTPUT FIELD probes its field (NaN/Inf counts, min/max/mean, global
+L2 — on-device reductions, scalars-only host transfer) every
+``--health-every`` steps, so the blow-up report names WHICH equation went
+bad. All monitors share one checkpoint_fn over the full state dict: on a
+blow-up under ``checkpoint-then-abort`` the failing field's monitor first
+COMMITs a checkpoint of the last healthy probed {u, v, h} to
+``--ckpt-dir``, then halts within one probe cadence; the flight recorder
+(JSONL at ``--event-log`` / ``REPRO_EVENT_LOG``) is flushed with the
+failing step's per-field stats. ``--inject-nan STEP`` poisons one grid
+point of the HEIGHT field mid-forecast — the end-to-end blow-up drill CI
+runs. Exit code 3 signals a detected blow-up.
 """
 
 import argparse
@@ -50,7 +62,7 @@ def main() -> None:
         help="per-shard compute backend for the IR sharded lowering",
     )
     ap.add_argument("--health", action="store_true",
-                    help="probe field numerics on a cadence (blow-up-safe loop)")
+                    help="probe per-field numerics on a cadence (blow-up-safe loop)")
     ap.add_argument("--health-every", type=int, default=10,
                     help="probe cadence in steps (with --health)")
     ap.add_argument("--health-policy", default="checkpoint-then-abort",
@@ -60,7 +72,7 @@ def main() -> None:
     ap.add_argument("--event-log", default="",
                     help="flight-recorder JSONL sink (or set REPRO_EVENT_LOG)")
     ap.add_argument("--inject-nan", type=int, default=-1, metavar="STEP",
-                    help="poison one grid point after STEP (blow-up drill)")
+                    help="poison one height-field point after STEP (blow-up drill)")
     ap.add_argument("--_worker", action="store_true")
     args = ap.parse_args()
 
@@ -76,64 +88,87 @@ def main() -> None:
     import numpy as np
     import jax
 
-    from repro.core import hdiff, make_initial_field, plan_partition, run_simulation
-    from repro.ir import hdiff_program, lower_sharded
-    from repro.launch.mesh import make_mesh
+    from repro.core import make_initial_field
+    from repro.ir import (
+        lower_reference,
+        lower_sharded,
+        plan_partition,
+        shallow_water_program,
+    )
 
     n_dev = len(jax.devices())
     print(f"devices: {n_dev}")
 
-    program = hdiff_program(coeff=0.025, limit=True)
+    program = shallow_water_program()
     spec = program.spec()
     print(
         f"IR program: {program.name} radius={spec.radius} "
+        f"outputs={'+'.join(program.outputs)} "
         f"({spec.macs} MACs + {spec.other_ops} ops, {spec.reads} reads/point)"
     )
 
-    plan = plan_partition(args.depth, args.size, args.size, n_dev, program=program)
+    plan = plan_partition(program, args.depth, args.size, args.size, n_dev)
     print(
-        f"partition plan: {plan.kind} (depth x{plan.depth_shards}, rows x{plan.row_shards}) "
-        f"predicted step terms: compute={plan.compute_s:.2e}s hbm={plan.hbm_s:.2e}s "
-        f"ici={plan.ici_s:.2e}s"
+        f"partition plan: rows x{plan.row_shards} cols x{plan.col_shards} "
+        f"(merged-exchange halo={plan.halo}, "
+        f"{plan.wire_bytes} wire B/round for all {len(program.outputs)} fields)"
     )
 
-    mesh = make_mesh((plan.depth_shards, plan.row_shards), ("data", "model"))
-    step = lower_sharded(
-        program,
-        mesh,
-        depth_axis="data",
-        row_axis="model" if plan.row_shards > 1 else None,
-        inner=args.inner,
-    )
+    step = lower_sharded(program, mesh_shape=plan.mesh_shape, inner=args.inner)
 
-    psi0 = make_initial_field(args.depth, args.size, args.size, kind="gaussian")
+    # Initial state: a gaussian height anomaly at rest (u = v = 0) — the
+    # classic gravity-wave adjustment problem.
+    h0 = make_initial_field(args.depth, args.size, args.size, kind="gaussian")
+    state0 = {
+        "u": jax.numpy.zeros_like(h0),
+        "v": jax.numpy.zeros_like(h0),
+        "h": h0,
+    }
 
     if args.health:
-        run_with_health(args, step, psi0)
+        run_with_health(args, program, step, state0)
         return
 
-    # Distributed time-stepping (grid stays device-resident between steps).
+    # Distributed time-stepping: the {u, v, h} dict is the scan carry, so
+    # the whole coupled state stays device-resident between steps.
     @jax.jit
-    def run(psi, n):
-        def body(p, _):
-            return step(p), None
-        out, _ = jax.lax.scan(body, psi, None, length=args.steps)
+    def run(state):
+        def body(s, _):
+            return step(s), None
+        out, _ = jax.lax.scan(body, state, None, length=args.steps)
         return out
 
     t0 = time.perf_counter()
-    final = jax.block_until_ready(run(psi0, args.steps))
+    final = jax.block_until_ready(run(state0))
     dt = time.perf_counter() - t0
     print(f"{args.steps} steps in {dt:.2f}s ({dt/args.steps*1e3:.1f} ms/step on CPU)")
 
-    # Verify against the single-device reference for a few steps.
-    ref, _ = run_simulation(psi0, 0.025, step_fn=hdiff, n_steps=args.steps)
-    np.testing.assert_allclose(np.asarray(final), np.asarray(ref), rtol=1e-4, atol=1e-5)
-    print("distributed result matches single-device reference ✓")
-    print(f"field range: [{float(final.min()):.4f}, {float(final.max()):.4f}]")
+    # Verify every output field against the single-device reference.
+    ref_step = lower_reference(program)
+
+    @jax.jit
+    def run_ref(state):
+        def body(s, _):
+            return ref_step(s), None
+        out, _ = jax.lax.scan(body, state, None, length=args.steps)
+        return out
+
+    ref = jax.block_until_ready(run_ref(state0))
+    for f in program.outputs:
+        np.testing.assert_allclose(
+            np.asarray(final[f]), np.asarray(ref[f]),
+            rtol=1e-4, atol=1e-5, err_msg=f,
+        )
+    print("distributed result matches single-device reference ✓ "
+          f"({', '.join(program.outputs)})")
+    for f in program.outputs:
+        a = final[f]
+        print(f"  {f} range: [{float(a.min()):.4f}, {float(a.max()):.4f}]")
 
 
-def run_with_health(args, step, psi0) -> None:
-    """The blow-up-safe forecast loop: cadence-chunked stepping + probes."""
+def run_with_health(args, program, step, state0) -> None:
+    """The blow-up-safe forecast loop: cadence-chunked stepping + one
+    monitor per output field, all sharing one full-state checkpoint_fn."""
     import jax
     import jax.numpy as jnp
 
@@ -148,51 +183,66 @@ def run_with_health(args, step, psi0) -> None:
 
     checkpoint_fn = None
     if args.health_policy == "checkpoint-then-abort":
-        def checkpoint_fn(healthy_step, psi):
+        def checkpoint_fn(healthy_step, state):
             path = save_checkpoint(
-                args.ckpt_dir, healthy_step, {"psi": psi},
-                {"step": healthy_step, "reason": "pre-blow-up health snapshot"},
+                args.ckpt_dir, healthy_step, dict(state),
+                {"step": healthy_step, "fields": list(program.outputs),
+                 "reason": "pre-blow-up health snapshot"},
             )
             print(f"committed last-healthy checkpoint: {path}")
             return path
 
-    monitor = HealthMonitor(
-        cadence=args.health_every,
-        policy=args.health_policy,
-        name="psi",
-        checkpoint_fn=checkpoint_fn,
-    )
+    # One watchdog per evolving field: the blow-up names the equation that
+    # went bad. Each healthy probe retains the FULL state dict, so whichever
+    # monitor trips first checkpoints a consistent {u, v, h} snapshot.
+    monitors = {
+        f: HealthMonitor(
+            cadence=args.health_every,
+            policy=args.health_policy,
+            name=f,
+            checkpoint_fn=checkpoint_fn,
+        )
+        for f in program.outputs
+    }
+
+    def check_all(done, state, *, force=False):
+        for f, monitor in monitors.items():
+            monitor.check(done, state[f], state=state, force=force)
 
     cadence = args.health_every
 
     @functools.partial(jax.jit, static_argnums=1)
-    def run_chunk(psi, n):
-        def body(p, _):
-            return step(p), None
-        out, _ = jax.lax.scan(body, psi, None, length=n)
+    def run_chunk(state, n):
+        def body(s, _):
+            return step(s), None
+        out, _ = jax.lax.scan(body, state, None, length=n)
         return out
 
-    psi = psi0
-    monitor.check(0, psi)  # step-0 baseline: the initial field is healthy
+    state = state0
+    check_all(0, state)  # step-0 baseline: the initial state is healthy
     events.record("forecast.start", steps=args.steps, cadence=cadence,
-                  policy=args.health_policy, grid=[args.depth, args.size, args.size])
+                  policy=args.health_policy, fields=list(program.outputs),
+                  grid=[args.depth, args.size, args.size])
     t0 = time.perf_counter()
     try:
         done = 0
         while done < args.steps:
             n = min(cadence - done % cadence if done % cadence else cadence,
                     args.steps - done)
-            psi = run_chunk(psi, n)
+            state = run_chunk(state, n)
             done += n
             if 0 <= args.inject_nan <= done and args.inject_nan > done - n:
-                # The drill: one poisoned point mid-forecast, as if the
-                # dynamics blew up somewhere inside this chunk.
-                psi = psi.at[0, args.size // 2, args.size // 2].set(jnp.nan)
-                print(f"injected NaN after step {args.inject_nan}")
+                # The drill: one poisoned HEIGHT point mid-forecast, as if
+                # the dynamics blew up somewhere inside this chunk.
+                state = dict(state)
+                state["h"] = state["h"].at[
+                    0, args.size // 2, args.size // 2
+                ].set(jnp.nan)
+                print(f"injected NaN into h after step {args.inject_nan}")
             # force on the final boundary: when steps is not a multiple of
             # the cadence the last partial chunk is off-cadence, and a NaN
             # born there must not escape as "forecast healthy".
-            monitor.check(done, psi, force=(done == args.steps))
+            check_all(done, state, force=(done == args.steps))
     except NumericsError as e:
         dump = events.crash_dump(reason=str(e))
         print(f"BLOWUP_DETECTED step={e.step} field={e.field} "
@@ -202,10 +252,13 @@ def run_with_health(args, step, psi0) -> None:
         sys.exit(BLOWUP_EXIT_CODE)
     dt = time.perf_counter() - t0
     events.record("forecast.end", steps=args.steps, wall_s=dt)
-    print(f"{args.steps} steps in {dt:.2f}s with {monitor.probes} health probes "
-          f"({args.steps / cadence:.0f} cadences, policy={args.health_policy})")
-    print(f"forecast healthy: l2={monitor.last_healthy and 'ok'} "
-          f"probes={monitor.probes} blowups={monitor.blowups}")
+    probes = sum(m.probes for m in monitors.values())
+    blowups = sum(m.blowups for m in monitors.values())
+    print(f"{args.steps} steps in {dt:.2f}s with {probes} health probes "
+          f"({args.steps / cadence:.0f} cadences x {len(monitors)} fields, "
+          f"policy={args.health_policy})")
+    print(f"forecast healthy: probes={probes} blowups={blowups} "
+          f"fields={'+'.join(monitors)}")
 
 
 if __name__ == "__main__":

@@ -20,6 +20,15 @@ and sum — the Pallas kernel sizes each field's three-slab halo by its own
 radius, and the sharded lowering skips the exchange for radius-0 fields.
 ``vadvc_program`` / ``hdiff_coupled_program`` are the shipped workloads.
 
+Multi-OUTPUT programs (coupled PDE systems) declare ``outputs={field:
+op_name, ...}`` — several fields evolve per sweep, each with its own
+derived radius/footprint, and every backend returns ``{field: array}``.
+One fused kernel writes all outputs; the sharded lowering moves all
+evolving halos in ONE merged exchange per k sweeps.
+``shallow_water_program`` (u, v, h gravity-wave coupling) and
+``advection_diffusion_program`` (evolving u, c over a shared v) are the
+shipped coupled systems.
+
 This package is self-contained (no imports from other ``repro`` modules at
 import time), so ``repro.core`` and ``repro.kernels`` derive their specs and
 tile plans from it without cycles.
@@ -38,6 +47,8 @@ from repro.ir.ops import affine, flux, product, scaled_residual, weighted_residu
 from repro.ir.programs import (
     ELEMENTARY_PROGRAMS,
     MULTIFIELD_PROGRAMS,
+    MULTIOUTPUT_PROGRAMS,
+    advection_diffusion_program,
     hdiff_coupled_program,
     hdiff_multistep_program,
     hdiff_program,
@@ -47,6 +58,7 @@ from repro.ir.programs import (
     jacobi2d_9pt_program,
     laplacian_program,
     seidel2d_program,
+    shallow_water_program,
     smagorinsky_coeff,
     vadvc_program,
 )
@@ -54,6 +66,7 @@ from repro.ir.evaluate import (
     apply_program,
     embed_interior,
     interior_eval,
+    interior_eval_multi,
     interior_region,
     resolve_field_arrays,
     ring_crop,

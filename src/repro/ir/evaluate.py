@@ -65,11 +65,18 @@ def resolve_field_arrays(program: StencilProgram, x, *, ndim: int | None = None)
     return arrays
 
 
-def thread_chain(program: StencilProgram, x, steps) -> Array:
+def thread_chain(program: StencilProgram, x, steps):
     """Runs a composed program's per-sweep callables with the shared-field
-    threading convention: the ``passthrough`` field evolves sweep-to-sweep,
-    every other input feeds each sweep unchanged. ``steps`` pairs each
-    chain entry with its executor: ``[(sub_program, callable), ...]``.
+    threading convention: the evolving (:attr:`~repro.ir.graph
+    .StencilProgram.outputs`) fields evolve sweep-to-sweep, every other
+    input feeds each sweep unchanged. ``steps`` pairs each chain entry with
+    its executor: ``[(sub_program, callable), ...]``.
+
+    Single-output programs thread one array (and return one array, the
+    legacy contract); multi-output programs thread the ``{field: array}``
+    state dict — each sweep's executor receives shared fields plus the
+    current states and must return the updated ``{field: array}`` dict
+    (outputs bind by field name, the compose convention).
 
     The one home of the convention — ``apply_program`` and the staged
     reference lowering both run through here, so their error behaviour and
@@ -77,6 +84,13 @@ def thread_chain(program: StencilProgram, x, steps) -> Array:
     """
     arrays = resolve_field_arrays(program, x)
     shared = dict(zip(program.inputs, arrays))
+    if len(program.outputs) > 1:
+        states = {f: shared[f] for f in program.outputs}
+        for p, step in steps:
+            sub = {f: shared[f] for f in p.inputs if f not in p.outputs}
+            sub.update(states)
+            states = dict(step(sub))
+        return states
     arr = shared[program.passthrough] if isinstance(x, Mapping) else arrays[0]
     for p, step in steps:
         if len(p.inputs) == 1:
@@ -111,13 +125,17 @@ def op_views(op, env: Mapping[str, Array], margins, grid: tuple[int, ...], nd: i
     return views
 
 
-def interior_eval(program: StencilProgram, arrays: Mapping[str, Array]) -> Array:
+def interior_eval_multi(
+    program: StencilProgram, arrays: Mapping[str, Array]
+) -> dict[str, Array]:
     """Evaluates ``program`` over source fields given on a common grid.
 
     ``arrays`` maps each program input to an array whose trailing ``ndim``
-    dims are the grid (leading dims are batch). Returns the output on the
-    valid interior: trailing dims shrink by the program's (lo + hi) margins.
-    """
+    dims are the grid (leading dims are batch). Returns every output field's
+    interior in one DAG evaluation — ``{field: array}`` with each array on
+    that OUTPUT's own maximal valid region (trailing dims shrink by its
+    producing op's (lo + hi) margins, which differ per output when the
+    coupled equations have different depths)."""
     nd = program.ndim
     for f in program.inputs:
         if f not in arrays:
@@ -132,7 +150,14 @@ def interior_eval(program: StencilProgram, arrays: Mapping[str, Array]) -> Array
         # zero runtime cost and no effect on the compiled computation.
         with jax.named_scope(f"ir/{program.name}/{op.name}"):
             env[op.name] = op.compute(*op_views(op, env, margins, grid, nd))
-    return env[program.output]
+    return {f: env[op_name] for f, op_name in program.outputs.items()}
+
+
+def interior_eval(program: StencilProgram, arrays: Mapping[str, Array]) -> Array:
+    """The :attr:`~repro.ir.graph.StencilProgram.passthrough` output's
+    interior — the single-output view of :func:`interior_eval_multi` (the
+    whole DAG is still evaluated once)."""
+    return interior_eval_multi(program, arrays)[program.passthrough]
 
 
 def interior_region(program: StencilProgram, grid: tuple[int, ...]) -> tuple[slice, ...]:
@@ -147,12 +172,15 @@ def interior_region(program: StencilProgram, grid: tuple[int, ...]) -> tuple[sli
     return tuple(slice(r, grid[d] - r) for d in range(program.ndim))
 
 
-def ring_crop(program: StencilProgram, interior: Array) -> Array:
-    """Crops an exact-margin interior (as produced by :func:`interior_eval`)
-    to the square radius-``r`` ring region. The ring region is contained in
-    the valid region (``r >= margin`` per dim/side by construction)."""
+def ring_crop(program: StencilProgram, interior: Array, *, output: str | None = None) -> Array:
+    """Crops an exact-margin interior (as produced by :func:`interior_eval`
+    / :func:`interior_eval_multi`) to the square radius-``r`` ring region.
+    The ring region is contained in the valid region (``r >= margin`` per
+    dim/side by construction — ``r`` is the program-wide max). ``output``
+    names which output field's interior is being cropped (its own margins
+    set the alignment); defaults to the passthrough output."""
     r = program.radius
-    lo, hi = program.halo()
+    lo, hi = program.output_margins(output or program.passthrough)
     nd = program.ndim
     idx = []
     for d in range(nd):
@@ -163,29 +191,34 @@ def ring_crop(program: StencilProgram, interior: Array) -> Array:
 
 def slab_step(
     program: StencilProgram,
-    slab: Array,
+    slab: Array | Mapping[str, Array],
     row_ids: Array,
     rows_total,
     col_ids: Array | None = None,
     cols_total=None,
     extras: Mapping[str, Array] | None = None,
-) -> Array:
+):
     """One sweep of a (single-sweep) program over a slab — the per-step body
     of every temporal-blocked lowering.
 
-    ``slab`` is ``(..., n, m)`` real data for the program's *evolving*
-    (:attr:`~repro.ir.graph.StencilProgram.passthrough`) field; ``row_ids``
-    gives the GLOBAL row index of each of the ``n - 2r`` rows produced,
-    shaped ``(n - 2r,)`` or ``(n - 2r, 1)``. Rows whose global index falls
-    in the radius-``r`` boundary ring keep the slab's current value (the
-    per-sweep passthrough that makes k fused sweeps bit-match k full-shape
-    applications).
+    ``slab`` carries the program's *evolving* state: a bare ``(..., n, m)``
+    array for the :attr:`~repro.ir.graph.StencilProgram.passthrough` field,
+    or a ``{field: array}`` dict covering every
+    :attr:`~repro.ir.graph.StencilProgram.outputs` field (the coupled-system
+    form — all on one grid). The return mirrors the input: bare array in,
+    bare array out; dict in, dict out (one updated slab per evolving field).
+    ``row_ids`` gives the GLOBAL row index of each of the ``n - 2r`` rows
+    produced, shaped ``(n - 2r,)`` or ``(n - 2r, 1)``. Rows whose global
+    index falls in the radius-``r`` boundary ring keep each slab's current
+    value (the per-sweep passthrough that makes k fused sweeps bit-match k
+    full-shape applications); ``r = program.radius`` is shared by all
+    evolving fields so the slabs stay grid-aligned through a chain.
 
     ``extras`` supplies the program's non-evolving input fields (diffusion
     coefficients, velocities), each on the SAME grid as ``slab``. They are
-    read, never written: the boundary ring applies to the evolving field
+    read, never written: the boundary ring applies to the evolving fields
     only, and extras pass between sweeps unchanged (``slab_sweep`` slices
-    them to follow the shrinking state slab).
+    them to follow the shrinking state slabs).
 
     Columns come in two modes, mirroring how the caller decomposed them:
 
@@ -200,47 +233,78 @@ def slab_step(
         index exactly like rows. Returns ``(..., n - 2r, m - 2r)``.
     """
     r = program.radius
-    # State LAST, like thread_chain: a chain entry's passthrough name may
+    is_multi = isinstance(slab, Mapping)
+    if is_multi:
+        missing = [f for f in program.outputs if f not in slab]
+        if missing:
+            raise ValueError(
+                f"slab dict is missing evolving field(s) {missing} of "
+                f"program {program.name!r} (outputs: {tuple(program.outputs)})"
+            )
+        states = {f: slab[f] for f in program.outputs}
+    else:
+        states = {program.passthrough: slab}
+    # States LAST, like thread_chain: a chain entry's evolving-field name may
     # collide with a composed program's shared field (compose renames the
-    # merged DAG but the chain keeps original names), and the evolving slab
+    # merged DAG but the chain keeps original names), and the evolving slabs
     # must win that collision or the sweep runs on the wrong array.
     arrays = dict(extras) if extras else {}
-    arrays[program.passthrough] = slab
-    vals = ring_crop(program, interior_eval(program, arrays))
+    arrays.update(states)
+    interiors = interior_eval_multi(program, arrays)
+    vals = {
+        f: ring_crop(program, interiors[f], output=f) for f in program.outputs
+    }
     if r == 0:
-        return vals.astype(slab.dtype)
+        out = {f: vals[f].astype(states[f].dtype) for f in states}
+        return out if is_multi else out[program.passthrough]
     keep_r = (row_ids < r) | (row_ids >= rows_total - r)
     if keep_r.ndim == 1:
         keep_r = keep_r[:, None]
     if col_ids is None:
-        cols = slab.shape[-1]
-        out = slab[..., r:-r, :]
-        out = out.at[..., :, r : cols - r].set(vals.astype(slab.dtype))
-        return jnp.where(keep_r, slab[..., r:-r, :], out)
+        out = {}
+        for f, s in states.items():
+            cols = s.shape[-1]
+            cur = s[..., r:-r, :]
+            upd = cur.at[..., :, r : cols - r].set(vals[f].astype(s.dtype))
+            out[f] = jnp.where(keep_r, cur, upd)
+        return out if is_multi else out[program.passthrough]
     keep_c = (col_ids < r) | (col_ids >= cols_total - r)
     if keep_c.ndim == 1:
         keep_c = keep_c[None, :]
-    cur = slab[..., r:-r, r:-r]
-    return jnp.where(keep_r | keep_c, cur, vals.astype(slab.dtype))
+    out = {}
+    for f, s in states.items():
+        cur = s[..., r:-r, r:-r]
+        out[f] = jnp.where(keep_r | keep_c, cur, vals[f].astype(s.dtype))
+    return out if is_multi else out[program.passthrough]
+
+
+def _any_state(slab):
+    """One representative array of an Array-or-``{field: Array}`` slab (all
+    evolving slabs share one grid, so any leaf carries the shape)."""
+    return next(iter(slab.values())) if isinstance(slab, Mapping) else slab
 
 
 def slab_sweep(
     program: StencilProgram,
-    slab: Array,
+    slab: Array | Mapping[str, Array],
     row_offset,
     rows_total,
     col_offset=None,
     cols_total=None,
     extras: Mapping[str, Array] | None = None,
-) -> Array:
+):
     """Runs ``program``'s whole chain over ``slab`` via :func:`slab_step`.
 
-    ``row_offset`` is the global row index of ``slab``'s first row (may be a
-    traced scalar, e.g. derived from ``axis_index`` inside a shard). The
-    slab must carry the full chain halo: output has ``2 * program.radius``
-    fewer rows than the input. With ``col_offset`` / ``cols_total`` given
-    the slab is column-decomposed too (2-D domain decomposition): columns
-    shrink and ring-pass-through by ABSOLUTE index exactly like rows.
+    ``slab`` is a bare array (single-output programs) or the
+    ``{field: array}`` evolving-state dict (multi-output programs — the
+    chain threads the whole dict, each sweep's outputs feeding the matching
+    evolving fields of the next by name). ``row_offset`` is the global row
+    index of the slabs' first row (may be a traced scalar, e.g. derived
+    from ``axis_index`` inside a shard). The slabs must carry the full
+    chain halo: output has ``2 * program.radius`` fewer rows than the
+    input. With ``col_offset`` / ``cols_total`` given the slab is
+    column-decomposed too (2-D domain decomposition): columns shrink and
+    ring-pass-through by ABSOLUTE index exactly like rows.
 
     ``extras`` maps the program's non-evolving inputs to slabs on the SAME
     initial grid as ``slab`` (values only needed within each field's
@@ -250,15 +314,15 @@ def slab_sweep(
     """
     base_r = row_offset
     base_c = col_offset
-    n0 = slab.shape[-2]
-    m0 = slab.shape[-1]
+    n0 = _any_state(slab).shape[-2]
+    m0 = _any_state(slab).shape[-1]
     inset = 0  # cumulative state shrink vs the extras' (initial) grid
     for sweep_i, prog in enumerate(program.chain):
         # Per-sweep named_scope: temporal-blocked traces show which of the
         # k fused sweeps a fusion belongs to (trace-time metadata only).
         with jax.named_scope(f"ir/{program.name}/sweep{sweep_i}"):
             r = prog.radius
-            n = slab.shape[-2]
+            n = _any_state(slab).shape[-2]
             ex = None
             if extras:
                 if col_offset is None:
@@ -273,7 +337,7 @@ def slab_sweep(
             if col_offset is None:
                 slab = slab_step(prog, slab, ids, rows_total, extras=ex)
             else:
-                m = slab.shape[-1]
+                m = _any_state(slab).shape[-1]
                 cids = base_c + r + jax.lax.broadcasted_iota(
                     jnp.int32, (1, m - 2 * r), 1
                 )
@@ -284,16 +348,18 @@ def slab_sweep(
     return slab
 
 
-def apply_program(
-    program: StencilProgram, x: Array | Mapping[str, Array]
-) -> Array:
+def apply_program(program: StencilProgram, x: Array | Mapping[str, Array]):
     """Full-shape application: interior computed, boundary ring passed
-    through from the ``passthrough`` source field (matches the hand-written
-    kernels' contract). A composed program applies its chain sweep by sweep,
-    re-applying the ring passthrough between sweeps — the oracle semantics
-    of ``repeat(p, k)``. For a multi-field chain the ``passthrough`` field
-    evolves while the shared inputs (coefficients, velocities) feed every
-    sweep unchanged."""
+    through from each evolving source field (matches the hand-written
+    kernels' contract). Single-output programs return one array;
+    multi-output programs return ``{field: array}`` — one full-shape updated
+    state per :attr:`~repro.ir.graph.StencilProgram.outputs` field, each
+    with ITS OWN boundary ring passed through (the uniform square radius-r
+    ring). A composed program applies its chain sweep by sweep, re-applying
+    the ring passthrough between sweeps — the oracle semantics of
+    ``repeat(p, k)``. For a multi-field chain the evolving fields advance
+    while the shared inputs (coefficients, velocities) feed every sweep
+    unchanged."""
     if program.steps > 1:
         return thread_chain(
             program, x, [(p, functools.partial(apply_program, p)) for p in program.chain]
@@ -306,13 +372,23 @@ def apply_program(
                 f"program {program.name!r} has inputs {program.inputs}; pass a mapping"
             )
         arrays = {program.inputs[0]: x}
+    interiors = interior_eval_multi(program, arrays)
+    if len(program.outputs) > 1:
+        return {
+            f: embed_interior(program, arrays[f], interiors[f], output=f)
+            for f in program.outputs
+        }
     base = arrays[program.passthrough]
-    return embed_interior(program, base, interior_eval(program, arrays))
+    return embed_interior(program, base, interiors[program.passthrough])
 
 
-def embed_interior(program: StencilProgram, base: Array, interior: Array) -> Array:
+def embed_interior(
+    program: StencilProgram, base: Array, interior: Array, *, output: str | None = None
+) -> Array:
     """Embeds an exact-margin interior into ``base`` with the square-ring
-    boundary passthrough — the single home of the embedding convention."""
-    cropped = ring_crop(program, interior)
+    boundary passthrough — the single home of the embedding convention.
+    ``output`` names which output field's interior this is (its margins set
+    the crop alignment; the embedded region is the shared radius-r square)."""
+    cropped = ring_crop(program, interior, output=output)
     region = interior_region(program, base.shape[-program.ndim :])
     return base.at[(Ellipsis,) + region].set(cropped.astype(base.dtype))

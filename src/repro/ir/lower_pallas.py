@@ -78,14 +78,16 @@ def _generic_kernel(
     ``refs`` lays out, per input field in ``program.inputs`` order, a
     ``(prev, cur, next)`` three-slab triple when that field's halo is
     nonzero or a lone ``cur`` when it is zero, followed by ``meta_ref`` and
-    ``out_ref``. ``field_halos[f]`` is the field's composed chain radius —
-    the evolving (passthrough) field carries the program's full chain
-    radius ``halo`` (its ring rows must hold true values for the
-    passthrough), every other field only the rows it is actually read at
-    (a radius-0 coefficient fetches ONE block, no neighbours). Fields with
-    a shallower halo are zero-padded up to the common ``halo`` grid — the
-    pad rows are provably never read into a kept output point (reads reach
-    at most the field's composed radius past the kept region).
+    one OUTPUT ref per evolving field (``program.outputs`` order — a
+    coupled system writes all its updated fields from the one fused VMEM
+    residency). ``field_halos[f]`` is the field's composed chain radius —
+    every evolving field carries the program's full chain radius ``halo``
+    (its ring rows must hold true values for the passthrough), every other
+    field only the rows it is actually read at (a radius-0 coefficient
+    fetches ONE block, no neighbours). Fields with a shallower halo are
+    zero-padded up to the common ``halo`` grid — the pad rows are provably
+    never read into a kept output point (reads reach at most the field's
+    composed radius past the kept region).
 
     Each of the chain's sweeps shrinks the state slab by its own radius
     while re-applying the global radius-r ring at ABSOLUTE row indices
@@ -102,12 +104,14 @@ def _generic_kernel(
     result is re-embedded so the output block keeps the input width (the
     caller slices the stale halo columns off).
     """
-    out_ref = refs[-1]
-    meta_ref = refs[-2]
+    out_fields = tuple(program.outputs)
+    n_out = len(out_fields)
+    out_refs = refs[-n_out:]
+    meta_ref = refs[-n_out - 1]
     i = pl.program_id(1)
-    it = iter(refs[:-2])
+    it = iter(refs[: -n_out - 1])
     slabs: dict[str, jax.Array] = {}
-    state_cur = None
+    state_curs: dict[str, jax.Array] = {}
     for f in program.inputs:
         hf = field_halos[f]
         if hf:
@@ -128,22 +132,31 @@ def _generic_kernel(
             pad = jnp.zeros((halo - hf, x.shape[-1]), jnp.float32)
             x = jnp.concatenate([pad, x, pad], axis=0)
         slabs[f] = x
-        if f == program.passthrough:
-            state_cur = cur
-    state = slabs.pop(program.passthrough)
+        if f in program.outputs:
+            state_curs[f] = cur
+    states = {f: slabs.pop(f) for f in out_fields}
+    # Single-output programs sweep the bare state array (the legacy,
+    # bit-tested path); coupled systems thread the {field: slab} dict.
+    state = states[program.passthrough] if n_out == 1 else states
     extras = slabs or None
-    base = meta_ref[0, 0] + i * block_rows - halo  # global id of state's first row
+    base = meta_ref[0, 0] + i * block_rows - halo  # global id of states' first row
     if not col_sharded or halo == 0:
-        out_ref[0] = slab_sweep(
-            program, state, base, meta_ref[0, 1], extras=extras
-        ).astype(out_ref.dtype)
+        vals = slab_sweep(program, state, base, meta_ref[0, 1], extras=extras)
+        if n_out == 1:
+            vals = {program.passthrough: vals}
+        for f, out_ref in zip(out_fields, out_refs):
+            out_ref[0] = vals[f].astype(out_ref.dtype)
         return
     vals = slab_sweep(
         program, state, base, meta_ref[0, 1], meta_ref[0, 2], meta_ref[0, 3],
         extras=extras,
-    )  # (block_rows, C - 2*halo)
-    width = state_cur.shape[-1]
-    out_ref[0] = state_cur.at[:, halo : width - halo].set(vals).astype(out_ref.dtype)
+    )  # (block_rows, C - 2*halo) per output
+    if n_out == 1:
+        vals = {program.passthrough: vals}
+    for f, out_ref in zip(out_fields, out_refs):
+        cur = state_curs[f]
+        width = cur.shape[-1]
+        out_ref[0] = cur.at[:, halo : width - halo].set(vals[f]).astype(out_ref.dtype)
 
 
 def _kernel_1d(x_ref, out_ref, *, program):
@@ -244,15 +257,33 @@ def lower_pallas(
                 (1, 4), lambda d, i: (0, 0), memory_space=pltpu.MemorySpace.SMEM
             )
         )
-        state = arrays[fields.index(program.passthrough)]
-        return pl.pallas_call(
+        out_fields = tuple(program.outputs)
+        if len(out_fields) == 1:
+            state = arrays[fields.index(program.passthrough)]
+            return pl.pallas_call(
+                kernel,
+                grid=(depth, row_tiles),
+                in_specs=in_specs,
+                out_specs=spec(lambda d, i: (d, i, 0)),
+                out_shape=jax.ShapeDtypeStruct(state.shape, state.dtype),
+                interpret=interp,
+            )(*operands, meta)
+        # Coupled systems: one fused kernel writes every evolving field's
+        # updated block — N output refs, one VMEM residency.
+        outs = pl.pallas_call(
             kernel,
             grid=(depth, row_tiles),
             in_specs=in_specs,
-            out_specs=spec(lambda d, i: (d, i, 0)),
-            out_shape=jax.ShapeDtypeStruct(state.shape, state.dtype),
+            out_specs=[spec(lambda d, i: (d, i, 0)) for _ in out_fields],
+            out_shape=[
+                jax.ShapeDtypeStruct(
+                    arrays[fields.index(f)].shape, arrays[fields.index(f)].dtype
+                )
+                for f in out_fields
+            ],
             interpret=interp,
         )(*operands, meta)
+        return dict(zip(out_fields, outs))
 
     def fn(x: Array | Mapping[str, Array], *, row_offset=0, rows_global=None,
            col_offset=0, cols_global=None) -> Array:
@@ -261,11 +292,13 @@ def lower_pallas(
         br = block_rows
         if br is None:
             # The budget models ONE resident tile; this kernel keeps one
-            # slab per input field live (plus the output), so an N-field
-            # program gets 1/N of the budget per field — otherwise the
-            # planner would pick tiles whose true VMEM residency overflows
-            # the budget N-fold.
-            per_field = vmem_tile_budget(vmem_budget) // len(fields)
+            # slab per input field live plus one output slab per evolving
+            # field, so the budget divides across all of them — otherwise
+            # the planner would pick tiles whose true VMEM residency
+            # overflows the budget N-fold. (Single-output keeps the legacy
+            # len(fields) divisor: the lone output was never charged.)
+            n_resident = len(fields) + len(program.outputs) - 1
+            per_field = vmem_tile_budget(vmem_budget) // n_resident
             br = pick_block_rows(
                 rows, cols, budget_bytes=max(per_field, 1),
                 min_rows=min(min_block, rows),

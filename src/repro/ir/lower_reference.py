@@ -67,9 +67,14 @@ def _lower_staged(program: StencilProgram):
 
     stages = [(op, make_stage(op)) for op in program.ops]
 
-    @jax.jit
-    def embed(base, interior):
-        return embed_interior(program, base, interior)
+    embeds = {
+        f: jax.jit(
+            lambda base, interior, _f=f: embed_interior(
+                program, base, interior, output=_f
+            )
+        )
+        for f in program.outputs
+    }
 
     def run(x):
         if isinstance(x, Mapping):
@@ -84,6 +89,12 @@ def _lower_staged(program: StencilProgram):
         for op, stage in stages:
             args = tuple(env[r.field] for r in op.reads)
             env[op.name] = jax.block_until_ready(stage(*args))
-        return embed(env[program.passthrough], env[program.output])
+        out = {
+            f: embeds[f](env[f], env[op_name])
+            for f, op_name in program.outputs.items()
+        }
+        if len(out) > 1:
+            return out
+        return out[program.passthrough]
 
     return run

@@ -17,6 +17,18 @@ fig10/fig13). Exchanged aux fields are zero-padded up to the state's halo
 grid so every field shares one coordinate system inside the shard; the pads
 are never read into a kept output point.
 
+Multi-OUTPUT programs (coupled systems — shallow-water's {u, v, h}) issue
+ONE MERGED halo exchange covering all evolving fields per k sweeps: fields
+needing the same band depth and dtype are stacked along a fresh leading
+axis so each ppermute carries every field's band in a single message
+(``merge_exchange=True``, the default) — same wire BYTES as per-field
+exchanges (``program_halo_exchange_bytes`` sums the per-field terms either
+way, still measured-exact) but one permute family instead of N, cutting the
+per-round message count / latency term N-fold. ``merge_exchange=False``
+keeps the sequential per-field exchanges (the comparison baseline
+``benchmarks/fig13_multifield.py`` measures). The step returns ``{field:
+array}`` with every output's updated full-shape state.
+
 Domain decomposition is 2-D (rows x cols), like the paper's 2-D AIE array:
 ``row_axis`` and/or ``col_axis`` name mesh axes (or pass ``mesh_shape=(R,
 C)`` to build a ("rows", "cols") mesh over the default devices), and
@@ -84,14 +96,17 @@ def lower_sharded(
     inner: str = "pallas",
     interpret: bool | None = None,
     vmem_budget: int | None = None,
+    merge_exchange: bool = True,
 ) -> Callable[[Array], Array]:
     """Builds a jitted ``x (D, R, C) -> x'`` matching the single-device
     program application (all ``program.steps`` sweeps of it) while
-    domain-decomposed over ``mesh``.
+    domain-decomposed over ``mesh``. Multi-output programs return
+    ``{field: array}`` — one updated full-shape state per evolving field,
+    exactly like the single-device lowerings.
 
     Args:
-      program: single-input 2-D IR program; a composed program fuses its k
-        sweeps behind one depth-``k*r`` halo exchange.
+      program: 2-D IR program; a composed program fuses its k sweeps behind
+        one depth-``k*r`` halo exchange.
       mesh: device mesh; axes named by ``depth_axis`` / ``row_axis`` /
         ``col_axis``. Mutually exclusive with ``mesh_shape``.
       depth_axis: mesh axis sharding dim 0 (planes, zero collectives), or None.
@@ -115,6 +130,11 @@ def lower_sharded(
         inner backend computes the interior; the thin edge bands always use
         the jnp evaluator.
       interpret / vmem_budget: forwarded to the Pallas lowering.
+      merge_exchange: stack same-(radius, dtype) fields into ONE halo
+        exchange per round (default) instead of one exchange per field —
+        identical wire bytes, N-fold fewer permute messages for an N-field
+        coupled system. Results are bit-identical either way (the stacked
+        bands hold exactly the per-field bands).
     """
     from repro.dist.halo import (
         exchange_halos_2d,
@@ -164,9 +184,11 @@ def lower_sharded(
     halo = program.radius  # full chain radius; exchanged once per k sweeps
     fields = program.inputs
     state_f = program.passthrough
-    aux_fields = tuple(f for f in fields if f != state_f)
-    # Per-field exchanged halo (shared rule with the byte models): the
-    # evolving state moves the full chain radius, every other field only
+    out_fields = tuple(program.outputs)
+    n_out = len(out_fields)
+    aux_fields = tuple(f for f in fields if f not in program.outputs)
+    # Per-field exchanged halo (shared rule with the byte models): every
+    # evolving field moves the full chain radius, every other field only
     # its own composed access radius — a radius-0 coefficient field is
     # exchanged NOT AT ALL (zero wire bytes for it, matching
     # dist.halo.program_halo_exchange_bytes exactly).
@@ -183,11 +205,15 @@ def lower_sharded(
         col_axis if n_col > 1 else None,
     )
 
-    def _full_input(state, aux):
+    def _as_dict(vals):
+        """Normalises an inner-backend result to {output_field: array}."""
+        return dict(vals) if isinstance(vals, Mapping) else {state_f: vals}
+
+    def _full_input(states, aux):
         """The apply_full argument: bare array or field mapping."""
-        if not aux_fields:
-            return state
-        return {state_f: state, **aux}
+        if n_out == 1 and not aux_fields:
+            return states[state_f]
+        return {**aux, **states}
 
     def _offsets(block: Array):
         """Global index of the shard block's first row/col (pre-padding)."""
@@ -196,20 +222,50 @@ def lower_sharded(
         off_c = jax.lax.axis_index(col_axis) * c_loc if n_col > 1 else 0
         return off_r, off_c, r_loc * n_row, c_loc * n_col
 
-    def _exchange_pad(a: Array, hf: int) -> Array:
-        """Exchange ``a``'s own radius-``hf`` halo, then zero-pad it out to
-        the state's ``halo`` grid so all fields stay aligned (rows always;
-        cols too when columns are sharded). The zero pad is never read into
-        a kept output point: reads reach at most ``hf`` past the kept
-        region, which the exchange covered with true values."""
-        if hf:
-            if n_col > 1:
-                a = exchange_halos_2d(
-                    a, row_axis, col_axis, n_row, n_col, hf,
-                    mesh_axis_names=axis_names,
-                )
+    def _exchange(a: Array, hf: int) -> Array:
+        if n_col > 1:
+            return exchange_halos_2d(
+                a, row_axis, col_axis, n_row, n_col, hf,
+                mesh_axis_names=axis_names,
+            )
+        return exchange_row_halos(a, row_axis, n_row, halo=hf)
+
+    def _exchange_all(env):
+        """One round of halo exchange for every field with a nonzero
+        exchanged radius -> {field: exchanged block}.
+
+        ``merge_exchange=True`` groups fields by (band depth, dtype) and
+        stacks each group along a fresh leading axis, so ONE exchange (one
+        ppermute per band/corner direction) carries every stacked field's
+        band in a single message — the merged coupled-system exchange. The
+        stacked bands are exactly the per-field bands, so unstacking
+        reproduces the sequential exchanges bit-for-bit, and the wire BYTES
+        are identical (``program_halo_exchange_bytes`` stays measured-exact
+        under either mode)."""
+        need = [f for f in fields if fhalos[f]]
+        out = {}
+        if not merge_exchange:
+            for f in need:
+                out[f] = _exchange(env[f], fhalos[f])
+            return out
+        groups: dict[tuple, list[str]] = {}
+        for f in need:
+            groups.setdefault((fhalos[f], env[f].dtype), []).append(f)
+        for (hf, _dt), grp in groups.items():
+            if len(grp) == 1:
+                out[grp[0]] = _exchange(env[grp[0]], hf)
             else:
-                a = exchange_row_halos(a, row_axis, n_row, halo=hf)
+                stacked = _exchange(jnp.stack([env[f] for f in grp]), hf)
+                for j, f in enumerate(grp):
+                    out[f] = stacked[j]
+        return out
+
+    def _pad_to_halo(a: Array, hf: int) -> Array:
+        """Zero-pads a radius-``hf``-exchanged block out to the state's
+        ``halo`` grid so all fields stay aligned (rows always; cols too when
+        columns are sharded). The zero pad is never read into a kept output
+        point: reads reach at most ``hf`` past the kept region, which the
+        exchange covered with true values."""
         pw = halo - hf
         if pw == 0:
             return a
@@ -218,72 +274,105 @@ def lower_sharded(
         pad.append((pw, pw) if n_col > 1 else (0, 0))
         return jnp.pad(a, pad)
 
-    def _inner_padded(padded, padded_aux, off_r, off_c, r_glob, c_glob, r_loc, c_loc):
-        """Whole-shard compute on the halo-padded block -> (r_loc, c_loc)."""
+    def _inner_padded(padded_states, padded_aux, off_r, off_c, r_glob, c_glob,
+                      r_loc, c_loc):
+        """Whole-shard compute on the halo-padded blocks ->
+        {output field: (r_loc, c_loc) block}."""
         if inner == "pallas":
             if n_col > 1:
-                vals = apply_full(
-                    _full_input(padded, padded_aux),
+                vals = _as_dict(apply_full(
+                    _full_input(padded_states, padded_aux),
                     row_offset=off_r - halo, rows_global=r_glob,
                     col_offset=off_c - halo, cols_global=c_glob,
-                )
-                return vals[..., halo : halo + r_loc, halo : halo + c_loc]
-            vals = apply_full(
-                _full_input(padded, padded_aux),
+                ))
+                return {
+                    f: v[..., halo : halo + r_loc, halo : halo + c_loc]
+                    for f, v in vals.items()
+                }
+            vals = _as_dict(apply_full(
+                _full_input(padded_states, padded_aux),
                 row_offset=off_r - halo, rows_global=r_glob,
-            )
-            return vals[..., halo : halo + r_loc, :]
+            ))
+            return {f: v[..., halo : halo + r_loc, :] for f, v in vals.items()}
         extras = padded_aux or None
+        state = padded_states[state_f] if n_out == 1 else padded_states
         if n_col > 1:
-            return slab_sweep(program, padded, off_r - halo, r_glob,
+            vals = slab_sweep(program, state, off_r - halo, r_glob,
                               off_c - halo, c_glob, extras=extras)
-        return slab_sweep(program, padded, off_r - halo, r_glob, extras=extras)
+        else:
+            vals = slab_sweep(program, state, off_r - halo, r_glob, extras=extras)
+        return _as_dict(vals)
 
-    def _inner_interior(block: Array, aux, off_r, off_c, r_glob, c_glob):
-        """Halo-free interior compute on the UNPADDED block: output rows
+    def _inner_interior(states, aux, off_r, off_c, r_glob, c_glob):
+        """Halo-free interior compute on the UNPADDED blocks: output rows
         [halo, r_loc-halo) (and cols likewise when columns are sharded) —
-        no data dependency on the exchange, so it can overlap it."""
+        no data dependency on the exchange, so it can overlap it. Returns
+        {output field: interior block}."""
+        block = states[state_f]
         r_loc, c_loc = block.shape[-2], block.shape[-1]
         if inner == "pallas":
             if n_col > 1:
-                vals = apply_full(
-                    _full_input(block, aux),
+                vals = _as_dict(apply_full(
+                    _full_input(states, aux),
                     row_offset=off_r, rows_global=r_glob,
                     col_offset=off_c, cols_global=c_glob,
-                )
-                return vals[..., halo : r_loc - halo, halo : c_loc - halo]
-            vals = apply_full(
-                _full_input(block, aux), row_offset=off_r, rows_global=r_glob
-            )
-            return vals[..., halo : r_loc - halo, :]
+                ))
+                return {
+                    f: v[..., halo : r_loc - halo, halo : c_loc - halo]
+                    for f, v in vals.items()
+                }
+            vals = _as_dict(apply_full(
+                _full_input(states, aux), row_offset=off_r, rows_global=r_glob
+            ))
+            return {f: v[..., halo : r_loc - halo, :] for f, v in vals.items()}
         extras = aux or None
+        state = states[state_f] if n_out == 1 else states
         if n_col > 1:
-            return slab_sweep(program, block, off_r, r_glob, off_c, c_glob,
+            vals = slab_sweep(program, state, off_r, r_glob, off_c, c_glob,
                               extras=extras)
-        return slab_sweep(program, block, off_r, r_glob, extras=extras)
+        else:
+            vals = slab_sweep(program, state, off_r, r_glob, extras=extras)
+        return _as_dict(vals)
 
-    def _edge_bands(padded, padded_aux, off_r, off_c, r_glob, c_glob, r_loc, c_loc):
-        """The four radius-``halo`` edge bands of the shard's output, each a
-        ``slab_sweep`` over a static slice of the padded block (top/bottom
-        span all owned cols; left/right cover the remaining interior rows).
-        Aux fields ride the SAME slices — they live on the same padded
-        grid, so one slicer keeps every field aligned."""
+    def _edge_bands(padded_states, padded_aux, off_r, off_c, r_glob, c_glob,
+                    r_loc, c_loc):
+        """The four radius-``halo`` edge bands of the shard's output, each
+        one ``inner``-backend sweep over a static slice of the padded blocks
+        (top/bottom span all owned cols; left/right cover the remaining
+        interior rows). Aux fields ride the SAME slices — they live on the
+        same padded grid, so one slicer keeps every field aligned. Each
+        band is a {output field: block} dict."""
         h = halo
 
         def sweep(rows_sl, cols_sl, row0, col0):
-            slab = padded[..., rows_sl, cols_sl]
+            slabs = {
+                f: a[..., rows_sl, cols_sl] for f, a in padded_states.items()
+            }
             ex = {f: a[..., rows_sl, cols_sl] for f, a in padded_aux.items()}
             if inner == "pallas":
-                # The Pallas kernel upcasts every field to float32 and casts
-                # back on store; the edge bands must compute the same way or
-                # the overlap bit-match contract breaks for non-f32 inputs.
-                slab = slab.astype(jnp.float32)
-                ex = {f: a.astype(jnp.float32) for f, a in ex.items()}
+                # Bands go through the SAME Pallas kernel as the interior:
+                # XLA may contract mul+add chains (FMA) differently per
+                # compiled graph, so a jnp-evaluated band next to a
+                # Pallas-computed interior breaks the overlap bit-match
+                # contract for product-bearing programs (the advection
+                # term u*dc/dx + v*dc/dy of advection_diffusion).
+                if n_col > 1:
+                    vals = _as_dict(apply_full(
+                        _full_input(slabs, ex),
+                        row_offset=row0, rows_global=r_glob,
+                        col_offset=col0, cols_global=c_glob,
+                    ))
+                    return {f: v[..., h:-h, h:-h] for f, v in vals.items()}
+                vals = _as_dict(apply_full(
+                    _full_input(slabs, ex), row_offset=row0, rows_global=r_glob
+                ))
+                return {f: v[..., h:-h, :] for f, v in vals.items()}
             ex = ex or None
+            state = slabs[state_f] if n_out == 1 else slabs
             if n_col > 1:
-                return slab_sweep(program, slab, row0, r_glob, col0, c_glob,
-                                  extras=ex)
-            return slab_sweep(program, slab, row0, r_glob, extras=ex)
+                return _as_dict(slab_sweep(program, state, row0, r_glob, col0,
+                                           c_glob, extras=ex))
+            return _as_dict(slab_sweep(program, state, row0, r_glob, extras=ex))
 
         full = slice(None)
         top = sweep(slice(None, 3 * h), full, off_r - h, off_c - h)
@@ -296,14 +385,22 @@ def lower_sharded(
         )
         return top, bottom, left, right
 
-    def local_step(*blocks: Array) -> Array:
+    def _ret(vals):
+        """shard_map return: bare array (single-output) or tuple in
+        ``out_fields`` order (multi-output)."""
+        if n_out == 1:
+            return vals[state_f]
+        return tuple(vals[f] for f in out_fields)
+
+    def local_step(*blocks: Array):
         env = dict(zip(fields, blocks))
-        block = env[state_f]
+        states = {f: env[f] for f in out_fields}
         aux = {f: env[f] for f in aux_fields}
         if (n_row == 1 and n_col == 1) or halo == 0:
             # Full grid present locally (or no spatial coupling at all): the
             # single-device lowering's boundary handling is already correct.
-            return apply_full(_full_input(block, aux))
+            return _ret(_as_dict(apply_full(_full_input(states, aux))))
+        block = states[state_f]
         r_loc, c_loc = block.shape[-2], block.shape[-1]
         off_r, off_c, r_glob, c_glob = _offsets(block)
 
@@ -313,41 +410,46 @@ def lower_sharded(
             # Interior first in program order: it reads only the unpadded
             # blocks, so the exchange's ppermutes have no consumers before it
             # and the latency-hiding scheduler is free to run them behind it.
-            interior = _inner_interior(block, aux, off_r, off_c, r_glob, c_glob)
+            interior = _inner_interior(states, aux, off_r, off_c, r_glob, c_glob)
 
-        if n_col > 1:
-            padded = exchange_halos_2d(
-                block, row_axis, col_axis, n_row, n_col, halo,
-                mesh_axis_names=axis_names,
-            )
-        else:
-            padded = exchange_row_halos(block, row_axis, n_row, halo=halo)
-        padded_aux = {f: _exchange_pad(aux[f], fhalos[f]) for f in aux_fields}
+        # ONE merged exchange round covers every field that moves (all
+        # evolving fields at the chain radius, aux fields at their own).
+        exchanged = _exchange_all(env)
+        padded_states = {f: exchanged[f] for f in out_fields}
+        padded_aux = {
+            f: _pad_to_halo(exchanged.get(f, aux[f]), fhalos[f])
+            for f in aux_fields
+        }
 
         if not can_overlap:
             vals = _inner_padded(
-                padded, padded_aux, off_r, off_c, r_glob, c_glob, r_loc, c_loc
+                padded_states, padded_aux, off_r, off_c, r_glob, c_glob,
+                r_loc, c_loc,
             )
-            return vals.astype(block.dtype)
+            return _ret({f: vals[f].astype(states[f].dtype) for f in out_fields})
 
         top, bottom, left, right = _edge_bands(
-            padded, padded_aux, off_r, off_c, r_glob, c_glob, r_loc, c_loc
+            padded_states, padded_aux, off_r, off_c, r_glob, c_glob, r_loc, c_loc
         )
-        if n_col > 1:
-            interior = jnp.concatenate([left, interior, right], axis=-1)
-        vals = jnp.concatenate([top, interior, bottom], axis=-2)
-        return vals.astype(block.dtype)
+        out = {}
+        for f in out_fields:
+            mid = interior[f]
+            if n_col > 1:
+                mid = jnp.concatenate([left[f], mid, right[f]], axis=-1)
+            vals = jnp.concatenate([top[f], mid, bottom[f]], axis=-2)
+            out[f] = vals.astype(states[f].dtype)
+        return _ret(out)
 
     mapped = jax.shard_map(
         local_step,
         mesh=mesh,
         in_specs=(spec,) * len(fields),
-        out_specs=spec,
+        out_specs=spec if n_out == 1 else (spec,) * n_out,
         check_vma=False,
     )
 
     @jax.jit
-    def _run(arrays) -> Array:
+    def _run(arrays):
         return mapped(*arrays)
 
     def _record_halo_model(arrays) -> None:
@@ -362,7 +464,7 @@ def lower_sharded(
             return
         events.record(
             "halo.exchange", program=program.name, halo=halo,
-            fields=[f for f in fields if fhalos[f]],
+            fields=[f for f in fields if fhalos[f]], merged=merge_exchange,
         )
         if reg is None:
             return
@@ -405,6 +507,9 @@ def lower_sharded(
                     )
         if halo > 0 and (n_row > 1 or n_col > 1):
             _record_halo_model(arrays)
-        return _run(arrays)
+        out = _run(arrays)
+        if n_out == 1:
+            return out
+        return dict(zip(out_fields, out))
 
     return metrics.instrument_call(step, f"ir.lower_sharded.{program.name}")

@@ -70,7 +70,8 @@ def affine(name: str, field: str, taps: Mapping[Offset, float]) -> StencilOp:
         return acc
 
     reads = tuple(Read(field, o) for o in offsets)
-    return StencilOp(name, reads, compute, OpCost(macs=len(offsets)))
+    tag = "affine:" + ",".join(f"{o}={w!r}" for o, w in zip(offsets, weights))
+    return StencilOp(name, reads, compute, OpCost(macs=len(offsets)), tag=tag)
 
 
 def flux(
@@ -99,7 +100,8 @@ def flux(
         return jnp.where(d * g <= 0, d, jnp.zeros_like(d))
 
     cost = OpCost(other_ops=1 + (3 if limiter is not None else 0))
-    return StencilOp(name, tuple(reads), compute, cost)
+    tag = f"flux:lo={lo},hi={hi},limited={limiter is not None}"
+    return StencilOp(name, tuple(reads), compute, cost, tag=tag)
 
 
 def product(
@@ -126,7 +128,7 @@ def product(
     def compute(va, vb):
         return va * vb
 
-    return StencilOp(name, reads, compute, OpCost(macs=1))
+    return StencilOp(name, reads, compute, OpCost(macs=1), tag="product")
 
 
 def weighted_residual(
@@ -157,7 +159,10 @@ def weighted_residual(
     reads = (Read(base, zero), Read(weight, zero)) + tuple(
         Read(f, zero) for f, _ in terms
     )
-    return StencilOp(name, reads, compute, OpCost(macs=1, other_ops=len(terms)))
+    tag = "weighted_residual:signs=" + ",".join(str(s) for _, s in terms)
+    return StencilOp(
+        name, reads, compute, OpCost(macs=1, other_ops=len(terms)), tag=tag
+    )
 
 
 def scaled_residual(
@@ -185,4 +190,10 @@ def scaled_residual(
 
     zero = (0,) * ndim
     reads = (Read(base, zero),) + tuple(Read(f, zero) for f, _ in terms)
-    return StencilOp(name, reads, compute, OpCost(macs=1, other_ops=len(terms)))
+    tag = (
+        f"scaled_residual:scale={float(scale)!r},signs="
+        + ",".join(str(s) for _, s in terms)
+    )
+    return StencilOp(
+        name, reads, compute, OpCost(macs=1, other_ops=len(terms)), tag=tag
+    )

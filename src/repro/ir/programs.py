@@ -13,6 +13,12 @@ velocity + scalar fields) and ``hdiff_coupled_program`` (hdiff with a
 diffusion-coefficient *field*). Per-field halos, reads and wire bytes are
 derived per field and summed; the cross-backend conformance matrix
 (``tests/conformance.py``) covers them on every backend/mesh/k cell.
+
+``MULTIOUTPUT_PROGRAMS`` holds the coupled PDE systems (whole-model
+timesteps): ``shallow_water_program`` evolves {u, v, h} together through
+the gravity-wave coupling, ``advection_diffusion_program`` evolves {c, u}
+over a shared velocity field — several ``outputs`` per sweep, one merged
+halo exchange, same conformance coverage.
 """
 
 from __future__ import annotations
@@ -136,6 +142,90 @@ def smagorinsky_coeff(noise):
 MULTIFIELD_PROGRAMS: dict[str, Callable[[], StencilProgram]] = {
     "vadvc": vadvc_program,
     "hdiff_coupled": hdiff_coupled_program,
+}
+
+
+def shallow_water_program(
+    g_dt: float = 0.2, h_dt: float = 0.2
+) -> StencilProgram:
+    """Linearised shallow-water gravity-wave step: the canonical coupled
+    system a weather timestep runs — THREE evolving fields in one sweep.
+
+    One explicit (Jacobi-style, simultaneous) update on an unstaggered grid:
+
+      u' = u - g_dt * dh/dx          momentum, pressure-gradient force
+      v' = v - g_dt * dh/dy
+      h' = h - h_dt * (du/dx + dv/dy)   continuity, divergence of OLD (u, v)
+
+    with centered differences (radius 1 per sweep, all three outputs).
+    ``outputs={"u": ..., "v": ..., "h": ...}`` makes it one multi-output IR
+    program: one fused kernel computes all three updates from one VMEM
+    residency, the sharded lowering moves all three halos in ONE merged
+    exchange per k sweeps, and ``repeat(p, k)`` couples the sweeps so each
+    output's radius composes to ``k`` (u' at sweep 2 reads sweep 1's h,
+    which read sweep 1's... — the gravity-wave coupling the per-output
+    footprint analysis has to get right).
+
+    Defaults keep the scheme comfortably inside the CFL bound on unit-noise
+    fields, so k<=3 conformance stays in a tame numeric range.
+    """
+    ops = [
+        affine("dhdx", "h", {(1, 0): 0.5, (-1, 0): -0.5}),
+        affine("dhdy", "h", {(0, 1): 0.5, (0, -1): -0.5}),
+        scaled_residual("u_new", "u", [("dhdx", 1)], g_dt),
+        scaled_residual("v_new", "v", [("dhdy", 1)], g_dt),
+        affine("dudx", "u", {(1, 0): 0.5, (-1, 0): -0.5}),
+        affine("dvdy", "v", {(0, 1): 0.5, (0, -1): -0.5}),
+        scaled_residual("h_new", "h", [("dudx", 1), ("dvdy", 1)], h_dt),
+    ]
+    return StencilProgram(
+        "shallow_water",
+        ["u", "v", "h"],
+        ops,
+        outputs={"u": "u_new", "v": "v_new", "h": "h_new"},
+    )
+
+
+def advection_diffusion_program(
+    nu: float = 0.05, dt: float = 0.1, kappa: float = 0.05
+) -> StencilProgram:
+    """Passive scalar advected by a self-diffusing flow: TWO evolving fields
+    plus one SHARED (non-evolving) field in a single sweep.
+
+    ``c`` (the scalar) and ``u`` (the row-velocity) both evolve; ``v`` (the
+    column-velocity) is a shared input read at offset zero:
+
+      u' = u - nu * lap(u)                     the carrier diffuses
+      c' = (c - dt * (u * dc/dx + v * dc/dy)) - kappa * lap(c)
+
+    Radii per sweep: both outputs 1; shared ``v`` radius 0 at k=1, growing
+    to ``k - 1`` under ``repeat`` (read through the downstream sweeps) —
+    the multi-output analogue of ``hdiff_coupled``'s radius-0 coefficient,
+    so the merged sharded exchange gets a radius-0 shared field AND a
+    two-field evolving group in one program.
+    """
+    ops = [
+        affine("lap_u", "u", _LAP_TAPS),
+        scaled_residual("u_new", "u", [("lap_u", 1)], nu),
+        affine("gcr", "c", {(1, 0): 0.5, (-1, 0): -0.5}),
+        affine("gcc", "c", {(0, 1): 0.5, (0, -1): -0.5}),
+        product("advr", "u", "gcr"),
+        product("advc", "v", "gcc"),
+        scaled_residual("cadv", "c", [("advr", 1), ("advc", 1)], dt),
+        affine("lap_c", "c", _LAP_TAPS),
+        scaled_residual("c_new", "cadv", [("lap_c", 1)], kappa),
+    ]
+    return StencilProgram(
+        "advection_diffusion",
+        ["c", "u", "v"],
+        ops,
+        outputs={"c": "c_new", "u": "u_new"},
+    )
+
+
+MULTIOUTPUT_PROGRAMS: dict[str, Callable[[], StencilProgram]] = {
+    "shallow_water": shallow_water_program,
+    "advection_diffusion": advection_diffusion_program,
 }
 
 

@@ -13,6 +13,8 @@ program; the oracle itself is anchored against the hand-written kernels by
 Cells:
   program  in {hdiff, hdiff_simple} + the five elementary 2-D stencils
            + the two multi-field workloads {vadvc, hdiff_coupled}
+           + the two multi-OUTPUT coupled systems {shallow_water,
+             advection_diffusion} (results compared per output field)
   backend  in {reference, staged, pallas, sharded-reference, sharded-pallas}
   k        in {1, 2, 3}
   mesh     in {1x1, 8x1, 2x4, 1x8}   (rows x cols shards; non-sharded
@@ -33,6 +35,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.ir import (
+    advection_diffusion_program,
     hdiff_coupled_program,
     hdiff_program,
     jacobi2d_3pt_program,
@@ -44,6 +47,7 @@ from repro.ir import (
     lower_sharded,
     repeat,
     seidel2d_program,
+    shallow_water_program,
     smagorinsky_coeff,
     vadvc_program,
 )
@@ -65,6 +69,12 @@ PROGRAMS = {
     # radius 0 at k=1 (no exchange) and grows to 2(k-1) under repeat.
     "vadvc": vadvc_program,
     "hdiff_coupled": lambda: hdiff_coupled_program(),
+    # Multi-OUTPUT workloads (coupled systems): backends return a
+    # {field: array} dict, compared per output field. shallow_water evolves
+    # {u, v, h} through the gravity-wave coupling; advection_diffusion
+    # evolves {c, u} over a SHARED radius-0 velocity v (growing to k-1).
+    "shallow_water": shallow_water_program,
+    "advection_diffusion": advection_diffusion_program,
 }
 
 BACKENDS = ("reference", "staged", "pallas", "sharded-reference", "sharded-pallas")
@@ -137,29 +147,65 @@ def build(program, backend: str, mesh_shape: tuple[int, int], *, overlap=False):
     raise ValueError(f"unknown conformance backend {backend!r}")
 
 
+def to_host(result):
+    """A lowered result as numpy: a bare ndarray (single-output) or a
+    ``{field: ndarray}`` dict (multi-output) — the one conversion every
+    harness consumer shares."""
+    if isinstance(result, dict):
+        return {f: np.asarray(a) for f, a in result.items()}
+    return np.asarray(result)
+
+
 @functools.lru_cache(maxsize=None)
-def oracle(name: str, k: int) -> np.ndarray:
+def oracle(name: str, k: int):
     """lower_reference of the k-step composed program on the shared input."""
     prog = repeat(PROGRAMS[name](), k)
-    return np.asarray(lower_reference(prog)(make_fields(name)))
+    return to_host(lower_reference(prog)(make_fields(name)))
 
 
 def run_case(name: str, backend: str, k: int, mesh_shape, *, overlap=False):
-    """(got, want) for one cell; caller asserts (pytest or subprocess)."""
+    """(got, want) for one cell; caller asserts (pytest or subprocess).
+    Both sides are bare ndarrays for single-output programs and
+    ``{field: ndarray}`` dicts for multi-output ones."""
     prog = repeat(PROGRAMS[name](), k)
-    got = np.asarray(
+    got = to_host(
         build(prog, backend, mesh_shape, overlap=overlap)(make_fields(name))
     )
     return got, oracle(name, k)
 
 
+def assert_close(got, want, err_msg: str = ""):
+    """Tolerance compare, per output field for multi-output results."""
+    if isinstance(want, dict):
+        assert set(got) == set(want), (
+            f"{err_msg}: output fields {sorted(got)} != {sorted(want)}"
+        )
+        for f in want:
+            np.testing.assert_allclose(
+                got[f], want[f], rtol=TOL, atol=TOL, err_msg=f"{err_msg}[{f}]"
+            )
+        return
+    np.testing.assert_allclose(got, want, rtol=TOL, atol=TOL, err_msg=err_msg)
+
+
+def assert_equal(a, b, err_msg: str = ""):
+    """Bitwise compare (the overlap contract), dict-aware like
+    :func:`assert_close`."""
+    if isinstance(a, dict):
+        assert set(a) == set(b), (
+            f"{err_msg}: output fields {sorted(a)} != {sorted(b)}"
+        )
+        for f in a:
+            np.testing.assert_array_equal(a[f], b[f], err_msg=f"{err_msg}[{f}]")
+        return
+    np.testing.assert_array_equal(a, b, err_msg=err_msg)
+
+
 def assert_case(name: str, backend: str, k: int, mesh_shape, *, overlap=False):
     got, want = run_case(name, backend, k, mesh_shape, overlap=overlap)
-    np.testing.assert_allclose(
+    assert_close(
         got,
         want,
-        rtol=TOL,
-        atol=TOL,
         err_msg=f"{name}/{backend}/k={k}/mesh={mesh_id(mesh_shape)}"
         + ("/overlap" if overlap else ""),
     )

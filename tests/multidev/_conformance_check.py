@@ -35,6 +35,7 @@ from conformance import (  # noqa: E402
     KS,
     SHARDED_BACKENDS,
     assert_case,
+    assert_equal,
     iter_cases,
     run_case,
 )
@@ -66,7 +67,7 @@ for name, backend, k, mesh_shape in iter_cases(((R, C),)):
     got = assert_case(name, backend, k, mesh_shape)
     if k in OVERLAP_KS[backend]:
         got_overlap, _ = run_case(name, backend, k, mesh_shape, overlap=True)
-        np.testing.assert_array_equal(
+        assert_equal(
             got_overlap, got,
             err_msg=f"overlap!=no-overlap: {name}/{backend}/k={k}/{args.mesh}",
         )

@@ -15,7 +15,10 @@ this check keeps:
     AND on the 2-D rows x cols mesh (k in {1, 2, 3}, both inners, with
     overlap=True bit-matching overlap=False),
   * the multi-field paper-grid acceptance: vadvc and hdiff_coupled on the
-    2 x 4 mesh with per-field halo exchange, k in {1, 2, 3}.
+    2 x 4 mesh with per-field halo exchange, k in {1, 2, 3},
+  * the multi-OUTPUT paper-grid acceptance: shallow_water on the 2 x 4
+    mesh, k in {1, 2, 3}, with the merged halo exchange measured-exact
+    against the summed wire model (ratio 1.000, 8 permutes).
 
 Exits nonzero (assertion) on any mismatch.
 """
@@ -245,5 +248,81 @@ for name, (mprog, arrs) in mf_cases.items():
             err_msg=f"paper 2x4 {name} overlap k={k}",
         )
         print(f"paper-grid 2x4 {name} k={k} ok (overlap bit-match)")
+
+# Multi-OUTPUT acceptance on the paper grid (the ISSUE 8 run): the coupled
+# shallow-water system {u, v, h} on the 2 x 4 rows x cols mesh, k in
+# {1, 2, 3} (Pallas inner at k=2 to bound compile time), overlap=True
+# bit-matching overlap=False per output field — and the wire model held
+# measured-exact: ONE merged exchange per k fused sweeps whose per-chip
+# collective-permute bytes equal program_halo_exchange_bytes_per_shard at
+# ratio 1.000, in exactly 8 permutes (2 row bands + 2 col bands + 4
+# corners; a sequential per-field exchange would issue 24).
+from repro.dist.halo import (  # noqa: E402
+    measured_collective_permute_bytes,
+    program_halo_exchange_bytes_per_shard,
+)
+from repro.ir import shallow_water_program  # noqa: E402
+
+sw = shallow_water_program()
+sw_arrs = {
+    "u": paper,
+    "v": jnp.asarray(rng.standard_normal(paper.shape).astype(np.float32)),
+    "h": jnp.asarray(rng.standard_normal(paper.shape).astype(np.float32)),
+}
+for k in (1, 2, 3):
+    pk = repeat(sw, k)
+    assert pk.output_radii() == {"u": k, "v": k, "h": k}, pk.output_radii()
+    ref_k = lower_reference(pk)(sw_arrs)
+    ref_k = {f: np.asarray(a) for f, a in ref_k.items()}
+    inners = ("reference", "pallas") if k == 2 else ("reference",)
+    for inner in inners:
+        fn = lower_sharded(pk, mesh_shape=(2, 4), inner=inner)
+        got = fn(sw_arrs)
+        for f in ref_k:
+            np.testing.assert_allclose(
+                np.asarray(got[f]), ref_k[f], rtol=1e-6, atol=1e-6,
+                err_msg=f"paper 2x4 shallow_water k={k} {inner} [{f}]",
+            )
+    base = lower_sharded(pk, mesh_shape=(2, 4), inner="reference")
+    fo = lower_sharded(pk, mesh_shape=(2, 4), inner="reference", overlap=True)
+    got_base, got_over = base(sw_arrs), fo(sw_arrs)
+    for f in ref_k:
+        np.testing.assert_array_equal(
+            np.asarray(got_over[f]), np.asarray(got_base[f]),
+            err_msg=f"paper 2x4 shallow_water overlap k={k} [{f}]",
+        )
+    # Wire acceptance: the merged exchange is measured-exact vs the
+    # summed per-output model, in 8 permutes total.
+    measured, n_permutes = measured_collective_permute_bytes(base, sw_arrs)
+    model = program_halo_exchange_bytes_per_shard(
+        pk, 64, 128, 64, row_sharded=True, col_sharded=True
+    )
+    if k == 1:
+        # The sequential per-field baseline (merge_exchange=False) moves the
+        # SAME bytes in 3x the permutes and BIT-matches the merged path.
+        seq = lower_sharded(pk, mesh_shape=(2, 4), inner="reference",
+                            merge_exchange=False)
+        got_seq = seq(sw_arrs)
+        for f in ref_k:
+            np.testing.assert_array_equal(
+                np.asarray(got_seq[f]), np.asarray(got_base[f]),
+                err_msg=f"merged != sequential exchange [{f}]",
+            )
+        seq_bytes, seq_permutes = measured_collective_permute_bytes(seq, sw_arrs)
+        assert seq_bytes == measured, (seq_bytes, measured)
+        assert seq_permutes == 24, seq_permutes
+        print("merged-vs-sequential exchange: bit-match, same bytes, 8 vs 24 permutes")
+    assert measured == model, (
+        f"shallow_water k={k} merged wire bytes: measured {measured} != "
+        f"model {model} (ratio {measured / model:.3f})"
+    )
+    assert n_permutes == 8, (
+        f"shallow_water k={k}: expected ONE merged exchange (8 permutes), "
+        f"got {n_permutes}"
+    )
+    print(
+        f"paper-grid 2x4 shallow_water k={k} ok (overlap bit-match; merged "
+        f"exchange {measured:.0f} B/chip == model, ratio 1.000, 8 permutes)"
+    )
 
 print("ALL_OK")

@@ -29,6 +29,7 @@ from conformance import (
     MESHES,
     PROGRAMS,
     assert_case,
+    assert_close,
     iter_cases,
     make_fields,
     mesh_id,
@@ -93,12 +94,74 @@ def _vadvc_ref(arrs):
     return s.at[..., 1:-1, 1:-1].set(interior)
 
 
+def _shallow_water_ref(arrs):
+    """Direct jnp linearized shallow-water sweep (no IR involved): centered
+    gravity-wave coupling ``u -= g*dt*dh/dx, v -= g*dt*dh/dy, h -= h*dt*
+    (du/dx + dv/dy)``, radius-1 ring passthrough on every evolving field."""
+    u, v, h = arrs["u"], arrs["v"], arrs["h"]
+    g_dt = h_dt = 0.2
+
+    def ddx(a):
+        return 0.5 * a[..., 2:, 1:-1] + (-0.5) * a[..., :-2, 1:-1]
+
+    def ddy(a):
+        return 0.5 * a[..., 1:-1, 2:] + (-0.5) * a[..., 1:-1, :-2]
+
+    u_new = u[..., 1:-1, 1:-1] - g_dt * ddx(h)
+    v_new = v[..., 1:-1, 1:-1] - g_dt * ddy(h)
+    h_new = h[..., 1:-1, 1:-1] - h_dt * (ddx(u) + ddy(v))
+    return {
+        "u": u.at[..., 1:-1, 1:-1].set(u_new),
+        "v": v.at[..., 1:-1, 1:-1].set(v_new),
+        "h": h.at[..., 1:-1, 1:-1].set(h_new),
+    }
+
+
+def _advection_diffusion_ref(arrs):
+    """Direct jnp advection-diffusion sweep (no IR involved): the tracer c
+    is advected by (u, v) and diffused, u itself diffuses; v is a frozen
+    velocity component. Radius-1 ring passthrough on the evolving {c, u}."""
+    c, u, v = arrs["c"], arrs["u"], arrs["v"]
+    nu, dt, kappa = 0.05, 0.1, 0.05
+
+    def lap(a):
+        return (
+            4.0 * a[..., 1:-1, 1:-1]
+            - a[..., 2:, 1:-1]
+            - a[..., :-2, 1:-1]
+            - a[..., 1:-1, 2:]
+            - a[..., 1:-1, :-2]
+        )
+
+    def ddx(a):
+        return 0.5 * a[..., 2:, 1:-1] + (-0.5) * a[..., :-2, 1:-1]
+
+    def ddy(a):
+        return 0.5 * a[..., 1:-1, 2:] + (-0.5) * a[..., 1:-1, :-2]
+
+    u_new = u[..., 1:-1, 1:-1] - nu * lap(u)
+    cadv = c[..., 1:-1, 1:-1] - dt * (
+        u[..., 1:-1, 1:-1] * ddx(c) + v[..., 1:-1, 1:-1] * ddy(c)
+    )
+    c_new = cadv - kappa * lap(c)
+    return {
+        "c": c.at[..., 1:-1, 1:-1].set(c_new),
+        "u": u.at[..., 1:-1, 1:-1].set(u_new),
+    }
+
+
 HANDWRITTEN = dict(ELEMENTARY_FNS)
 HANDWRITTEN.update(
     {"hdiff": lambda x: hdiff(x, 0.025), "hdiff_simple": lambda x: hdiff_simple(x, 0.025)}
 )
 # Multi-field anchors: fn(mapping) -> next state field.
 HANDWRITTEN_MULTI = {"hdiff_coupled": _hdiff_coupled_ref, "vadvc": _vadvc_ref}
+# Multi-OUTPUT anchors: fn(mapping) -> {field: next state} for every
+# evolving field of the coupled system.
+HANDWRITTEN_MULTIOUT = {
+    "shallow_water": _shallow_water_ref,
+    "advection_diffusion": _advection_diffusion_ref,
+}
 
 
 @pytest.mark.parametrize("name", sorted(PROGRAMS))
@@ -110,6 +173,13 @@ def test_oracle_matches_handwritten(name):
             want = x
             for _ in range(k):
                 want = HANDWRITTEN[name](want)
+        elif name in HANDWRITTEN_MULTIOUT:
+            arrs = dict(x)
+            for _ in range(k):
+                arrs.update(HANDWRITTEN_MULTIOUT[name](arrs))
+            want = {f: np.asarray(arrs[f]) for f in prog.outputs}
+            assert_close(oracle(name, k), want, err_msg=f"{name} k={k}")
+            continue
         else:
             arrs = dict(x)
             for _ in range(k):

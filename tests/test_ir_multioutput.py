@@ -1,0 +1,245 @@
+"""Multi-output StencilPrograms: unit tests for the coupled-system schema.
+
+Covers what the conformance matrix (parity) and the property file
+(analysis invariants) do not:
+
+  * ``fingerprint()`` / ``__eq__`` / ``__hash__`` — structural identity is
+    content-addressed (coefficients, offsets, outputs all included; the
+    display name excluded), and programs are usable as dict/set keys;
+  * the op-name / input-name collision diagnostic names BOTH colliding
+    sides (regression: it used to report a generic duplicate);
+  * multi-output graph analysis (per-output radii, exchange radii, §3.1
+    fused-byte accounting counting inputs + outputs);
+  * compose binding rules for multi-output programs (name-matched, with
+    mismatched evolving sets rejected);
+  * single-device lowering parity smoke for both shipped coupled systems.
+
+The sharded merged-exchange behaviour (one exchange per k sweeps,
+measured == model, merge_exchange=False baseline) lives in the multidev
+subprocess checks (tests/multidev/_ir_check.py) — it needs 8 devices.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.ir import (
+    StencilProgram,
+    advection_diffusion_program,
+    affine,
+    interior_eval_multi,
+    lower_pallas,
+    lower_reference,
+    lower_sharded,
+    repeat,
+    scaled_residual,
+    shallow_water_program,
+)
+
+
+def _fields(prog, shape=(2, 12, 12), seed=7):
+    rng = np.random.default_rng(seed)
+    return {f: jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+            for f in prog.inputs}
+
+
+# ---------------------------------------------------------------------------
+# fingerprint / __eq__ / __hash__ (satellite: structural identity)
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_is_deterministic_and_name_blind():
+    a, b = shallow_water_program(), shallow_water_program()
+    assert a.fingerprint() == b.fingerprint()
+    assert a == b and hash(a) == hash(b)
+    # The display name is NOT part of the structure.
+    renamed = StencilProgram(
+        "not_shallow_water", a.inputs, a.ops, ndim=a.ndim,
+        passthrough=a.passthrough, outputs=dict(a.outputs),
+    )
+    assert renamed.fingerprint() == a.fingerprint()
+    assert renamed == a
+
+
+def test_fingerprint_sees_coefficients_offsets_and_outputs():
+    base = shallow_water_program()
+    # A closure-baked scalar coefficient changes the fingerprint.
+    assert shallow_water_program(g_dt=0.3) != base
+    assert shallow_water_program(g_dt=0.3).fingerprint() != base.fingerprint()
+    # An offset change (same op names, same costs) changes the fingerprint.
+    p1 = StencilProgram("p", ["x"], [affine("o", "x", {(1, 0): 1.0})])
+    p2 = StencilProgram("p", ["x"], [affine("o", "x", {(0, 1): 1.0})])
+    assert p1 != p2 and p1.fingerprint() != p2.fingerprint()
+    # Same ops, different outputs declaration -> different program.
+    ops = [
+        affine("a_new", "a", {(0, 0): 1.0, (1, 0): -1.0}),
+        affine("b_new", "b", {(0, 0): 1.0, (0, 1): -1.0}),
+    ]
+    both = StencilProgram("p", ["a", "b"], ops,
+                          outputs={"a": "a_new", "b": "b_new"})
+    only_a = StencilProgram("p", ["a", "b"], ops, outputs={"a": "a_new"})
+    assert both != only_a and both.fingerprint() != only_a.fingerprint()
+
+
+def test_programs_are_hashable_keys():
+    cache = {shallow_water_program(): "sw", advection_diffusion_program(): "ad"}
+    assert cache[shallow_water_program()] == "sw"
+    assert cache[advection_diffusion_program()] == "ad"
+    assert len({shallow_water_program(), shallow_water_program()}) == 1
+    # repeat() changes the chain, hence the identity.
+    assert repeat(shallow_water_program(), 2) != shallow_water_program()
+
+
+# ---------------------------------------------------------------------------
+# construction diagnostics (satellite: op/input collision names both)
+# ---------------------------------------------------------------------------
+
+
+def test_op_input_collision_names_both_sides():
+    with pytest.raises(ValueError) as e:
+        StencilProgram("p", ["u", "h"], [affine("h", "u", {(0, 0): 1.0})])
+    msg = str(e.value)
+    assert "op 'h' collides with source input 'h'" in msg
+    assert "rename the op" in msg
+    # Op-op duplicates keep the distinct classic diagnostic.
+    with pytest.raises(ValueError, match="duplicate field name 'o'"):
+        StencilProgram("p", ["u"], [
+            affine("o", "u", {(0, 0): 1.0}),
+            affine("o", "u", {(1, 0): 1.0}),
+        ])
+
+
+def test_outputs_validation_errors():
+    ops = [affine("u_new", "u", {(0, 0): 1.0})]
+    with pytest.raises(ValueError, match="are not program inputs"):
+        StencilProgram("p", ["u"], ops, outputs={"w": "u_new"})
+    with pytest.raises(ValueError, match="names no op"):
+        StencilProgram("p", ["u"], ops, outputs={"u": "nope"})
+    with pytest.raises(ValueError, match="must not be empty"):
+        StencilProgram("p", ["u"], ops, outputs={})
+    ops2 = ops + [affine("v_new", "v", {(0, 0): 1.0})]
+    with pytest.raises(ValueError, match="map two evolving fields to one"):
+        StencilProgram("p", ["u", "v"], ops2,
+                       outputs={"u": "u_new", "v": "u_new"})
+    with pytest.raises(ValueError, match="must be one of the evolving"):
+        StencilProgram("p", ["u", "v"], ops2, passthrough="v",
+                       outputs={"u": "u_new"})
+
+
+# ---------------------------------------------------------------------------
+# graph analysis
+# ---------------------------------------------------------------------------
+
+
+def test_shallow_water_analysis():
+    sw = shallow_water_program()
+    assert tuple(sw.outputs) == ("u", "v", "h")
+    assert sw.output_radii() == {"u": 1, "v": 1, "h": 1}
+    assert sw.exchange_radii() == {"u": 1, "v": 1, "h": 1}
+    assert sw.radius == 1
+    pk = repeat(sw, 3)
+    assert pk.output_radii() == {"u": 3, "v": 3, "h": 3}
+    assert pk.exchange_radii() == {"u": 3, "v": 3, "h": 3}
+    # Fused bytes count every input once and every output once.
+    assert sw.fused_bytes(100) == (3 + 3) * 100 * 4
+
+
+def test_advection_diffusion_analysis():
+    ad = advection_diffusion_program()
+    assert tuple(ad.outputs) == ("c", "u")
+    assert ad.output_radii() == {"c": 1, "u": 1}
+    # v is read at offset zero only: radius 0, NO exchange at k=1 ...
+    assert ad.field_radius("v") == 0
+    assert ad.exchange_radii() == {"c": 1, "u": 1, "v": 0}
+    # ... and a (k-1)-deep exchange under temporal blocking (the downstream
+    # sweeps read v inside regions the upstream sweeps shrank).
+    p3 = repeat(ad, 3)
+    assert p3.exchange_radii() == {"c": 3, "u": 3, "v": 2}
+    assert ad.fused_bytes(100) == (3 + 2) * 100 * 4
+
+
+def test_interior_eval_multi_returns_every_output():
+    sw = shallow_water_program()
+    arrs = _fields(sw)
+    interiors = interior_eval_multi(sw, arrs)
+    assert set(interiors) == {"u", "v", "h"}
+    # Each output is evaluated on its OWN margins (u_new insets rows only,
+    # v_new cols only, h_new both) — the per-output footprint accounting.
+    for f, v in interiors.items():
+        lows, highs = sw.output_margins(f)
+        assert v.shape == (
+            2, 12 - lows[0] - highs[0], 12 - lows[1] - highs[1]
+        ), f
+
+
+# ---------------------------------------------------------------------------
+# compose binding
+# ---------------------------------------------------------------------------
+
+
+def test_compose_rejects_mismatched_evolving_sets():
+    sw = shallow_water_program()
+    ad = advection_diffusion_program()
+    # Downstream evolves {u} only: no name-matched binding for {u, v, h}.
+    down = StencilProgram("down", ["u"], [affine("u_new", "u", {(0, 0): 1.0})])
+    with pytest.raises(ValueError, match="bind outputs by FIELD NAME"):
+        sw.compose(down)
+    with pytest.raises(ValueError):
+        sw.compose(ad)
+
+
+def test_compose_rejects_evolved_field_read_as_shared():
+    """A downstream sweep that reads one of our evolving fields as a
+    frozen shared input would silently see the UPDATED state."""
+    ad = advection_diffusion_program()  # evolves {c, u}, shares v
+    downstream = StencilProgram(
+        "uses_u_frozen", ["c", "u"],
+        [affine("c_new", "c", {(0, 0): 1.0}),
+         scaled_residual("c2", "c_new", [("u", 1)], 0.5)],
+        outputs={"c": "c2"},
+    )
+    with pytest.raises(ValueError, match="evolving field"):
+        ad.compose(downstream)
+
+
+def test_repeat_preserves_output_schema():
+    for prog in (shallow_water_program(), advection_diffusion_program()):
+        pk = repeat(prog, 2)
+        assert tuple(pk.outputs) == tuple(prog.outputs)
+        assert pk.passthrough == prog.passthrough
+        assert pk.steps == 2
+
+
+# ---------------------------------------------------------------------------
+# single-device lowering parity smoke (full matrix: tests/conformance.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("factory", [shallow_water_program,
+                                     advection_diffusion_program])
+def test_lowerings_agree_on_dict_results(factory):
+    prog = repeat(factory(), 2)
+    arrs = _fields(prog)
+    want = lower_reference(prog)(arrs)
+    assert set(want) == set(prog.outputs)
+    for build in (
+        lambda p: lower_reference(p, mode="staged"),
+        lambda p: lower_pallas(p, interpret=True),
+        lambda p: lower_sharded(p, mesh_shape=(1, 1)),
+    ):
+        got = build(prog)(arrs)
+        assert set(got) == set(want)
+        for f in want:
+            np.testing.assert_allclose(
+                np.asarray(got[f]), np.asarray(want[f]),
+                rtol=1e-6, atol=1e-6, err_msg=f,
+            )
+    # The chain applies the ring passthrough PER SWEEP, so the outermost
+    # single-sweep ring (radius 1 here) is unchanged after any k.
+    r = factory().radius
+    for f in want:
+        ring = np.ones(arrs[f].shape[-2:], bool)
+        ring[r:-r, r:-r] = False
+        np.testing.assert_array_equal(
+            np.asarray(want[f])[..., ring], np.asarray(arrs[f])[..., ring]
+        )

@@ -129,6 +129,96 @@ def test_single_field_degenerates_to_scalar_accounting(r):
     assert multi.field_radius("f0") == spec.radius
 
 
+def _two_output(ra, rb):
+    """A decoupled two-output program: field a evolves by its own star of
+    radius ra, field b by its own star of radius rb — so each output's
+    derived radius is exactly its own star's and composition cannot mix
+    them."""
+    ops = [
+        affine("a_new", "a", _star_taps(ra)),
+        affine("b_new", "b", _star_taps(rb)),
+    ]
+    return StencilProgram(
+        "two_out", ["a", "b"], ops, outputs={"a": "a_new", "b": "b_new"}
+    )
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2), st.integers(0, 2), st.integers(1, 4))
+def test_multioutput_radii_scale_per_output_under_repeat(ra, rb, k):
+    """Tentpole invariant: repeat(p, k) scales EVERY output's derived
+    radius by k independently — output_radii()[f] == k * r_f — and the
+    exchange radii (what the merged exchange moves and the wire model
+    bills) follow the full chain radius for every evolving field."""
+    prog = _two_output(ra, rb)
+    assert prog.output_radii() == {"a": ra, "b": rb}
+    pk = repeat(prog, k)
+    assert pk.output_radii() == {"a": k * ra, "b": k * rb}
+    assert pk.radius == k * max(ra, rb)
+    ex = pk.exchange_radii()
+    assert ex["a"] == ex["b"] == pk.radius
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2), st.integers(0, 2))
+def test_multioutput_reads_are_per_field_sum(ra, rb):
+    """A multi-output program's total §3.1 reads equal the per-field sum,
+    and fused bytes count every input once plus every OUTPUT once."""
+    prog = _two_output(ra, rb)
+    per_field = prog.reads_by_field()
+    assert sum(per_field.values()) == prog.spec().reads
+    assert per_field == {"a": len(_star_taps(ra)), "b": len(_star_taps(rb))}
+    points = 64
+    assert prog.fused_bytes(points) == (2 + 2) * points * 4
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 2), min_size=1, max_size=3))
+def test_explicit_single_output_is_degenerate(radii):
+    """Declaring outputs={passthrough: last_op} explicitly must be
+    indistinguishable from the legacy default — same fingerprint, equality,
+    analysis — on a random affine chain."""
+    prog = _chain(radii)
+    explicit = StencilProgram(
+        prog.name, prog.inputs, prog.ops, ndim=prog.ndim,
+        outputs={prog.passthrough: prog.output},
+    )
+    assert explicit == prog
+    assert explicit.fingerprint() == prog.fingerprint()
+    assert hash(explicit) == hash(prog)
+    assert explicit.outputs == prog.outputs
+    assert explicit.exchange_radii() == prog.exchange_radii()
+    assert explicit.spec() == prog.spec()
+
+
+def test_single_output_degeneracy_all_conformance_programs():
+    """Every pre-existing (single-output) conformance program is the strict
+    degenerate case: outputs defaults to {passthrough: last op}, the
+    explicit construction is fingerprint-identical, and the exchange radii
+    reproduce the legacy rule (passthrough at full chain radius, every
+    other field at its composed access radius)."""
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parent))
+    from conformance import PROGRAMS
+
+    single = {n: f for n, f in PROGRAMS.items() if len(PROGRAMS[n]().outputs) == 1}
+    assert len(single) == 9
+    for name, factory in single.items():
+        prog = factory()
+        assert prog.outputs == {prog.passthrough: prog.output}
+        explicit = StencilProgram(
+            prog.name, prog.inputs, prog.ops, ndim=prog.ndim,
+            passthrough=prog.passthrough,
+            outputs={prog.passthrough: prog.output},
+        )
+        assert explicit == prog, name
+        legacy = dict(prog.field_radii())
+        legacy[prog.passthrough] = prog.radius
+        assert prog.exchange_radii() == legacy, name
+
+
 @settings(max_examples=20, deadline=None)
 @given(
     st.integers(1, 2),

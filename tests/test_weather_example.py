@@ -1,7 +1,8 @@
-"""Smoke test: the IR-driven weather simulation example on a small grid.
+"""Smoke test: the coupled-system weather simulation example on a small grid.
 
-The example re-execs itself with fake host devices, so it runs as a
-subprocess (multidev tier, like tests/test_dist.py)."""
+The example evolves the shallow-water {u, v, h} state as ONE multi-output
+IR program through lower_sharded. It re-execs itself with fake host
+devices, so it runs as a subprocess (multidev tier, like tests/test_dist.py)."""
 
 import os
 import subprocess
@@ -35,8 +36,10 @@ def _run_example(*extra: str, expect_rc: int = 0) -> str:
 @pytest.mark.multidev
 def test_weather_example_smoke_small_grid():
     out = _run_example("--steps", "3", "--devices", "2", "--depth", "4", "--size", "24")
-    assert "IR program: hdiff radius=2" in out
+    assert "IR program: shallow_water radius=1" in out
+    assert "outputs=u+v+h" in out
     assert "distributed result matches single-device reference" in out
+    assert "(u, v, h)" in out
 
 
 @pytest.mark.multidev
@@ -50,13 +53,17 @@ def test_weather_example_smoke_pallas_inner():
 
 @pytest.mark.multidev
 def test_weather_example_health_blowup_drill(tmp_path):
-    """The end-to-end blow-up drill: a NaN injected after step 7 must be
-    caught at the NEXT cadence-3 probe (step 9), the last healthy probed
-    state (step 6) must be a COMMITted checkpoint, and the flight-recorder
-    JSONL must hold the failing step's field stats."""
+    """The end-to-end blow-up drill: a NaN injected into the HEIGHT field
+    after step 7 must be caught at the NEXT cadence-3 probe (step 9) by
+    h's own monitor (u and v probe healthy — the report names the failing
+    equation), the last healthy probed {u, v, h} state (step 6) must be a
+    COMMITted checkpoint, and the flight-recorder JSONL must hold the
+    failing step's per-field stats."""
     import json
 
-    from repro.checkpoint import latest_step
+    import numpy as np
+
+    from repro.checkpoint import latest_step, restore_checkpoint
 
     ckpt = tmp_path / "ckpt"
     log = tmp_path / "events.jsonl"
@@ -67,20 +74,28 @@ def test_weather_example_health_blowup_drill(tmp_path):
         "--ckpt-dir", str(ckpt), "--event-log", str(log),
         expect_rc=3,
     )
-    # Halted within one probe cadence of the injection.
-    assert "BLOWUP_DETECTED step=9" in out
+    # Halted within one probe cadence of the injection, naming the field.
+    assert "BLOWUP_DETECTED step=9 field=h" in out
     assert "nan_count=1" in out
     # checkpoint-then-abort left a COMMITted checkpoint of the last
-    # healthy probed state.
+    # healthy probed FULL state dict.
     assert latest_step(ckpt) == 6
     assert (ckpt / "step_00000006" / "COMMIT").exists()
-    # Flight recorder: JSONL sink has healthy probes plus the blow-up
-    # event carrying the failing step's stats.
+    like = {f: np.zeros((4, 24, 24), np.float32) for f in ("u", "v", "h")}
+    state, extra = restore_checkpoint(ckpt, 6, like)
+    assert set(state) == {"u", "v", "h"}
+    assert extra["fields"] == ["u", "v", "h"]
+    assert all(np.isfinite(a).all() for a in state.values())
+    # Flight recorder: JSONL sink has per-field healthy probes plus the
+    # blow-up event carrying the failing step's stats.
     lines = [json.loads(l) for l in log.read_text().splitlines()]
     kinds = [e["kind"] for e in lines]
     assert "health.probe" in kinds and "health.blowup" in kinds
+    probed_fields = {e["data"]["field"] for e in lines if e["kind"] == "health.probe"}
+    assert probed_fields == {"u", "v", "h"}
     blowup = next(e for e in lines if e["kind"] == "health.blowup")
     assert blowup["data"]["step"] == 9
+    assert blowup["data"]["field"] == "h"
     assert blowup["data"]["nan_count"] >= 1
     # ... and the crash dump flushed the ring next to the sink.
     crash = json.loads((tmp_path / "events.jsonl.crash.json").read_text())
@@ -100,16 +115,18 @@ def test_weather_example_health_probes_final_partial_chunk(tmp_path):
         "--event-log", str(tmp_path / "events.jsonl"),
         expect_rc=3,
     )
-    assert "BLOWUP_DETECTED step=11" in out
+    assert "BLOWUP_DETECTED step=11 field=h" in out
 
 
 @pytest.mark.multidev
 def test_weather_example_health_clean_run(tmp_path):
-    """--health on a healthy forecast: exits 0, probes on cadence."""
+    """--health on a healthy forecast: exits 0, probes on cadence for every
+    output field (steps 0/3/6/9 x {u, v, h} = 12 probes)."""
     out = _run_example(
         "--steps", "9", "--devices", "2", "--depth", "4", "--size", "24",
         "--health", "--health-every", "3", "--health-policy", "warn",
         "--event-log", str(tmp_path / "ok.jsonl"),
     )
     assert "forecast healthy" in out
-    assert "probes=4" in out and "blowups=0" in out
+    assert "probes=12" in out and "blowups=0" in out
+    assert "fields=u+v+h" in out
