@@ -19,8 +19,15 @@ Comparison rules, per row, keyed by the row's ``unit`` tag:
                  direction fails, because byte counts only move when the
                  program or the model changed — refresh the baseline
                  deliberately with ``--update`` when that's intended.
-  * anything else (``x``, ``model_us``, ``bool``, ``info``, ...) —
-                 informational, never gates.
+  * ``rate``   — deterministic serving ratios (fig14's cache hit rate and
+                 warm-path trace count): machine-independent by
+                 construction, so they gate with the ``bytes`` rule —
+                 drift in either direction beyond
+                 ``--max-bytes-regression`` means the admission/caching
+                 logic changed, not the hardware. (Wall-clock throughput
+                 rows use ``rate_info`` and never gate.)
+  * anything else (``x``, ``model_us``, ``bool``, ``info``,
+                 ``rate_info``, ...) — informational, never gates.
 
 Rows are matched by name; a gating row present in the baseline but missing
 from the current run is a failure (coverage shrank). Records whose
@@ -50,7 +57,7 @@ sys.path.insert(
 
 from repro.obs import MATCH_KEYS  # noqa: E402
 
-GATED_UNITS = ("us", "bytes")
+GATED_UNITS = ("us", "bytes", "rate")
 
 
 def load_records(directory: Path) -> dict[str, dict]:
@@ -115,12 +122,17 @@ def compare_fig(
                     f"(limit {limit:.1f}us = +{max_us_regression:.0%}, "
                     f"floor +{us_floor:.0f}us)"
                 )
-        elif unit == "bytes":
+        elif unit in ("bytes", "rate"):
+            # Both are deterministic by construction (traffic models /
+            # serving cache ratios): drift EITHER way is a logic change.
+            # A 0-valued baseline (fig14's warm-trace count) therefore
+            # tolerates exactly 0 drift — any warm-path retrace fails.
             tol = bval * max_bytes_regression
+            what = "byte-model" if unit == "bytes" else "serving-rate"
             if abs(cval - bval) > tol:
                 failures.append(
-                    f"{fig}: {name} byte-model drift {bval:.0f} -> {cval:.0f} "
-                    f"(tolerance +/-{max_bytes_regression:.0%}; byte counts "
+                    f"{fig}: {name} {what} drift {bval:.4g} -> {cval:.4g} "
+                    f"(tolerance +/-{max_bytes_regression:.0%}; {unit} rows "
                     f"are deterministic — refresh the baseline with --update "
                     f"if this change is intended)"
                 )

@@ -29,6 +29,12 @@ evolving halos in ONE merged exchange per k sweeps.
 ``advection_diffusion_program`` (evolving u, c over a shared v) are the
 shipped coupled systems.
 
+Ensemble batching rides every backend: ``lower_batched`` vmaps a lowering
+over a leading member axis (one compiled kernel for N perturbed initial
+conditions, bit-identical to N independent applications), composing with
+the (R, C) mesh of the sharded backends — the forecast-serving layer's
+execution path (``repro.serve``).
+
 This package is self-contained (no imports from other ``repro`` modules at
 import time), so ``repro.core`` and ``repro.kernels`` derive their specs and
 tile plans from it without cycles.
@@ -85,3 +91,4 @@ from repro.ir.plan import (
 from repro.ir.lower_reference import lower_reference
 from repro.ir.lower_pallas import lower_pallas
 from repro.ir.lower_sharded import lower_sharded
+from repro.ir.lower_batched import BATCHED_BACKENDS, build_backend, lower_batched

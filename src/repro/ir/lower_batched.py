@@ -1,0 +1,174 @@
+"""Batched lowering: vmap any backend over a leading ensemble-member axis.
+
+The forecast-serving analogue of the paper's balanced scale-out: N perturbed
+initial conditions (ensemble members, or N tenants' scenarios on one grid)
+share ONE compiled kernel instead of N dispatches. ``lower_batched`` builds
+the requested single-program lowering — reference jnp, fused Pallas, or
+shard_map + halo exchange — and wraps it in ``jax.vmap`` over a fresh
+leading member axis, jitted once for the whole batch:
+
+  * every member sees exactly the per-member computation, so the batched
+    output is BIT-identical to N independent applications on the same
+    backend (the batched conformance cells assert this, including on the
+    2x4 rows x cols mesh);
+  * the member axis composes with the (R, C) device mesh: inside the
+    ``shard_map`` shard the batch dim is just another unsharded leading
+    dim, the per-field halo exchange moves each member's bands in the same
+    collectives, and temporal blocking (``repeat(p, k)``) still amortises
+    the wire k-fold per member;
+  * one trace serves the whole batch — the compile-cache key the serving
+    layer uses (``repro.serve.cache``) includes the batch size, so a warm
+    cache never re-traces for a repeat batch shape.
+
+Multi-field programs take ``{field: (N, D, R, C)}`` mappings (all fields
+share one batched grid); multi-output programs return ``{field: (N, D, R,
+C)}`` per evolving field. Single-input programs may pass the bare batched
+array, mirroring the single-device lowerings' contract.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Mapping
+
+import jax
+
+from repro.ir.graph import StencilProgram
+from repro.ir.lower_pallas import lower_pallas
+from repro.ir.lower_reference import lower_reference
+from repro.ir.lower_sharded import lower_sharded
+from repro.obs import metrics
+
+Array = jax.Array
+
+#: The backends a batched lowering can wrap — the conformance matrix's
+#: backend names minus "staged" (whose per-op host sync is meaningless
+#: under vmap: the stages would serialise per member anyway).
+BATCHED_BACKENDS = ("reference", "pallas", "sharded-reference", "sharded-pallas")
+
+
+def build_backend(
+    program: StencilProgram,
+    backend: str,
+    *,
+    mesh_shape: tuple[int, int] | None = None,
+    interpret: bool | None = None,
+    vmem_budget: int | None = None,
+    overlap: bool = False,
+    merge_exchange: bool = True,
+) -> Callable:
+    """One UNBATCHED lowered callable for a conformance-style backend name
+    — the single dispatch point ``lower_batched`` and the serving compile
+    cache share (so a cache miss and a test cell build identical
+    callables)."""
+    if backend == "reference":
+        return lower_reference(program)
+    if backend == "staged":
+        return lower_reference(program, mode="staged")
+    if backend == "pallas":
+        return lower_pallas(program, interpret=interpret, vmem_budget=vmem_budget)
+    if backend in ("sharded-reference", "sharded-pallas"):
+        if mesh_shape is None:
+            raise ValueError(
+                f"backend {backend!r} needs mesh_shape=(R, C) — the rows x "
+                "cols device-mesh factorization the shards map onto"
+            )
+        return lower_sharded(
+            program,
+            mesh_shape=mesh_shape,
+            inner=backend.removeprefix("sharded-"),
+            overlap=overlap,
+            interpret=interpret,
+            vmem_budget=vmem_budget,
+            merge_exchange=merge_exchange,
+        )
+    raise ValueError(f"unknown backend {backend!r} (want one of {BATCHED_BACKENDS})")
+
+
+def lower_batched(
+    program: StencilProgram,
+    *,
+    backend: str = "reference",
+    mesh_shape: tuple[int, int] | None = None,
+    interpret: bool | None = None,
+    vmem_budget: int | None = None,
+    overlap: bool = False,
+    merge_exchange: bool = True,
+) -> Callable:
+    """Builds ``x (N, D, R, C) -> program(x)`` vmapped over leading axis 0.
+
+    Args:
+      program: a 2-D IR program (the forecast workloads; 1-D programs have
+        their own batch convention in the Pallas lowering already).
+      backend: one of :data:`BATCHED_BACKENDS`. The sharded backends need
+        ``mesh_shape``; the member axis rides UNSHARDED through the mesh.
+      mesh_shape / interpret / vmem_budget / overlap / merge_exchange:
+        forwarded to the wrapped lowering (see :func:`build_backend`).
+
+    The returned callable takes one batched array per declared input —
+    ``{field: (N, *grid)}`` mapping, or the bare array for single-input
+    programs — and returns the batched output(s): a ``(N, *grid)`` array,
+    or ``{field: (N, *grid)}`` for multi-output programs. The whole batch
+    is one jitted computation (vmap under one ``jax.jit``), so a second
+    same-shape call never re-traces.
+    """
+    if program.ndim != 2:
+        raise ValueError(
+            f"lower_batched supports 2-D programs, got ndim={program.ndim}"
+        )
+    if backend not in BATCHED_BACKENDS:
+        raise ValueError(
+            f"unknown batched backend {backend!r} (want one of {BATCHED_BACKENDS})"
+        )
+    if backend in ("reference", "pallas") and mesh_shape is not None:
+        raise ValueError(
+            f"backend {backend!r} is single-device; mesh_shape only applies "
+            "to the sharded backends"
+        )
+    base = build_backend(
+        program,
+        backend,
+        mesh_shape=mesh_shape,
+        interpret=interpret,
+        vmem_budget=vmem_budget,
+        overlap=overlap,
+        merge_exchange=merge_exchange,
+    )
+    vfn = jax.jit(jax.vmap(base))
+
+    fields = program.inputs
+    grid_ndim = program.ndim + 1  # (depth, rows, cols) for 2-D programs
+
+    def fn(x: Array | Mapping[str, Array]):
+        if isinstance(x, Mapping):
+            missing = [f for f in fields if f not in x]
+            if missing:
+                raise ValueError(
+                    f"program {program.name!r} batched field mapping is "
+                    f"missing input(s) {missing}; declared inputs are "
+                    f"{list(fields)}"
+                )
+            arrays = [x[f] for f in fields]
+        else:
+            if len(fields) != 1:
+                raise ValueError(
+                    f"program {program.name!r} has inputs {fields}; pass a mapping"
+                )
+            arrays = [x]
+        for f, a in zip(fields, arrays):
+            if a.ndim != grid_ndim + 1:
+                raise ValueError(
+                    f"batched field {f!r} must be (members, depth, rows, cols)"
+                    f" — {grid_ndim + 1}-D — got shape {tuple(a.shape)}; "
+                    "members lead, grid trails"
+                )
+            if a.shape != arrays[0].shape:
+                raise ValueError(
+                    f"all batched fields must share one (members, *grid) "
+                    f"shape; {f!r} has {tuple(a.shape)} vs {fields[0]!r} "
+                    f"{tuple(arrays[0].shape)}"
+                )
+        return vfn(x)
+
+    return metrics.instrument_call(
+        fn, f"ir.lower_batched.{program.name}.{backend}"
+    )

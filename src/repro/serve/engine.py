@@ -58,7 +58,19 @@ class Request:
     prefill_ts: float | None = None     # perf_counter when a lane picked it up
     done_ts: float | None = None        # perf_counter at completion
     queue_latency_s: float | None = None   # prefill_ts - submitted_ts
-    tokens_per_sec: float | None = None    # decode throughput of THIS request
+    items_per_sec: float | None = None     # decode throughput of THIS request
+    # (workload-neutral: tokens for the LM server, forecast members for the
+    # stencil server; ``tokens_per_sec`` below is the back-compat alias)
+
+    @property
+    def tokens_per_sec(self) -> float | None:
+        """Alias of :attr:`items_per_sec` — the pre-forecast name, kept so
+        existing dashboards and callers keep reading (and writing)."""
+        return self.items_per_sec
+
+    @tokens_per_sec.setter
+    def tokens_per_sec(self, value: float | None) -> None:
+        self.items_per_sec = value
 
 
 class BatchedServer:
@@ -127,6 +139,9 @@ class BatchedServer:
         self._fill_lanes()
         active = [i for i in range(self.lanes) if self._lane_req[i] is not None]
         if not active:
+            # An idle server is 0% occupied — without this the gauge froze
+            # at the last busy step's value after the queue drained.
+            metrics.set_gauge("serve.batch_occupancy", 0.0)
             return False
         metrics.set_gauge("serve.batch_occupancy", len(active) / self.lanes)
         events.record("serve.decode", active_lanes=len(active), lanes=self.lanes)
@@ -152,14 +167,19 @@ class BatchedServer:
                     req.done = True
                     req.done_ts = time.perf_counter()
                     if req.prefill_ts is not None and req.done_ts > req.prefill_ts:
-                        req.tokens_per_sec = len(req.out_tokens) / (
+                        req.items_per_sec = len(req.out_tokens) / (
                             req.done_ts - req.prefill_ts
                         )
                     self._lane_req[i] = None
                     self._lane_cache[i] = None
                     events.record("serve.retire", rid=req.rid, lane=i,
                                   tokens_out=len(req.out_tokens),
-                                  tokens_per_sec=req.tokens_per_sec)
+                                  items_per_sec=req.items_per_sec,
+                                  tokens_per_sec=req.items_per_sec)
+        # Lanes freed by the retires above are empty NOW — restate the
+        # gauge so a scrape between steps never reads the pre-retire value.
+        occupied = sum(1 for r in self._lane_req if r is not None)
+        metrics.set_gauge("serve.batch_occupancy", occupied / self.lanes)
         return True
 
     def run_until_idle(self, max_steps: int = 10_000) -> list[Request]:
@@ -173,9 +193,9 @@ class BatchedServer:
                 break
         elapsed = time.perf_counter() - t0
         if elapsed > 0:
-            metrics.set_gauge(
-                "serve.tokens_per_sec", (self.stats["tokens_out"] - tokens0) / elapsed
-            )
+            rate = (self.stats["tokens_out"] - tokens0) / elapsed
+            metrics.set_gauge("serve.items_per_sec", rate)
+            metrics.set_gauge("serve.tokens_per_sec", rate)  # back-compat alias
         for r in all_reqs:
             if r.done and r.rid not in seen:
                 finished.append(r)

@@ -129,6 +129,86 @@ def iter_cases(mesh_shapes=MESHES):
                     yield name, backend, k, mesh_shape
 
 
+# -- batched (ensemble) cells -------------------------------------------------
+# The vmap-batched lowering's parity matrix: a deliberately small program
+# subset (one single-input chain, one multi-output coupled system, one
+# multi-field workload) because every batched cell already runs members x
+# backends applications. The contract is two-sided: member i of the batched
+# output is BIT-identical to an independent application on the SAME backend,
+# and 1e-6-close to the reference oracle.
+BATCHED_PROGRAMS = ("hdiff", "shallow_water", "hdiff_coupled")
+BATCHED_KS = (1, 2)
+BATCHED_MESHES = ((1, 1), (2, 4))
+BATCH_MEMBERS = 3
+
+
+def make_batched_fields(
+    name: str, members: int = BATCH_MEMBERS,
+    grid: tuple[int, ...] = GRID, seed: int = SEED,
+):
+    """Member i's initial conditions are ``make_fields(name, seed=SEED+i)``
+    — each member is a genuinely distinct perturbation, and the SAME
+    per-member inputs drive the unbatched side of every batched cell —
+    stacked along a fresh leading member axis."""
+    per = [make_fields(name, grid, seed + i) for i in range(members)]
+    if isinstance(per[0], dict):
+        return {f: jnp.stack([p[f] for p in per]) for f in per[0]}
+    return jnp.stack(per)
+
+
+def member_slice(result, i: int):
+    """Member i of a batched result, dict-aware like :func:`to_host`."""
+    if isinstance(result, dict):
+        return {f: a[i] for f, a in result.items()}
+    return result[i]
+
+
+def build_batched(program, backend: str, mesh_shape: tuple[int, int]):
+    """The batched ``{field: (N, *grid)} -> (N, ...)`` callable for one
+    cell — same per-backend knobs as :func:`build` so "bit-exact vs the
+    same backend" compares identical inner computations."""
+    from repro.ir import lower_batched
+
+    return lower_batched(
+        program,
+        backend=backend,
+        mesh_shape=mesh_shape if backend in SHARDED_BACKENDS else None,
+        interpret=True if backend == "pallas" else None,
+    )
+
+
+def run_batched_case(
+    name: str, backend: str, k: int, mesh_shape, members: int = BATCH_MEMBERS
+):
+    """(batched, per_member_same_backend, per_member_oracle) for one cell;
+    each of the last two is a list of ``members`` results."""
+    prog = repeat(PROGRAMS[name](), k)
+    batched = to_host(
+        build_batched(prog, backend, mesh_shape)(
+            make_batched_fields(name, members)
+        )
+    )
+    base = build(prog, backend, mesh_shape)
+    seq = [to_host(base(make_fields(name, GRID, SEED + i))) for i in range(members)]
+    ref = lower_reference(prog)
+    oracles = [
+        to_host(ref(make_fields(name, GRID, SEED + i))) for i in range(members)
+    ]
+    return batched, seq, oracles
+
+
+def assert_batched_case(
+    name: str, backend: str, k: int, mesh_shape, members: int = BATCH_MEMBERS
+):
+    batched, seq, oracles = run_batched_case(name, backend, k, mesh_shape, members)
+    tag = f"{name}/{backend}/k={k}/mesh={mesh_id(mesh_shape)}/N={members}"
+    for i in range(members):
+        got_i = member_slice(batched, i)
+        assert_equal(got_i, seq[i], err_msg=f"{tag}/member={i} (vs same backend)")
+        assert_close(got_i, oracles[i], err_msg=f"{tag}/member={i} (vs oracle)")
+    return batched
+
+
 def build(program, backend: str, mesh_shape: tuple[int, int], *, overlap=False):
     """The lowered ``x -> program(x)`` callable for one matrix cell."""
     if backend == "reference":

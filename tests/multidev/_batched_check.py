@@ -1,0 +1,46 @@
+"""Subprocess body: the batched (ensemble) conformance cells on ONE
+multi-device mesh (rows x cols fake devices; run by
+tests/test_ir_batched.py with XLA_FLAGS forcing the device count).
+
+Every cell asserts the two-sided batched contract from tests/conformance.py:
+member i of the vmapped result is BIT-identical to an independent
+application on the same sharded backend, and 1e-6-close to the reference
+oracle. Prints DEVICES_UNAVAILABLE (exit 3) when the device count cannot
+back the mesh — the caller converts that into a pytest skip, which the CI
+multidev job's skip gate turns into a failure.
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax  # noqa: E402
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--mesh", required=True, help="RxC, e.g. 2x4")
+args = ap.parse_args()
+R, C = (int(s) for s in args.mesh.split("x"))
+
+if len(jax.devices()) < R * C:
+    print(f"DEVICES_UNAVAILABLE mesh {args.mesh} needs {R * C} devices, "
+          f"have {len(jax.devices())}")
+    sys.exit(3)
+
+from conformance import (  # noqa: E402
+    BATCHED_KS,
+    BATCHED_PROGRAMS,
+    SHARDED_BACKENDS,
+    assert_batched_case,
+)
+
+n_cells = 0
+for name in BATCHED_PROGRAMS:
+    for backend in SHARDED_BACKENDS:
+        for k in BATCHED_KS:
+            assert_batched_case(name, backend, k, (R, C))
+            n_cells += 1
+            print(f"{name} {backend} k={k} mesh={args.mesh} batched ok")
+
+print(f"ALL_OK {n_cells} cells")

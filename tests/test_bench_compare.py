@@ -166,3 +166,48 @@ def test_compare_fig_reports_reasons():
     assert len(failures) == 2
     assert any("wall-clock regression" in f for f in failures)
     assert any("byte-model drift" in f for f in failures)
+
+
+def _rate_rows(hit_rate, traces):
+    return [
+        {"name": "figX/cache_hit_rate", "value": hit_rate, "derived": "",
+         "unit": "rate"},
+        {"name": "figX/warm_traces", "value": traces, "derived": "",
+         "unit": "rate"},
+        {"name": "figX/batch8", "value": 3000.0, "derived": "",
+         "unit": "rate_info"},
+    ]
+
+
+def test_rate_rows_gate_deterministically(tmp_path):
+    """fig14-style serving rows: ``rate`` gates with the bytes rule (drift
+    either way fails), ``rate_info`` throughput never gates."""
+    _write(tmp_path / "base", _record(rows=_rate_rows(0.5, 0.0)))
+    _write(tmp_path / "cur", _record(rows=_rate_rows(0.5, 0.0)))
+    assert _run(tmp_path / "cur", tmp_path / "base") == 0
+    # Hit rate drifted: the admission/caching logic changed -> fail.
+    _write(tmp_path / "cur", _record(rows=_rate_rows(0.25, 0.0)))
+    assert _run(tmp_path / "cur", tmp_path / "base") == 1
+    # Throughput rows may swing freely (rate_info is informational).
+    rows = _rate_rows(0.5, 0.0)
+    rows[2]["value"] = 1.0
+    _write(tmp_path / "cur", _record(rows=rows))
+    assert _run(tmp_path / "cur", tmp_path / "base") == 0
+
+
+def test_zero_rate_baseline_tolerates_no_drift(tmp_path):
+    """The warm-trace row's baseline is 0: ANY warm-path retrace (value
+    > 0) must fail — a 0 baseline means 0 tolerance."""
+    _write(tmp_path / "base", _record(rows=_rate_rows(0.5, 0.0)))
+    _write(tmp_path / "cur", _record(rows=_rate_rows(0.5, 1.0)))
+    assert _run(tmp_path / "cur", tmp_path / "base") == 1
+
+
+def test_rate_failure_message_names_serving():
+    failures, _ = bench_compare.compare_fig(
+        _record(rows=_rate_rows(0.25, 0.0)),
+        _record(rows=_rate_rows(0.5, 0.0)),
+        max_us_regression=0.5, us_floor=200.0, max_bytes_regression=0.02,
+    )
+    assert len(failures) == 1
+    assert "serving-rate drift" in failures[0]

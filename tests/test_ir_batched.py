@@ -1,0 +1,164 @@
+"""Batched-lowering (ensemble) conformance: tests/conformance.py's batched
+cells plus the input-validation contract.
+
+The two-sided parity claim under test (see ``assert_batched_case``): for
+every (program, backend, k, mesh) batched cell, member i of ONE vmapped
+application over the member axis is (a) BIT-identical to an independent
+application of the same lowered backend on member i's fields, and (b)
+1e-6-close to the reference oracle. (a) is the strong claim — vmap must
+not change what any member computes, on any backend, or ensemble serving
+silently diverges from single-forecast serving.
+
+Single-device cells (1x1 reference/pallas) run in-process; the sharded
+cells run the 2x4 mesh in an 8-fake-device subprocess
+(tests/multidev/_batched_check.py), keeping the main process at 1 device.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conformance import (
+    BATCHED_KS,
+    BATCHED_MESHES,
+    BATCHED_PROGRAMS,
+    assert_batched_case,
+    make_batched_fields,
+    member_slice,
+    mesh_id,
+    to_host,
+)
+from repro.ir import BATCHED_BACKENDS, hdiff_program, lower_batched, shallow_water_program
+from repro.obs import events, metrics
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(autouse=True)
+def _metrics_on():
+    # Batched cells run fully instrumented, same contract as the unbatched
+    # matrix: observability must never perturb the computation.
+    with metrics.using(), events.using():
+        yield
+
+
+SINGLE_DEV_CELLS = [
+    pytest.param(name, backend, k, id=f"{name}-{backend}-k{k}")
+    for name in BATCHED_PROGRAMS
+    for backend in ("reference", "pallas")
+    for k in BATCHED_KS
+]
+
+
+@pytest.mark.parametrize("name,backend,k", SINGLE_DEV_CELLS)
+def test_batched_conformance_1x1(name, backend, k):
+    assert_batched_case(name, backend, k, (1, 1))
+
+
+def test_batched_member_slice_shapes():
+    """The batched result carries (members, *grid) per output field and
+    slices back to per-member grids."""
+    fields = make_batched_fields("shallow_water", members=2, grid=(2, 16, 16))
+    out = to_host(lower_batched(shallow_water_program())(fields))
+    assert set(out) == set(shallow_water_program().outputs)
+    for f, a in out.items():
+        assert a.shape == (2, 2, 16, 16), (f, a.shape)
+    m0 = member_slice(out, 0)
+    assert all(v.shape == (2, 16, 16) for v in m0.values())
+
+
+def test_batched_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="unknown batched backend"):
+        lower_batched(hdiff_program(), backend="staged")
+
+
+def test_batched_rejects_mesh_on_single_device_backend():
+    with pytest.raises(ValueError, match="single-device"):
+        lower_batched(hdiff_program(), backend="pallas", mesh_shape=(1, 1))
+
+
+def test_batched_sharded_requires_mesh():
+    with pytest.raises(ValueError, match="mesh_shape"):
+        lower_batched(hdiff_program(), backend="sharded-reference")
+
+
+def test_batched_rejects_unbatched_input():
+    fn = lower_batched(hdiff_program())
+    with pytest.raises(ValueError, match="members, depth, rows, cols"):
+        fn(jnp.zeros((2, 16, 16), jnp.float32))
+
+
+def test_batched_rejects_missing_field():
+    fn = lower_batched(shallow_water_program())
+    with pytest.raises(ValueError, match="missing input"):
+        fn({"u": jnp.zeros((2, 2, 16, 16), jnp.float32)})
+
+
+def test_batched_rejects_ragged_members():
+    fn = lower_batched(shallow_water_program())
+    fields = make_batched_fields("shallow_water", members=2, grid=(2, 16, 16))
+    fields["h"] = jnp.zeros((3, 2, 16, 16), jnp.float32)
+    with pytest.raises(ValueError, match="share one"):
+        fn(fields)
+
+
+def test_batched_backends_exports():
+    assert set(BATCHED_BACKENDS) == {
+        "reference", "pallas", "sharded-reference", "sharded-pallas",
+    }
+
+
+def test_batched_single_member_matches_unbatched():
+    """N=1 batching is exactly the unbatched lowering with a length-1
+    leading axis — the degenerate case the serving engine hits whenever a
+    request has no compatible batchmates."""
+    from conformance import GRID, SEED, build, make_fields
+
+    got = to_host(
+        lower_batched(hdiff_program())(make_batched_fields("hdiff", members=1))
+    )
+    want = to_host(build(hdiff_program(), "reference", (1, 1))(
+        make_fields("hdiff", GRID, SEED)
+    ))
+    np.testing.assert_array_equal(member_slice(got, 0), want)
+
+
+MULTIDEV_BATCHED_MESHES = [m for m in BATCHED_MESHES if m != (1, 1)]
+
+
+@pytest.mark.multidev
+@pytest.mark.parametrize(
+    "mesh", [pytest.param(m, id=mesh_id(m)) for m in MULTIDEV_BATCHED_MESHES]
+)
+def test_batched_conformance_mesh(mesh, tmp_path):
+    n_dev = mesh[0] * mesh[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    env["REPRO_METRICS"] = "1"
+    event_log = tmp_path / "events.jsonl"
+    env["REPRO_EVENT_LOG"] = str(event_log)
+    proc = subprocess.run(
+        [
+            sys.executable,
+            str(REPO / "tests" / "multidev" / "_batched_check.py"),
+            "--mesh",
+            mesh_id(mesh),
+        ],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    if "DEVICES_UNAVAILABLE" in proc.stdout:
+        pytest.skip(f"mesh {mesh_id(mesh)} unavailable: {proc.stdout.strip()}")
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL_OK" in proc.stdout
+    assert event_log.exists() and event_log.stat().st_size > 0

@@ -1,0 +1,185 @@
+"""The serving compile cache: LRU properties (hypothesis).
+
+The deterministic cache tests — the real-builder zero-retrace proof and
+the ``cache.{hits,misses,evictions}`` registry trio — live in
+tests/test_serve_forecast.py so they run even without the dev extras; this
+module is the property side (and so skips wholesale without hypothesis,
+which the CI dep-skip gate turns into a failure where extras are
+installed).
+
+Property suite (stub builder — no jax, so thousands of driven sequences
+are cheap): for ARBITRARY request sequences over a bounded key universe,
+
+  * hit/miss accounting is exact — a request is a hit iff its key is live
+    in the cache at request time (model: an ordered dict replayed in
+    Python);
+  * eviction is LRU — the evicted key is always the least recently USED
+    (get counts as use), and live keys never exceed capacity;
+  * distinct fingerprints never collide — programs differing structurally
+    get distinct entries no matter the request order;
+  * fingerprint blindness to display names — structurally-equal programs
+    with different names SHARE an entry (second submit is a hit);
+  * under a no-eviction capacity, a hit NEVER invokes the builder — the
+    stub-level statement of the zero-retrace invariant (builder calls ==
+    misses, for any sequence).
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.ir import StencilProgram, affine  # noqa: E402
+from repro.obs import metrics  # noqa: E402
+from repro.serve.cache import CompileCache, compile_key  # noqa: E402
+
+
+def _program(weight: float, name: str = "p"):
+    """A tiny 2-D program whose fingerprint varies with ``weight`` (a tap
+    weight is structural) but NOT with ``name`` (display names are blind)."""
+    return StencilProgram(
+        name, ["x"], [affine("out", "x", {(0, 0): weight, (1, 0): 1.0})]
+    )
+
+
+# A bounded universe of distinct request shapes: 3 structurally-distinct
+# programs x 2 grids x 2 backends x 2 batch sizes.
+PROGRAMS = [_program(float(w)) for w in (1.0, 2.0, 3.0)]
+GRIDS = [(2, 16, 16), (2, 24, 24)]
+BACKENDS = ["reference", "pallas"]
+BATCHES = [None, 4]
+
+requests = st.lists(
+    st.tuples(
+        st.integers(0, len(PROGRAMS) - 1),
+        st.integers(0, len(GRIDS) - 1),
+        st.integers(0, len(BACKENDS) - 1),
+        st.integers(0, len(BATCHES) - 1),
+    ),
+    min_size=1,
+    max_size=60,
+)
+
+
+def _stub_builder(program, key, **kw):
+    def fn(x):
+        return x
+
+    return fn
+
+
+def _replay(seq, capacity):
+    """Drive a CompileCache and an independent Python LRU model side by
+    side; returns (cache, model_hits, model_misses, model_evictions,
+    model_keys_in_lru_order)."""
+    cache = CompileCache(capacity, builder=_stub_builder, trace_probe=False)
+    model: list = []  # keys, least recently used first
+    hits = misses = evictions = 0
+    for pi, gi, bi, ni in seq:
+        key = compile_key(
+            PROGRAMS[pi], grid=GRIDS[gi], backend=BACKENDS[bi], batch=BATCHES[ni]
+        )
+        cache.get(
+            PROGRAMS[pi], grid=GRIDS[gi], backend=BACKENDS[bi], batch=BATCHES[ni]
+        )
+        if key in model:
+            hits += 1
+            model.remove(key)
+            model.append(key)
+        else:
+            misses += 1
+            model.append(key)
+            if len(model) > capacity:
+                model.pop(0)
+                evictions += 1
+    return cache, hits, misses, evictions, model
+
+
+@given(seq=requests, capacity=st.integers(1, 6))
+@settings(max_examples=200, deadline=None)
+def test_lru_accounting_matches_model(seq, capacity):
+    cache, hits, misses, evictions, model = _replay(seq, capacity)
+    assert cache.stats() == {
+        "hits": hits,
+        "misses": misses,
+        "evictions": evictions,
+        "size": len(model),
+        "capacity": capacity,
+    }
+    # Eviction order is LRU: the live keys, least-recent first, match the
+    # model exactly — not just as a set.
+    assert cache.keys() == model
+    assert len(cache) <= capacity
+    total = hits + misses
+    assert cache.hit_rate == (hits / total if total else 0.0)
+
+
+@given(seq=requests)
+@settings(max_examples=100, deadline=None)
+def test_distinct_fingerprints_never_collide(seq):
+    """With capacity >= the key universe nothing evicts, so every distinct
+    key must have its own live entry and repeat requests must all hit."""
+    cache, hits, misses, evictions, model = _replay(seq, capacity=64)
+    distinct = {
+        compile_key(
+            PROGRAMS[pi], grid=GRIDS[gi], backend=BACKENDS[bi], batch=BATCHES[ni]
+        )
+        for pi, gi, bi, ni in seq
+    }
+    assert evictions == 0
+    assert misses == len(distinct)
+    assert hits == len(seq) - len(distinct)
+    assert set(cache.keys()) == distinct
+
+
+@given(w=st.sampled_from([0.5, 1.0, 2.0]))
+@settings(max_examples=10, deadline=None)
+def test_equal_programs_different_names_share_entry(w):
+    cache = CompileCache(4, builder=_stub_builder, trace_probe=False)
+    a = _program(w, name="tenant_a_diffusion")
+    b = _program(w, name="tenant_b_diffusion")
+    cache.get(a, grid=(2, 16, 16))
+    cache.get(b, grid=(2, 16, 16))
+    assert cache.stats()["hits"] == 1 and cache.stats()["misses"] == 1
+    assert len(cache) == 1
+
+
+@given(seq=requests)
+@settings(max_examples=100, deadline=None)
+def test_hits_never_invoke_builder(seq):
+    """Builder invocations == misses, for ANY request sequence — the
+    stub-level zero-retrace statement (the jax-level proof, per-entry trace
+    probes against the real builder, is in test_serve_forecast.py)."""
+    calls = []
+
+    def counting_builder(program, key, **kw):
+        calls.append(key)
+        return lambda x: x
+
+    cache = CompileCache(64, builder=counting_builder, trace_probe=False)
+    for pi, gi, bi, ni in seq:
+        cache.get(
+            PROGRAMS[pi], grid=GRIDS[gi], backend=BACKENDS[bi], batch=BATCHES[ni]
+        )
+    assert len(calls) == cache.stats()["misses"]
+    # ...and each miss built a distinct key (capacity 64 never evicts here).
+    assert len(set(calls)) == len(calls)
+
+
+@given(seq=requests, capacity=st.integers(1, 6))
+@settings(max_examples=100, deadline=None)
+def test_counter_trio_matches_registry(seq, capacity):
+    """cache.{hits,misses,evictions} in the repro.obs registry mirror the
+    cache's own accounting exactly, for any sequence."""
+    with metrics.using() as reg:
+        cache, hits, misses, evictions, _model = _replay(seq, capacity)
+        snap = reg.snapshot()["counters"]
+    assert snap.get("cache.hits", 0) == hits
+    assert snap["cache.misses"] == misses
+    assert snap.get("cache.evictions", 0) == evictions
+    assert (cache.hits, cache.misses, cache.evictions) == (hits, misses, evictions)
+
+
+def test_capacity_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        CompileCache(0)

@@ -1,0 +1,295 @@
+"""Forecast-serving stress + fault injection, and the deterministic
+compile-cache tests (the jax-level zero-retrace proof lives here, outside
+the hypothesis-gated module, so it always runs).
+
+The serving claims under test:
+
+  * interleaved tenants — mixed programs AND mixed grids submitted in one
+    arrival order — ALL complete, each batch stays homogeneous, and every
+    completed result matches an unbatched oracle (same backend, bit-exact;
+    reference oracle, 1e-6);
+  * per-request telemetry (queue latency, items/sec) and the server gauges
+    (member occupancy incl. idle reset, steps/sec) are stamped;
+  * a NaN-injected request (caught post-step by a HealthMonitor) fails
+    ALONE: its batchmates complete with results identical to a run where
+    the poisoned request never existed;
+  * warm serving never re-traces: a second wave of same-shaped requests is
+    all cache hits with zero new jax traces (the acceptance invariant).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conformance import assert_close, assert_equal, to_host
+from repro.ir import (
+    hdiff_program,
+    laplacian_program,
+    lower_reference,
+    repeat,
+    shallow_water_program,
+)
+from repro.obs import events, metrics
+from repro.obs.health import HealthMonitor, NumericsError
+from repro.serve import CompileCache, ForecastServer, compile_key
+
+SEED = 99
+
+
+@pytest.fixture(autouse=True)
+def _obs_on():
+    with metrics.using(), events.using():
+        yield
+
+
+def _noise(grid, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(grid).astype(np.float32))
+
+
+def _sw_fields(grid, seed):
+    rng = np.random.default_rng(seed)
+    return {
+        f: jnp.asarray(rng.standard_normal(grid).astype(np.float32))
+        for f in shallow_water_program().inputs
+    }
+
+
+# -- deterministic cache tests (real builder, real jax traces) ---------------
+
+
+def test_cache_hit_performs_zero_retraces():
+    """The acceptance-gate invariant: the per-entry probe counts ACTUAL jax
+    traces of the cached callable, and a warm cache serving the same
+    (program, grid, dtype, backend, batch) key again — on both the batched
+    and unbatched paths — never traces again."""
+    p = hdiff_program()
+    rng = np.random.default_rng(0)
+    xb = jnp.asarray(rng.standard_normal((3, 2, 16, 16)), jnp.float32)
+
+    cache = CompileCache(4)
+    fn = cache.get(p, grid=(2, 16, 16), batch=3)
+    fn(xb)
+    entry = cache.lookup(compile_key(p, grid=(2, 16, 16), batch=3))
+    assert entry.traces == 1  # the miss paid exactly one trace
+
+    for _ in range(3):  # warm hits: same key, fresh data
+        fn = cache.get(p, grid=(2, 16, 16), batch=3)
+        fn(jnp.asarray(rng.standard_normal((3, 2, 16, 16)), jnp.float32))
+    assert entry.traces == 1, "cache hit re-traced"
+    assert cache.stats()["hits"] == 3
+
+    # The unbatched path holds the same invariant via its own entry.
+    f1 = cache.get(p, grid=(2, 16, 16))
+    f1(xb[0])
+    f1 = cache.get(p, grid=(2, 16, 16))
+    f1(xb[1])
+    assert cache.lookup(compile_key(p, grid=(2, 16, 16))).traces == 1
+    assert cache.total_traces() == 2  # one per live entry, ever
+
+
+def test_rebuild_after_eviction_retraces_once():
+    """Evicting and re-requesting a key is a miss and costs exactly one
+    fresh trace — the probe distinguishes that from a hit-path retrace."""
+    hd, lap = hdiff_program(), laplacian_program()
+    x = jnp.zeros((2, 16, 16), jnp.float32)
+    cache = CompileCache(1)
+    cache.get(hd, grid=(2, 16, 16))(x)
+    cache.get(lap, grid=(2, 16, 16))(x)   # evicts hd
+    cache.get(hd, grid=(2, 16, 16))(x)    # miss again
+    assert cache.stats() == {
+        "hits": 0, "misses": 3, "evictions": 2, "size": 1, "capacity": 1,
+    }
+    assert cache.lookup(compile_key(hd, grid=(2, 16, 16))).traces == 1
+
+
+def test_cache_counters_reach_registry():
+    snap = None
+    cache = CompileCache(1)
+    x = jnp.zeros((2, 16, 16), jnp.float32)
+    cache.get(hdiff_program(), grid=(2, 16, 16))(x)      # miss
+    cache.get(hdiff_program(), grid=(2, 16, 16))(x)      # hit
+    cache.get(laplacian_program(), grid=(2, 16, 16))(x)  # miss + evict
+    snap = metrics.current().snapshot()["counters"]
+    assert snap["cache.hits"] == 1
+    assert snap["cache.misses"] == 2
+    assert snap["cache.evictions"] == 1
+
+
+# -- the serving stress suite -------------------------------------------------
+
+
+def _submit_interleaved(srv):
+    """Three tenants' worth of traffic in one interleaved arrival order:
+    hdiff on two DIFFERENT grids (must not co-batch) and shallow_water
+    (multi-output) between them. Returns {rid: (program, fields)}."""
+    hd, sw = hdiff_program(), shallow_water_program()
+    plan = [
+        (hd, _noise((2, 16, 16), SEED + 0)),
+        (sw, _sw_fields((2, 12, 12), SEED + 1)),
+        (hd, _noise((2, 16, 16), SEED + 2)),
+        (hd, _noise((2, 24, 24), SEED + 3)),   # other grid: own batch
+        (sw, _sw_fields((2, 12, 12), SEED + 4)),
+        (hd, _noise((2, 16, 16), SEED + 5)),
+        (hd, _noise((2, 16, 16), SEED + 6)),
+        (sw, _sw_fields((2, 12, 12), SEED + 7)),
+    ]
+    subs = {}
+    for prog, fields in plan:
+        subs[srv.submit(prog, fields)] = (prog, fields)
+    return subs
+
+
+def test_stress_interleaved_tenants_all_complete_and_match_oracles():
+    srv = ForecastServer(max_batch=4)
+    subs = _submit_interleaved(srv)
+    done = srv.run_until_idle()
+    assert len(done) == len(subs) and srv.pending() == 0
+    assert all(r.done and not r.failed for r in done)
+    # Batches stayed homogeneous: 8 requests can't drain in fewer than 3
+    # batches (3 distinct group keys), and FIFO grouping gives exactly 3.
+    assert srv.stats["batches"] == 3
+    assert srv.stats["members"] == len(subs)
+    for r in done:
+        prog, fields = subs[r.rid]
+        want = to_host(lower_reference(prog)(fields))
+        assert_close(to_host(r.result), want, err_msg=f"rid={r.rid} vs oracle")
+
+
+def test_served_results_bit_match_unbatched_same_backend():
+    """Same backend, batched through the server vs directly unbatched:
+    bit-exact, including for a k=2 composed program."""
+    prog = repeat(hdiff_program(), 2)
+    fields = [_noise((2, 16, 16), SEED + i) for i in range(3)]
+    srv = ForecastServer(max_batch=4)
+    rids = [srv.submit(prog, f) for f in fields]
+    done = {r.rid: r for r in srv.run_until_idle()}
+    base = srv.cache.get(prog, grid=(2, 16, 16))  # the unbatched twin
+    for rid, f in zip(rids, fields):
+        assert_equal(
+            to_host(done[rid].result), to_host(base(f)),
+            err_msg=f"rid={rid} batched vs unbatched",
+        )
+
+
+def test_telemetry_stamped_per_request_and_server():
+    srv = ForecastServer(max_batch=4)
+    _submit_interleaved(srv)
+    done = srv.run_until_idle()
+    for r in done:
+        assert r.queue_latency_s is not None and r.queue_latency_s >= 0
+        assert r.items_per_sec is not None and r.items_per_sec > 0
+    snap = metrics.current().snapshot()
+    assert snap["gauges"]["serve.forecast.steps_per_sec"] > 0
+    assert snap["gauges"]["serve.forecast.members_per_sec"] > 0
+    # Occupancy resets to idle after the drain (the staleness rule).
+    assert snap["gauges"]["serve.forecast.member_occupancy"] == 0.0
+    assert snap["counters"]["serve.forecast.requests_submitted"] == len(done)
+    assert snap["counters"]["serve.forecast.completed"] == len(done)
+    assert snap["timers"]["serve.forecast.queue_latency"]["count"] == len(done)
+    # Retire events carry the per-request telemetry.
+    retires = events.current().events("serve.forecast.retire")
+    assert len(retires) == len(done)
+    assert all(e.data["items_per_sec"] > 0 for e in retires)
+
+
+def test_member_occupancy_gauge_tracks_last_batch():
+    srv = ForecastServer(max_batch=4)
+    for i in range(3):
+        srv.submit(hdiff_program(), _noise((2, 16, 16), SEED + i))
+    assert srv.step() is True
+    snap = metrics.current().snapshot()
+    assert snap["gauges"]["serve.forecast.member_occupancy"] == 3 / 4
+    assert srv.step() is False  # idle → gauge drops to 0
+    assert metrics.current().snapshot()["gauges"][
+        "serve.forecast.member_occupancy"
+    ] == 0.0
+
+
+def test_nan_injected_request_fails_alone():
+    """Fault injection: one member's initial conditions carry a NaN. The
+    HealthMonitor (abort policy) catches it post-step; that request retires
+    with ``error`` set while its batchmates complete with results
+    IDENTICAL to a clean run without the poisoned request."""
+    clean = [_noise((2, 16, 16), SEED + i) for i in range(3)]
+    poisoned = clean[1].at[0, 5, 5].set(jnp.nan)
+
+    srv = ForecastServer(max_batch=4, monitor=HealthMonitor(policy="abort"))
+    rid0 = srv.submit(hdiff_program(), clean[0])
+    rid_bad = srv.submit(hdiff_program(), poisoned)
+    rid2 = srv.submit(hdiff_program(), clean[2])
+    done = {r.rid: r for r in srv.run_until_idle()}
+
+    assert srv.stats == {"batches": 1, "members": 3, "completed": 2, "failed": 1}
+    bad = done[rid_bad]
+    assert bad.done and bad.failed and bad.result is None
+    assert isinstance(bad.error, NumericsError)
+
+    # Batchmates: identical to a server that never saw the poison.
+    oracle_srv = ForecastServer(max_batch=4)
+    o0 = oracle_srv.submit(hdiff_program(), clean[0])
+    o2 = oracle_srv.submit(hdiff_program(), clean[2])
+    oracle = {r.rid: r for r in oracle_srv.run_until_idle()}
+    assert_equal(to_host(done[rid0].result), to_host(oracle[o0].result))
+    assert_equal(to_host(done[rid2].result), to_host(oracle[o2].result))
+
+    snap = metrics.current().snapshot()["counters"]
+    assert snap["serve.forecast.failed"] == 1
+    fails = events.current().events("serve.forecast.fail")
+    assert len(fails) == 1 and fails[0].data["rid"] == rid_bad
+
+
+def test_nan_isolation_multi_output():
+    """Same isolation story for a coupled system: poisoning one member's h
+    field fails only that request; surviving members' u/v/h all match."""
+    fields = [_sw_fields((2, 12, 12), SEED + i) for i in range(3)]
+    bad = dict(fields[0])
+    bad["h"] = bad["h"].at[1, 3, 3].set(jnp.inf)
+
+    srv = ForecastServer(max_batch=4, monitor=HealthMonitor(policy="abort"))
+    rid_bad = srv.submit(shallow_water_program(), bad)
+    rids = [srv.submit(shallow_water_program(), f) for f in fields[1:]]
+    done = {r.rid: r for r in srv.run_until_idle()}
+    assert done[rid_bad].failed
+    ref = lower_reference(shallow_water_program())
+    for rid, f in zip(rids, fields[1:]):
+        assert not done[rid].failed
+        assert_close(to_host(done[rid].result), to_host(ref(f)))
+
+
+def test_warm_serving_is_all_hits_with_zero_retraces():
+    """Two identical waves of traffic: the second wave is 100% cache hits
+    and adds ZERO jax traces — the serving-level acceptance invariant."""
+    srv = ForecastServer(max_batch=4)
+
+    def wave(seed0):
+        for i in range(4):
+            srv.submit(hdiff_program(), _noise((2, 16, 16), seed0 + i))
+        srv.run_until_idle()
+
+    wave(SEED)
+    misses0 = srv.cache.stats()["misses"]
+    traces0 = srv.cache.total_traces()
+    wave(SEED + 100)  # fresh data, same shapes
+    assert srv.cache.stats()["misses"] == misses0, "warm wave missed"
+    assert srv.cache.total_traces() == traces0, "warm wave re-traced"
+    assert srv.cache.hit_rate > 0
+
+
+def test_submit_validation():
+    srv = ForecastServer()
+    with pytest.raises(ValueError, match="pass a mapping"):
+        srv.submit(shallow_water_program(), jnp.zeros((2, 8, 8)))
+    with pytest.raises(ValueError, match="missing input"):
+        srv.submit(shallow_water_program(), {"u": jnp.zeros((2, 8, 8))})
+    with pytest.raises(ValueError, match="share a grid"):
+        srv.submit(
+            shallow_water_program(),
+            {"u": jnp.zeros((2, 8, 8)), "v": jnp.zeros((2, 8, 8)),
+             "h": jnp.zeros((2, 9, 9))},
+        )
+    with pytest.raises(ValueError, match="depth, rows, cols"):
+        srv.submit(hdiff_program(), jnp.zeros((8, 8)))
+    with pytest.raises(ValueError, match="max_batch"):
+        ForecastServer(max_batch=0)
