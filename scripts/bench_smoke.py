@@ -4,7 +4,7 @@
 
 Until now the benchmark suite only printed CSV rows to stdout, so the repo
 never accumulated a perf trajectory (``BENCH_*.json`` had never been
-produced). This script runs fig10-fig14 on a reduced grid
+produced). This script runs fig10-fig15 on a reduced grid
 (the paper's 64 x 256 x 256 shrinks to ``--depth/--rows/--cols``, patched
 into ``benchmarks.common`` BEFORE the fig modules import it, plus each
 fig's ``fast=True`` mode) and writes one JSON record per fig with:
@@ -45,7 +45,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 RATIO_RE = re.compile(r"ratio=([0-9]+(?:\.[0-9]+)?|nan)")
 RATIO_LO, RATIO_HI = 0.99, 1.01
-DEFAULT_FIGS = ("fig10", "fig11", "fig12", "fig13", "fig14")
+DEFAULT_FIGS = ("fig10", "fig11", "fig12", "fig13", "fig14", "fig15")
 
 
 def extract_wire_ratios(rows) -> list[float]:
@@ -124,6 +124,7 @@ def run_figs(figs, depth: int, rows: int, cols: int):
         fig12_temporal,
         fig13_multifield,
         fig14_serving,
+        fig15_gradients,
     )
 
     runners = {
@@ -132,6 +133,7 @@ def run_figs(figs, depth: int, rows: int, cols: int):
         "fig12": fig12_temporal.run,
         "fig13": fig13_multifield.run,
         "fig14": fig14_serving.run,
+        "fig15": fig15_gradients.run,
     }
     unknown = [f for f in figs if f not in runners]
     if unknown:

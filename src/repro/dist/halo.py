@@ -385,6 +385,112 @@ def wire_drift_report(
     return result
 
 
+def gradient_halo_exchange_bytes_per_shard(
+    program,
+    local_depth: int,
+    rows: int,
+    cols: int,
+    *,
+    mesh_shape: tuple[int, int],
+    itemsize: int = 4,
+) -> int:
+    """Per-chip collective-permute bytes of one VALUE-AND-GRAD step of a
+    sharded differentiable lowering (``build_backend(..., "sharded-*",
+    differentiable=True)``) — the backward-pass extension of
+    :func:`program_halo_exchange_bytes_per_shard`.
+
+    ``rows`` / ``cols`` are GLOBAL grid extents; ``local_depth`` is
+    per-chip as in the forward model (depth is never padded or exchanged).
+    Every backward sweep runs on the UNPADDED shards — the adjoint and
+    augmented-forward sweeps lower with ``boundary="zero"``, whose zero
+    extension rides the same exchange round (no pad/crop collectives) — so
+    the model is a pure sum of per-program exchange rounds at the primal
+    shard extents, mirroring ``repro.ir.autodiff.make_vjp`` sweep by sweep
+    with the same per-field ``exchange_radii()`` rule the forward model
+    uses:
+
+      * the primal forward: one full-chain round;
+      * per sweep with caches: one round of the AUGMENTED forward
+        (:func:`~repro.ir.autodiff.augmented_forward`) — the plain sweep's
+        radii plus one full-radius band per ``c~`` cache slot (cache slots
+        are OUTPUTS, and the shared ``exchange_radii()`` rule moves every
+        evolving field at the chain radius);
+      * per non-final sweep without caches (adjoint reads the primal state
+        but nothing cached — product-of-inputs shapes): one plain per-sweep
+        round;
+      * per sweep: one round of the ADJOINT program — adjoint radii equal
+        primal radii, so this mirrors the forward exchange exactly.
+
+    Linear chains skip every state-recompute term (their adjoints never
+    read the primal). Measured-vs-model is asserted at ratio 1.000 by
+    ``tests/multidev/_grad_check.py`` and ``benchmarks/fig15_gradients.py``.
+    """
+    from repro.ir.autodiff import adjoint, augmented_forward, cache_fields
+
+    n_row, n_col = int(mesh_shape[0]), int(mesh_shape[1])
+    row_sh, col_sh = n_row > 1, n_col > 1
+    r_loc, c_loc = rows // n_row, cols // n_col
+
+    def one_round(p):
+        return program_halo_exchange_bytes_per_shard(
+            p, local_depth, r_loc, c_loc,
+            itemsize=itemsize, row_sharded=row_sh, col_sharded=col_sh,
+        )
+
+    total = one_round(program)
+    chain = program.chain
+    needs_state = any(
+        cache_fields(q)
+        or any(r.field in q.inputs for op in adjoint(q).ops for r in op.reads)
+        for q in chain
+    )
+    for i, q in enumerate(chain):
+        if cache_fields(q):
+            total += one_round(augmented_forward(q))
+        elif needs_state and i < len(chain) - 1:
+            total += one_round(q)
+        total += one_round(adjoint(q))
+    return total
+
+
+def gradient_wire_drift_report(
+    program,
+    grad_step_fn,
+    x,
+    *,
+    local_depth: int,
+    rows: int,
+    cols: int,
+    mesh_shape: tuple[int, int],
+    tolerance: float | None = None,
+    name: str = "halo.grad_wire",
+):
+    """Measured-vs-model drift check for a sharded BACKWARD pass: compiles
+    ``grad_step_fn`` (any pytree-in callable that returns the primal AND
+    the cotangents — returning only gradients lets XLA dead-code the
+    forward and undercounts) on ``x``, parses the per-chip
+    collective-permute bytes, and compares against
+    :func:`gradient_halo_exchange_bytes_per_shard`. Records through
+    ``repro.obs.drift.check_drift`` exactly like :func:`wire_drift_report`
+    (the standing "ratio=1.000" evidence, gradient edition)."""
+    from repro.obs import events
+    from repro.obs.drift import DEFAULT_TOLERANCE, check_drift
+
+    leaves = jax.tree_util.tree_leaves(x)
+    itemsize = leaves[0].dtype.itemsize
+    measured, _count = measured_collective_permute_bytes(grad_step_fn, x)
+    model = gradient_halo_exchange_bytes_per_shard(
+        program, local_depth, rows, cols,
+        mesh_shape=mesh_shape, itemsize=itemsize,
+    )
+    tol = DEFAULT_TOLERANCE if tolerance is None else tolerance
+    result = check_drift(name, measured, model, tol)
+    events.record("drift.report", name=name, program=program.name,
+                  measured=result.measured, model=result.model,
+                  ratio=result.ratio, ok=result.ok)
+    return result
+
+
 def make_sharded_hdiff(
     mesh,
     *,

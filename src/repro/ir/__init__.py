@@ -35,6 +35,14 @@ conditions, bit-identical to N independent applications), composing with
 the (R, C) mesh of the sharded backends — the forecast-serving layer's
 execution path (``repro.serve``).
 
+Autodiff is one more graph transform: ``adjoint(p)`` derives the cotangent
+program from the same DAG (transposed access offsets, reversed op chain,
+nonlinear combinators linearized around ``c~``-cached primal values —
+adjoint radii equal primal radii, field by field) and ``build_backend(...,
+differentiable=True)`` attaches it as a ``jax.custom_vjp`` through the SAME
+backend: the Pallas backward is its own fused kernel, the sharded backward
+reuses the ``exchange_radii()``-driven halo exchange (``repro.ir.autodiff``).
+
 This package is self-contained (no imports from other ``repro`` modules at
 import time), so ``repro.core`` and ``repro.kernels`` derive their specs and
 tile plans from it without cycles.
@@ -92,3 +100,14 @@ from repro.ir.lower_reference import lower_reference
 from repro.ir.lower_pallas import lower_pallas
 from repro.ir.lower_sharded import lower_sharded
 from repro.ir.lower_batched import BATCHED_BACKENDS, build_backend, lower_batched
+from repro.ir.autodiff import (
+    acc_field,
+    adjoint,
+    augmented_forward,
+    cache_field,
+    cache_fields,
+    differentiable_lowering,
+    make_vjp,
+    pad_widths,
+    seed_field,
+)

@@ -103,6 +103,16 @@ class StencilOp:
     structure. The :mod:`repro.ir.ops` builders always set it; it feeds
     :meth:`StencilProgram.fingerprint` so two programs differing only in a
     coefficient hash differently.
+
+    ``vjp`` is the op's adjoint rule (see :mod:`repro.ir.autodiff`): called
+    as ``vjp(op, gbar_field, fresh)`` it returns ``[(read_field, term)]``
+    where each ``term`` is a :class:`StencilOp` computing that read field's
+    cotangent contribution (or a bare field name contributing directly).
+    ``None`` falls back to the generic ``jax.vjp``-per-point rule, which is
+    always correct but reads every primal field of the op — the explicit
+    rules keep adjoint footprints tight (negated offsets only). Like
+    ``compute`` it is excluded from the fingerprint: the rule is derived
+    from the combinator the ``tag`` already names.
     """
 
     name: str
@@ -110,6 +120,9 @@ class StencilOp:
     compute: Callable[..., object]
     cost: OpCost
     tag: str | None = None
+    vjp: Callable[..., object] | None = dataclasses.field(
+        default=None, compare=False
+    )
 
     def fields(self) -> tuple[str, ...]:
         """Distinct fields read, in first-read order."""
@@ -495,6 +508,7 @@ class StencilProgram:
                 compute=op.compute,
                 cost=op.cost,
                 tag=op.tag,
+                vjp=op.vjp,
             )
             for op in other.ops
         )

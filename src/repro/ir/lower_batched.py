@@ -55,24 +55,35 @@ def build_backend(
     vmem_budget: int | None = None,
     overlap: bool = False,
     merge_exchange: bool = True,
+    differentiable: bool = False,
 ) -> Callable:
     """One UNBATCHED lowered callable for a conformance-style backend name
     — the single dispatch point ``lower_batched`` and the serving compile
     cache share (so a cache miss and a test cell build identical
-    callables)."""
+    callables).
+
+    With ``differentiable=True`` the callable carries a derived
+    ``jax.custom_vjp`` whose backward runs the program's ADJOINT IR
+    (:mod:`repro.ir.autodiff`) through the same backend: the pallas
+    backward is its own fused kernel, the sharded backward reuses the
+    ``exchange_radii()``-driven halo exchange. The one asymmetry is
+    ``staged``: its per-op-jitted forward pairs with a fused reference
+    backward (per-op dispatch of an adjoint DAG would be all overhead and
+    the gradient contract — match ``jax.grad`` of the reference — is
+    backend-independent anyway)."""
     if backend == "reference":
-        return lower_reference(program)
-    if backend == "staged":
-        return lower_reference(program, mode="staged")
-    if backend == "pallas":
-        return lower_pallas(program, interpret=interpret, vmem_budget=vmem_budget)
-    if backend in ("sharded-reference", "sharded-pallas"):
+        fwd = lower_reference(program)
+    elif backend == "staged":
+        fwd = lower_reference(program, mode="staged")
+    elif backend == "pallas":
+        fwd = lower_pallas(program, interpret=interpret, vmem_budget=vmem_budget)
+    elif backend in ("sharded-reference", "sharded-pallas"):
         if mesh_shape is None:
             raise ValueError(
                 f"backend {backend!r} needs mesh_shape=(R, C) — the rows x "
                 "cols device-mesh factorization the shards map onto"
             )
-        return lower_sharded(
+        fwd = lower_sharded(
             program,
             mesh_shape=mesh_shape,
             inner=backend.removeprefix("sharded-"),
@@ -81,7 +92,52 @@ def build_backend(
             vmem_budget=vmem_budget,
             merge_exchange=merge_exchange,
         )
-    raise ValueError(f"unknown backend {backend!r} (want one of {BATCHED_BACKENDS})")
+    else:
+        raise ValueError(
+            f"unknown backend {backend!r} (want one of {BATCHED_BACKENDS})"
+        )
+    if not differentiable:
+        return fwd
+    from repro.ir.autodiff import differentiable_lowering
+
+    if backend in ("sharded-reference", "sharded-pallas"):
+        # The adjoint/augmented sweeps lower with boundary="zero": every
+        # owned point computed from the exchanged block, no pad/crop on
+        # sharded dims (GSPMD would implement those with its own
+        # collective-permutes and break the measured-exact wire model).
+        # Forward state-recompute sweeps keep the ring lowering.
+        def build_ring(p):
+            return build_backend(
+                p, backend, mesh_shape=mesh_shape, interpret=interpret,
+                vmem_budget=vmem_budget, overlap=overlap,
+                merge_exchange=merge_exchange,
+            )
+
+        def build_zero(p):
+            return lower_sharded(
+                p,
+                mesh_shape=mesh_shape,
+                inner=backend.removeprefix("sharded-"),
+                interpret=interpret,
+                vmem_budget=vmem_budget,
+                merge_exchange=merge_exchange,
+                boundary="zero",
+            )
+
+        return differentiable_lowering(
+            program, fwd, build_ring, build_zero=build_zero
+        )
+    bwd_backend = "reference" if backend == "staged" else backend
+    return differentiable_lowering(
+        program,
+        fwd,
+        lambda p: build_backend(
+            p,
+            bwd_backend,
+            interpret=interpret,
+            vmem_budget=vmem_budget,
+        ),
+    )
 
 
 def lower_batched(

@@ -97,6 +97,7 @@ def lower_sharded(
     interpret: bool | None = None,
     vmem_budget: int | None = None,
     merge_exchange: bool = True,
+    boundary: str = "ring",
 ) -> Callable[[Array], Array]:
     """Builds a jitted ``x (D, R, C) -> x'`` matching the single-device
     program application (all ``program.steps`` sweeps of it) while
@@ -135,6 +136,18 @@ def lower_sharded(
         identical wire bytes, N-fold fewer permute messages for an N-field
         coupled system. Results are bit-identical either way (the stacked
         bands hold exactly the per-field bands).
+      boundary: "ring" (default) applies the program's absolute-index
+        global boundary ring — the forward semantics every lowering
+        matches. "zero" instead computes EVERY owned point with ZERO
+        extension beyond the global grid: the zero bands ``ppermute``
+        already delivers at uncovered grid edges ARE the extension, so the
+        mode costs exactly the same exchange round and no extra
+        collectives. This is the evaluation the derived adjoint sweeps
+        need (``repro.ir.autodiff``): cotangents exist at ring points too,
+        and padding the sharded global grid instead would migrate shard
+        boundaries — GSPMD inserts its own collective-permutes for that,
+        polluting the measured-exact wire model. Single-sweep programs
+        only.
     """
     from repro.dist.halo import (
         exchange_halos_2d,
@@ -147,6 +160,14 @@ def lower_sharded(
         raise ValueError("sharded lowering needs a 2-D program")
     if inner not in ("pallas", "reference"):
         raise ValueError(f"unknown inner backend {inner!r}")
+    if boundary not in ("ring", "zero"):
+        raise ValueError(f"unknown boundary mode {boundary!r}")
+    if boundary == "zero" and program.steps != 1:
+        raise ValueError(
+            "boundary='zero' evaluates one merged DAG with zero extension; "
+            "chains thread per-sweep rings — lower each chain entry "
+            "separately (repro.ir.autodiff does)"
+        )
 
     if mesh_shape is not None:
         if mesh is not None:
@@ -396,12 +417,40 @@ def lower_sharded(
         env = dict(zip(fields, blocks))
         states = {f: env[f] for f in out_fields}
         aux = {f: env[f] for f in aux_fields}
-        if (n_row == 1 and n_col == 1) or halo == 0:
+        if halo == 0 or (boundary == "ring" and n_row == 1 and n_col == 1):
             # Full grid present locally (or no spatial coupling at all): the
             # single-device lowering's boundary handling is already correct.
+            # (Zero mode with halo > 0 still needs its zero extension, which
+            # the general path's single-shard zero pads provide for free.)
             return _ret(_as_dict(apply_full(_full_input(states, aux))))
         block = states[state_f]
         r_loc, c_loc = block.shape[-2], block.shape[-1]
+
+        if boundary == "zero":
+            # Every owned point computed from the exchanged block; the zero
+            # bands at uncovered grid edges (ppermute fill / single-shard
+            # pads) are the wanted extension, so the single-device kernel's
+            # OWN ring — evaluated on garbage halo-edge data — lands
+            # entirely in the sliced-off frame. Columns get a local zero pad
+            # when unsharded (free: no collective), keeping the kept region
+            # at [halo:halo+r_loc, halo:halo+c_loc] either way.
+            exchanged = _exchange_all(env)
+            zs = {f: exchanged[f] for f in out_fields}
+            za = {
+                f: _pad_to_halo(exchanged.get(f, aux[f]), fhalos[f])
+                for f in aux_fields
+            }
+            if n_col == 1:
+                cp = [(0, 0)] * (block.ndim - 1) + [(halo, halo)]
+                zs = {f: jnp.pad(a, cp) for f, a in zs.items()}
+                za = {f: jnp.pad(a, cp) for f, a in za.items()}
+            vals = _as_dict(apply_full(_full_input(zs, za)))
+            return _ret({
+                f: vals[f][..., halo : halo + r_loc, halo : halo + c_loc]
+                .astype(states[f].dtype)
+                for f in out_fields
+            })
+
         off_r, off_c, r_glob, c_glob = _offsets(block)
 
         # overlap needs a non-empty interior after shaving the halo bands.

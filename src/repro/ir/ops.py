@@ -46,6 +46,30 @@ def _tree_sum(vals):
     return vals[0]
 
 
+def _neg(o: Offset) -> Offset:
+    return tuple(-c for c in o)
+
+
+def _sub(a: Offset, b: Offset) -> Offset:
+    return tuple(x - y for x, y in zip(a, b))
+
+
+# ---------------------------------------------------------------------------
+# Adjoint (vjp) rules.
+#
+# Each combinator attaches a rule ``rule(op, gbar, fresh) -> [(field, term)]``
+# to its StencilOp (see repro.ir.autodiff): ``op`` is the op INSTANCE at
+# derivation time (field names are taken from ``op.reads``, never from the
+# builder closure — compose() renames fields), ``gbar`` is the field holding
+# the op's output cotangent, and ``fresh`` mints unique op names. Each
+# ``term`` is a StencilOp whose value at a point is that read field's
+# cotangent contribution there, or a bare field name contributing directly
+# (identity). The transposition convention: a read of field f at offset o
+# contributes to f's cotangent at offset -o — "adjoint offsets are the
+# negated primal offsets".
+# ---------------------------------------------------------------------------
+
+
 def affine(name: str, field: str, taps: Mapping[Offset, float]) -> StencilOp:
     """Weighted stencil sum: ``out = sum_k w_k * field[offset_k]``.
 
@@ -69,9 +93,23 @@ def affine(name: str, field: str, taps: Mapping[Offset, float]) -> StencilOp:
             acc = acc + w * v
         return acc
 
+    def rule(op, gbar, fresh):
+        # Linear: the adjoint is the same affine stencil with every tap
+        # offset negated (weights unchanged). A pure identity tap passes the
+        # cotangent field straight through — no op at all.
+        src = op.reads[0].field
+        adj_taps = {_neg(r.offset): w for r, w in zip(op.reads, weights)}
+        if adj_taps == {_neg(op.reads[0].offset): 1.0} and not any(
+            c for c in op.reads[0].offset
+        ):
+            return [(src, gbar)]
+        return [(src, affine(fresh(f"{op.name}.d_{src}"), gbar, adj_taps))]
+
     reads = tuple(Read(field, o) for o in offsets)
     tag = "affine:" + ",".join(f"{o}={w!r}" for o, w in zip(offsets, weights))
-    return StencilOp(name, reads, compute, OpCost(macs=len(offsets)), tag=tag)
+    return StencilOp(
+        name, reads, compute, OpCost(macs=len(offsets)), tag=tag, vjp=rule
+    )
 
 
 def flux(
@@ -99,9 +137,61 @@ def flux(
         g = grad[0] - grad[1]
         return jnp.where(d * g <= 0, d, jnp.zeros_like(d))
 
+    def rule(op, gbar, fresh):
+        src = op.reads[0].field  # the differenced field (post-compose name)
+        if hi == lo:  # degenerate: d == 0 identically, derivative cancels
+            return []
+        if len(op.reads) == 2:
+            # Unlimited: linear difference -> transposed affine on gbar.
+            return [
+                (src, affine(fresh(f"{op.name}.d_{src}"),
+                             gbar, {_neg(hi): 1.0, _neg(lo): -1.0}))
+            ]
+        # Limited: the where-condition carries no gradient (matching jax.vjp
+        # of jnp.where), so the limiter field gets NO contribution and the
+        # cotangent of the difference is gbar gated by the mask re-evaluated
+        # around the saved primal. Evaluating that gate ONCE at the flux
+        # position (a helper op with no target field) and distributing it
+        # with a transposed affine keeps the adjoint's access bandwidth
+        # identical to the primal's — per-consumer terms would compose the
+        # hi/lo reads with the recompute chain and widen every footprint.
+        lim = op.reads[2].field
+        zero = tuple(0 for _ in hi)
+        gate_reads = (
+            Read(gbar, zero),
+            Read(src, hi), Read(src, lo),
+            Read(lim, hi), Read(lim, lo),
+        )
+
+        def gate(g, a_hi, a_lo, l_hi, l_lo):
+            d = a_hi - a_lo
+            gg = l_hi - l_lo
+            return jnp.where(d * gg <= 0, g, jnp.zeros_like(g))
+
+        def gate_rule(gop, gbar2, fresh2):
+            # The gate is its own linearization: linear in the cotangent
+            # slot, zero-derivative in the mask operands (jnp.where
+            # semantics) — so the double adjoint re-gates with the same
+            # mask and stays at the primal bandwidth.
+            reads2 = (Read(gbar2, gop.reads[0].offset),) + gop.reads[1:]
+            return [(gop.reads[0].field, StencilOp(
+                fresh2(f"{gop.name}.d"), reads2, gate, gop.cost,
+                tag=gop.tag, vjp=gate_rule,
+            ))]
+
+        gate_op = StencilOp(
+            fresh(f"{op.name}.dgate"), gate_reads, gate,
+            OpCost(other_ops=4), tag=f"adj:{op.tag}:gate", vjp=gate_rule,
+        )
+        return [
+            (None, gate_op),
+            (src, affine(fresh(f"{op.name}.d_{src}"),
+                         gate_op.name, {_neg(hi): 1.0, _neg(lo): -1.0})),
+        ]
+
     cost = OpCost(other_ops=1 + (3 if limiter is not None else 0))
     tag = f"flux:lo={lo},hi={hi},limited={limiter is not None}"
-    return StencilOp(name, tuple(reads), compute, cost, tag=tag)
+    return StencilOp(name, tuple(reads), compute, cost, tag=tag, vjp=rule)
 
 
 def product(
@@ -128,7 +218,25 @@ def product(
     def compute(va, vb):
         return va * vb
 
-    return StencilOp(name, reads, compute, OpCost(macs=1), tag="product")
+    def rule(op, gbar, fresh):
+        # Bilinear: each factor's cotangent is the OTHER factor (saved
+        # primal) times the output cotangent, both re-aligned to the
+        # factor's own grid position.
+        (ra, rb) = op.reads
+        out = []
+        for mine, other, label in ((ra, rb, "a"), (rb, ra, "b")):
+            reads_t = (
+                Read(gbar, _neg(mine.offset)),
+                Read(other.field, _sub(other.offset, mine.offset)),
+            )
+            out.append((mine.field, StencilOp(
+                fresh(f"{op.name}.d_{mine.field}.{label}"), reads_t,
+                lambda g, v: g * v, OpCost(macs=1),
+                tag=f"adj:product:{label}",
+            )))
+        return out
+
+    return StencilOp(name, reads, compute, OpCost(macs=1), tag="product", vjp=rule)
 
 
 def weighted_residual(
@@ -155,13 +263,44 @@ def weighted_residual(
         signed = [t if s > 0 else -t for t, (_, s) in zip(ts, terms)]
         return b - w * _tree_sum(signed)
 
+    signs = tuple(s for _, s in terms)
+
+    def rule(op, gbar, fresh):
+        # out = b - w * S with S = tree_sum(sign_i * t_i), all at offset 0:
+        # b_bar += g; w_bar += -S * g (S recomputed from the saved primal
+        # terms); t_i_bar += -sign_i * w * g.
+        base_f, w_f = op.reads[0].field, op.reads[1].field
+        t_fields = tuple(r.field for r in op.reads[2:])
+        zero_o = op.reads[0].offset
+        out = [(base_f, gbar)]
+
+        def w_term(g, *ts):
+            signed = [t if s > 0 else -t for t, s in zip(ts, signs)]
+            return -g * _tree_sum(signed)
+
+        out.append((w_f, StencilOp(
+            fresh(f"{op.name}.d_{w_f}"),
+            (Read(gbar, zero_o),) + tuple(Read(f, zero_o) for f in t_fields),
+            w_term, OpCost(macs=1, other_ops=len(signs)),
+            tag=f"adj:{op.tag}:w",
+        )))
+        for i, (tf, s) in enumerate(zip(t_fields, signs)):
+            out.append((tf, StencilOp(
+                fresh(f"{op.name}.d_{tf}"),
+                (Read(gbar, zero_o), Read(w_f, zero_o)),
+                (lambda g, w: -(w * g)) if s > 0 else (lambda g, w: w * g),
+                OpCost(macs=1), tag=f"adj:{op.tag}:t{i}",
+            )))
+        return out
+
     zero = (0,) * ndim
     reads = (Read(base, zero), Read(weight, zero)) + tuple(
         Read(f, zero) for f, _ in terms
     )
     tag = "weighted_residual:signs=" + ",".join(str(s) for _, s in terms)
     return StencilOp(
-        name, reads, compute, OpCost(macs=1, other_ops=len(terms)), tag=tag
+        name, reads, compute, OpCost(macs=1, other_ops=len(terms)), tag=tag,
+        vjp=rule,
     )
 
 
@@ -188,6 +327,21 @@ def scaled_residual(
         signed = [t if s > 0 else -t for t, (_, s) in zip(ts, terms)]
         return b - scale * _tree_sum(signed)
 
+    signs = tuple(s for _, s in terms)
+
+    def rule(op, gbar, fresh):
+        # out = b - scale * sum(sign_i * t_i): b_bar += g and
+        # t_i_bar += (-scale * sign_i) * g, all at offset 0.
+        base_f = op.reads[0].field
+        zero_o = op.reads[0].offset
+        out = [(base_f, gbar)]
+        for i, (r, s) in enumerate(zip(op.reads[1:], signs)):
+            out.append((r.field, affine(
+                fresh(f"{op.name}.d_{r.field}"),
+                gbar, {zero_o: -float(scale) * s},
+            )))
+        return out
+
     zero = (0,) * ndim
     reads = (Read(base, zero),) + tuple(Read(f, zero) for f, _ in terms)
     tag = (
@@ -195,5 +349,6 @@ def scaled_residual(
         + ",".join(str(s) for _, s in terms)
     )
     return StencilOp(
-        name, reads, compute, OpCost(macs=1, other_ops=len(terms)), tag=tag
+        name, reads, compute, OpCost(macs=1, other_ops=len(terms)), tag=tag,
+        vjp=rule,
     )

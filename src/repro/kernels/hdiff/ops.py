@@ -12,8 +12,6 @@ import functools
 import jax
 
 from repro.core.hdiff import HALO
-from repro.core.hdiff import hdiff as _hdiff_ref
-from repro.core.hdiff import hdiff_simple as _hdiff_simple_ref
 from repro.ir.plan import pick_block_rows
 from repro.kernels.hdiff.kernel import hdiff_fixed_pallas, hdiff_pallas
 
@@ -82,9 +80,21 @@ def hdiff_fixed(
 #
 # The Pallas kernel has no hand-written backward pass (and `pl.program_id`
 # cannot be traced under JVP in interpret mode), so the differentiable entry
-# point pairs the kernel FORWARD with a reference-function BACKWARD via
-# custom_vjp — the standard pattern when only the fwd kernel exists. The
-# recompute in bwd costs one extra hdiff sweep, the same tradeoff as remat.
+# point pairs the kernel FORWARD with the DERIVED-ADJOINT backward of the IR
+# twin (`hdiff_coupled_program`) via custom_vjp: one `repro.ir.autodiff`
+# reverse sweep, the same math every `build_backend(...,
+# differentiable=True)` lowering runs — no duplicated vjp code here. The
+# adjoint's linearization recompute costs one extra hdiff sweep, the same
+# tradeoff as remat.
+
+
+@functools.lru_cache(maxsize=None)
+def _coupled_vjp(limit: bool):
+    from repro.ir.autodiff import make_vjp
+    from repro.ir.lower_reference import lower_reference
+    from repro.ir.programs import hdiff_coupled_program
+
+    return make_vjp(hdiff_coupled_program(limit=limit), lower_reference)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
@@ -98,9 +108,15 @@ def _hdiff_ad_fwd(psi, coeff, limit):
 
 def _hdiff_ad_bwd(limit, res, g):
     psi, coeff = res
-    ref = _hdiff_ref if limit else _hdiff_simple_ref
-    _, vjp = jax.vjp(lambda p, c: ref(p, c), psi, coeff)
-    return vjp(g)
+    # The IR twin takes a coefficient FIELD; a scalar coeff broadcasts in
+    # and its cotangent pulls back through the same broadcast.
+    def bcast(c):
+        return jax.numpy.broadcast_to(jax.numpy.asarray(c, psi.dtype), psi.shape)
+
+    cot = _coupled_vjp(limit)({"u": psi, "coeff": bcast(coeff)}, g)
+    _, pull = jax.vjp(bcast, coeff)
+    (gcoeff,) = pull(cot["coeff"])
+    return cot["u"], gcoeff
 
 
 hdiff_fused_ad.defvjp(_hdiff_ad_fwd, _hdiff_ad_bwd)

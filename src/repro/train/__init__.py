@@ -8,3 +8,11 @@ from repro.train.loop import (
     train,
 )
 from repro.train.loop import shape_for_microbatches
+from repro.train.assimilate import (
+    AssimilationConfig,
+    FitResult,
+    fit_coefficient_field,
+    forward_model,
+    synthetic_observations,
+    true_coefficients,
+)

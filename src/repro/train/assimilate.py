@@ -1,0 +1,139 @@
+"""Variational data assimilation on the IR: fit a coefficient field.
+
+The first end-to-end consumer of the derived adjoints
+(:mod:`repro.ir.autodiff`): recover ``hdiff_coupled_program``'s
+spatially-varying diffusion coefficient from observations of the diffused
+state. The forward model is any ``build_backend(..., differentiable=True)``
+lowering — reference for CI, Pallas or the sharded mesh for scale — so the
+fit exercises exactly the gradient path the conformance matrix certifies,
+and the optimizer is the shipped :mod:`repro.optim` stack (no separate
+"training" codepath: the same AdamW/Adafactor, global-norm clip and
+:class:`~repro.train.loop.SpikeDetector` the LLM loop uses).
+
+The 3D-Var-style setup: observations ``y = M(u0, c*)`` of a known prior
+state ``u0`` under the true coefficients ``c*``, minimise ``J(c) = mean((M(
+u0, c) - y)^2)`` from a flat first guess. The coefficient only enters at
+interior points (the boundary ring passes through), so ring gradients are
+exactly zero and the ring keeps its first-guess values — the interior
+converges, which is what the >=10x loss-drop acceptance asserts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.ir.graph import repeat
+from repro.ir.lower_batched import build_backend
+from repro.ir.programs import hdiff_coupled_program, smagorinsky_coeff
+from repro.optim import OptimizerConfig, clip_by_global_norm, make_optimizer
+from repro.train.loop import SpikeDetector
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AssimilationConfig:
+    """One coefficient-field fit.
+
+    ``backend`` / ``mesh_shape`` / ``interpret`` choose the differentiable
+    lowering of the forward model (any conformance backend name);
+    ``k`` temporally blocks it (``repeat(p, k)`` — the observation operator
+    then spans k sweeps and the adjoint reverses all of them)."""
+
+    steps: int = 80
+    learning_rate: float = 3e-3
+    optimizer: str = "adamw"
+    grad_clip: float = 1.0
+    backend: str = "reference"
+    mesh_shape: tuple[int, int] | None = None
+    interpret: bool | None = None
+    k: int = 1
+    limit: bool = True
+
+
+@dataclasses.dataclass
+class FitResult:
+    coeff: Array
+    losses: list[float]
+    spikes: list[tuple[int, float]]
+
+    @property
+    def loss_ratio(self) -> float:
+        """First-to-best loss improvement factor (the acceptance metric)."""
+        return self.losses[0] / min(self.losses)
+
+
+def forward_model(cfg: AssimilationConfig) -> Callable:
+    """The differentiable observation operator ``{u, coeff} -> u_k``."""
+    p = hdiff_coupled_program(limit=cfg.limit)
+    if cfg.k > 1:
+        p = repeat(p, cfg.k)
+    return build_backend(
+        p,
+        cfg.backend,
+        mesh_shape=cfg.mesh_shape,
+        interpret=cfg.interpret,
+        differentiable=True,
+    )
+
+
+def synthetic_observations(
+    u0: Array, coeff_true: Array, cfg: AssimilationConfig
+) -> Array:
+    """Noise-free observations of the true-coefficient forward model."""
+    return forward_model(cfg)({"u": u0, "coeff": coeff_true})
+
+
+def true_coefficients(shape: Sequence[int], seed: int = 0) -> Array:
+    """The Smagorinsky-style target field every test/benchmark fits
+    (:func:`repro.ir.programs.smagorinsky_coeff` over unit noise)."""
+    noise = jax.random.normal(jax.random.PRNGKey(seed), tuple(shape))
+    return jnp.asarray(smagorinsky_coeff(noise))
+
+
+def fit_coefficient_field(
+    u0: Array,
+    observations: Array,
+    cfg: AssimilationConfig = AssimilationConfig(),
+    coeff_init: Array | None = None,
+) -> FitResult:
+    """Minimise the observation misfit over the coefficient field.
+
+    Plain full-batch gradient descent with the shipped optimizer stack:
+    ``jax.value_and_grad`` through the differentiable lowering (the derived
+    adjoint sweeps), global-norm clip, AdamW/Adafactor update, every loss
+    through a :class:`~repro.train.loop.SpikeDetector` so a diverging fit
+    lands in the flight recorder like any training run."""
+    fwd = forward_model(cfg)
+    if coeff_init is None:
+        coeff_init = jnp.full(u0.shape, 0.025, u0.dtype)
+
+    def loss_fn(coeff):
+        out = fwd({"u": u0, "coeff": coeff})
+        return jnp.mean(jnp.square(out - observations))
+
+    loss_and_grad = jax.jit(jax.value_and_grad(loss_fn))
+    opt_cfg = OptimizerConfig(
+        name=cfg.optimizer,
+        learning_rate=cfg.learning_rate,
+        weight_decay=0.0,  # shrinking coefficients toward 0 is not a prior
+        grad_clip=cfg.grad_clip,
+        warmup_steps=0,
+        total_steps=cfg.steps,
+    )
+    init_fn, update_fn = make_optimizer(opt_cfg)
+    coeff = coeff_init
+    state = init_fn(coeff)
+    detector = SpikeDetector()
+    losses: list[float] = []
+    for step in range(cfg.steps):
+        loss, grad = loss_and_grad(coeff)
+        losses.append(float(loss))
+        detector.record(step, float(loss))
+        grad, _gnorm = clip_by_global_norm(grad, cfg.grad_clip)
+        coeff, state = update_fn(grad, state, coeff)
+    return FitResult(coeff=coeff, losses=losses, spikes=detector.spikes)

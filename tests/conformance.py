@@ -290,3 +290,107 @@ def assert_case(name: str, backend: str, k: int, mesh_shape, *, overlap=False):
         + ("/overlap" if overlap else ""),
     )
     return got
+
+
+# -- gradient-conformance cells -----------------------------------------------
+# The autodiff matrix: jax.grad of every differentiable lowering
+# (``build_backend(..., differentiable=True)`` — the derived adjoint
+# custom_vjp) must match jax.grad of ``lower_reference`` on a fixed
+# random-weighted scalar loss, cell for cell over the SAME programs, ks and
+# meshes as the forward matrix. The tolerance is RELATIVE: float32 gradient
+# magnitudes grow with k (laplacian k=3 reaches ~60 absolute), so a flat
+# atol would miss the ~1e-7 relative agreement the adjoints actually hold.
+GRAD_TOL = 1e-5
+
+
+def make_loss_weights(name: str, k: int):
+    """Fixed random weights of the scalar conformance loss
+    ``sum(w * y)`` (per output field for coupled systems) — shared by every
+    backend cell so the oracle gradient is computed once."""
+    ref = oracle(name, k)
+    rng = np.random.default_rng(SEED + 7)
+    if isinstance(ref, dict):
+        return {
+            f: jnp.asarray(rng.standard_normal(a.shape).astype(a.dtype))
+            for f, a in ref.items()
+        }
+    return jnp.asarray(rng.standard_normal(ref.shape).astype(ref.dtype))
+
+
+def grad_loss(fn, w):
+    """The cell's scalar loss: fixed-weight contraction of the lowering."""
+    import jax.numpy as _jnp
+
+    def loss(x):
+        y = fn(x)
+        if isinstance(y, dict):
+            return sum(_jnp.vdot(w[f], y[f]) for f in y)
+        return _jnp.vdot(w, y)
+
+    return loss
+
+
+def build_grad(program, backend: str, mesh_shape: tuple[int, int]):
+    """The differentiable lowered callable for one gradient cell."""
+    from repro.ir import build_backend
+
+    return build_backend(
+        program,
+        backend,
+        mesh_shape=mesh_shape if backend in SHARDED_BACKENDS else None,
+        interpret=True if backend == "pallas" else None,
+        differentiable=True,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def grad_oracle(name: str, k: int):
+    """jax.grad of the reference lowering on the shared loss weights."""
+    import jax
+
+    prog = repeat(PROGRAMS[name](), k)
+    w = make_loss_weights(name, k)
+    g = jax.grad(grad_loss(lower_reference(prog), w))(make_fields(name))
+    return to_host(g)
+
+
+def run_grad_case(name: str, backend: str, k: int, mesh_shape):
+    """(got, want) gradients for one cell, numpy on both sides."""
+    import jax
+
+    prog = repeat(PROGRAMS[name](), k)
+    w = make_loss_weights(name, k)
+    fn = build_grad(prog, backend, mesh_shape)
+    got = jax.grad(grad_loss(fn, w))(make_fields(name))
+    return to_host(got), grad_oracle(name, k)
+
+
+def _assert_rel(got, want, err_msg: str):
+    got, want = np.asarray(got), np.asarray(want)
+    denom = max(float(np.abs(want).max()), 1e-30)
+    err = float(np.abs(got - want).max()) / denom
+    assert err <= GRAD_TOL, (
+        f"{err_msg}: max relative gradient error {err:.3e} > {GRAD_TOL}"
+    )
+
+
+def assert_grad_close(got, want, err_msg: str = ""):
+    """Relative-tolerance gradient compare, per input field for
+    multi-field programs."""
+    if isinstance(want, dict):
+        assert set(got) == set(want), (
+            f"{err_msg}: cotangent fields {sorted(got)} != {sorted(want)}"
+        )
+        for f in want:
+            _assert_rel(got[f], want[f], f"{err_msg}[{f}]")
+        return
+    _assert_rel(got, want, err_msg)
+
+
+def assert_grad_case(name: str, backend: str, k: int, mesh_shape):
+    got, want = run_grad_case(name, backend, k, mesh_shape)
+    assert_grad_close(
+        got, want,
+        err_msg=f"grad/{name}/{backend}/k={k}/mesh={mesh_id(mesh_shape)}",
+    )
+    return got

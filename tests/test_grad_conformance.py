@@ -1,0 +1,58 @@
+"""Gradient conformance on multi-device meshes (the autodiff CI lane).
+
+Each cell is jax.grad through a ``build_backend(..., differentiable=True)``
+sharded lowering — the derived adjoint of :mod:`repro.ir.autodiff` running
+its backward through ``lower_sharded(..., boundary="zero")`` and the real
+``ppermute`` halo exchange — checked against jax.grad of ``lower_reference``
+plus the EXACT backward wire model
+(:func:`repro.dist.halo.gradient_halo_exchange_bytes_per_shard`).
+
+Same subprocess idiom as test_conformance_matrix.py: one forked interpreter
+per mesh with ``XLA_FLAGS=--xla_force_host_platform_device_count`` (fake
+devices must be set before jax imports). The body lives in
+``tests/multidev/_grad_check.py``; DEVICES_UNAVAILABLE becomes a pytest
+skip that ``scripts/check_no_dep_skips.py --fail-on-mesh-skips`` converts
+to a hard CI failure. The single-device cells of the same grad matrix run
+in tier-1 (test_ir_autodiff.py).
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from conformance import MESHES, mesh_id
+
+REPO = Path(__file__).resolve().parent.parent
+
+MULTIDEV_MESHES = [m for m in MESHES if m != (1, 1)]
+
+
+@pytest.mark.multidev
+@pytest.mark.parametrize(
+    "mesh", [pytest.param(m, id=mesh_id(m)) for m in MULTIDEV_MESHES]
+)
+def test_grad_conformance_mesh(mesh):
+    n_dev = mesh[0] * mesh[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [
+            sys.executable,
+            str(REPO / "tests" / "multidev" / "_grad_check.py"),
+            "--mesh",
+            mesh_id(mesh),
+        ],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=1200,
+    )
+    if "DEVICES_UNAVAILABLE" in proc.stdout:
+        pytest.skip(f"mesh {mesh_id(mesh)} unavailable: {proc.stdout.strip()}")
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL_OK" in proc.stdout

@@ -1,0 +1,73 @@
+"""Property-based tests (hypothesis) for the derived adjoints.
+
+Invariants (the structural half of repro.ir.autodiff's contract; the
+numeric half is the gradient-conformance matrix):
+  * the adjoint of a random affine program reads the output seed at
+    EXACTLY the negated composed primal offsets — transposition, nothing
+    wider (no square-dilation slop);
+  * ``adjoint(adjoint(p))`` round-trips: the primal's radius and composed
+    input footprint come back exactly (double transposition is identity
+    on the access structure);
+  * adjoint radii equal primal radii per chain entry under ``repeat(p, k)``
+    for the WHOLE conformance roster — the invariant that lets the
+    backward halo exchange reuse the primal wire plan byte-for-byte.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from conformance import PROGRAMS  # noqa: E402
+from repro.ir import adjoint, augmented_forward, repeat, seed_field  # noqa: E402
+from repro.ir.graph import StencilProgram  # noqa: E402
+from repro.ir.ops import affine  # noqa: E402
+
+# Deliberately asymmetric offset pool: symmetric (star) taps would make
+# "negated" indistinguishable from "copied".
+offsets = st.tuples(st.integers(-2, 2), st.integers(-2, 2))
+taps_sets = st.dictionaries(
+    offsets, st.floats(0.5, 2.0), min_size=1, max_size=6
+).filter(lambda d: (0, 0) in d or len(d) > 1)
+
+
+def _affine_chain(taps_list):
+    ops, src = [], "x"
+    for i, taps in enumerate(taps_list):
+        ops.append(affine(f"s{i}", src, taps))
+        src = f"s{i}"
+    return StencilProgram("p", ["x"], ops)
+
+
+def _neg(fp):
+    return frozenset(tuple(-c for c in o) for o in fp)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(taps_sets, min_size=1, max_size=3))
+def test_adjoint_offsets_are_negated(taps_list):
+    p = _affine_chain(taps_list)
+    adj = adjoint(p)
+    want = _neg(p.footprints()["x"])
+    assert adj.footprints()[seed_field("x")] == want
+    assert adj.radius == p.radius
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(taps_sets, min_size=1, max_size=3))
+def test_double_adjoint_roundtrips(taps_list):
+    p = _affine_chain(taps_list)
+    aa = adjoint(adjoint(p))
+    assert aa.radius == p.radius
+    seed2 = seed_field(seed_field("x"))
+    assert aa.footprints()[seed2] == p.footprints()["x"]
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.sampled_from(sorted(PROGRAMS)), st.integers(1, 4))
+def test_adjoint_radii_match_primal_under_repeat(name, k):
+    p = repeat(PROGRAMS[name](), k)
+    assert p.radius == PROGRAMS[name]().radius * k
+    for q in p.chain:
+        assert adjoint(q).radius == q.radius
+        assert augmented_forward(q).radius == q.radius
